@@ -1,0 +1,203 @@
+"""Loop-aware analysis of optimized HLO text.
+
+``compiled.cost_analysis()`` counts a while-loop body ONCE regardless of
+trip count (verified empirically — see EXPERIMENTS.md §Roofline note), which
+under-counts scanned-layer models by ~L x.  This module re-derives per-device
+totals by walking the computation graph:
+
+  * computations are parsed from the HLO text;
+  * ``while`` ops multiply their body/condition totals by the trip count
+    recovered from the loop condition's comparison constant;
+  * ``fusion``/``call``/to_apply are followed at multiplicity 1;
+  * per-op costs: dot FLOPs from operand shapes + dimension numbers,
+    collective payload bytes from output shapes (with wire factors applied
+    by the roofline layer).
+
+This is deliberately a *structural* analyzer — it reads only shapes and
+dimension numbers, no execution.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f16": 2, "bf16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_KINDS = ("all-reduce", "all-gather", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+
+def _parse_shape(s: str) -> Tuple[Optional[str], List[int]]:
+    m = re.match(r"(\w+)\[([\d,]*)\]", s)
+    if not m:
+        return None, []
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return m.group(1), dims
+
+
+def _shape_bytes(s: str) -> int:
+    total = 0
+    for m in re.finditer(r"(\w+)\[([\d,]*)\]", s):
+        dt = m.group(1)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Totals:
+    flops: float = 0.0
+    collective_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVE_KINDS})
+    collective_counts: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVE_KINDS})
+
+    def add(self, other: "Totals", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        for k in COLLECTIVE_KINDS:
+            self.collective_bytes[k] += other.collective_bytes[k] * mult
+            self.collective_counts[k] += other.collective_counts[k] * mult
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    lines: List[str]
+    is_entry: bool = False
+
+
+def split_computations(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    current: Optional[Computation] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        m = re.match(r"(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{",
+                     stripped)
+        if m and not line.startswith(" " * 2):
+            current = Computation(name=m.group(2), lines=[],
+                                  is_entry=bool(m.group(1)))
+            comps[current.name] = current
+            continue
+        if stripped == "}":
+            current = None
+            continue
+        if current is not None:
+            current.lines.append(stripped)
+    return comps
+
+
+_DEF_RE = re.compile(r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\(?[\w\[\],\s\{\}]*?)\s+[\w\-]+\(")
+_DOT_RE = re.compile(
+    r"^(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*(\w+)\[([\d,]*)\]\S*\s+dot\(([^)]*)\)")
+
+
+def shape_table(comp: "Computation") -> Dict[str, str]:
+    """instruction name -> result type string (first pass per computation)."""
+    table: Dict[str, str] = {}
+    for line in comp.lines:
+        m = _DEF_RE.match(line)
+        if m:
+            table[m.group(1)] = m.group(2)
+    return table
+
+
+def dot_flops(line: str, table: Dict[str, str]) -> float:
+    """FLOPs of one dot op: 2 * prod(output dims) * contracted size.
+
+    Operand shapes come from the computation's symbol table (optimized CPU
+    HLO does not inline operand types)."""
+    m = _DOT_RE.match(line)
+    if not m:
+        return 0.0
+    out_elems = 1
+    for d in m.group(2).split(","):
+        if d:
+            out_elems *= int(d)
+    operands = [o.strip().lstrip("%") for o in m.group(3).split(",")]
+    lhs_dims: List[int] = []
+    if operands:
+        lhs_type = table.get(operands[0], "")
+        _, lhs_dims = _parse_shape(lhs_type.replace("(", ""))
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+    contracted = 1
+    if cm and lhs_dims:
+        for idx in cm.group(1).split(","):
+            if idx:
+                contracted *= lhs_dims[int(idx)]
+    return 2.0 * out_elems * contracted
+
+
+_CALL_RE = re.compile(
+    r"(?:calls=|to_apply=|body=|condition=)%?([\w\.\-]+)")
+_WHILE_RE = re.compile(
+    r"while\(.*?\), condition=%?([\w\.\-]+), body=%?([\w\.\-]+)")
+_COLL_RE = re.compile(
+    r"%?[\w\.\-]+ = (.*?)\s+(all-reduce|all-gather|reduce-scatter|"
+    r"all-to-all|collective-permute)(-start)?\(")
+
+
+def trip_count(cond: Computation) -> float:
+    """Loop bound from the condition's comparison constant (scan pattern:
+    compare(iter, constant(N), LT))."""
+    consts = []
+    for line in cond.lines:
+        for m in re.finditer(r"constant\((\d+)\)", line):
+            consts.append(int(m.group(1)))
+    return float(max(consts)) if consts else 1.0
+
+
+def analyze(hlo: str) -> Totals:
+    comps = split_computations(hlo)
+    memo: Dict[str, Totals] = {}
+
+    def walk(name: str, depth: int = 0) -> Totals:
+        if name in memo:
+            return memo[name]
+        comp = comps.get(name)
+        total = Totals()
+        if comp is None or depth > 40:
+            memo[name] = total
+            return total
+        memo[name] = total  # break cycles
+        table = shape_table(comp)
+        for line in comp.lines:
+            total.flops += dot_flops(line, table)
+            cm = _COLL_RE.match(line)
+            if cm and "-done" not in line.split("=", 1)[1][:48]:
+                kind = cm.group(2)
+                total.collective_bytes[kind] += _shape_bytes(cm.group(1))
+                total.collective_counts[kind] += 1
+            wm = _WHILE_RE.search(line)
+            if wm:
+                cond_name, body_name = wm.group(1), wm.group(2)
+                trips = trip_count(comps[cond_name]) \
+                    if cond_name in comps else 1.0
+                body_tot = walk(body_name, depth + 1)
+                total.add(body_tot, mult=max(trips, 1.0))
+                continue
+            # fusions / calls / reducers at multiplicity 1
+            for cname in _CALL_RE.findall(line):
+                if cname in comps and "while(" not in line:
+                    total.add(walk(cname, depth + 1))
+        return total
+
+    entry = next((c.name for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        return Totals()
+    memo.pop(entry, None)
+    return walk(entry)
+
+
+def analyze_compiled(compiled) -> Totals:
+    return analyze(compiled.as_text())

@@ -1,0 +1,228 @@
+"""One benchmark per paper table/figure (surrogate data — see DESIGN.md §6).
+
+  table2 — accuracy + parameters: FP-FC reference vs quantized Assemble vs
+           bit-exact folded model, per task.
+  table3 — pipelining strategies: LUTs/FFs/Fmax/latency for registers every
+           L-LUT layer vs every 3 layers (analytic hwcost model calibrated
+           on the paper's own measurements).
+  table4 — area-delay comparison: NeuraLUT-Assemble vs the implemented
+           prior-work baselines (LogicNets-style depth-0 units,
+           NeuraLUT-style single big L-LUT with in-LUT MLPs, PolyLUT-style
+           degree-2 units) at matched accuracy budgets.
+  fig5   — JSC ablation: tree options (1)(2)(3) x {complete, w/o learned
+           mappings, w/o tree-level skips}: area + accuracy (+seed spread).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from repro.configs import paper_tasks
+from repro.core import assemble, folding, hwcost, pruning
+from repro.core.assemble import AssembleConfig, LayerSpec
+from repro.data import synthetic
+from repro.train import lut_trainer
+
+STEPS = 220  # reduced budget (paper: 500-1000 epochs); config, not code
+
+
+def _tasks():
+    return {
+        "mnist": (paper_tasks.reduced("mnist"),
+                  synthetic.load("mnist", n_train=8192, n_test=2048), [128]),
+        "jsc": (paper_tasks.reduced("jsc"),
+                synthetic.load("jsc_openml", n_train=8192, n_test=2048),
+                [64, 32]),
+        "nid": (paper_tasks.reduced("nid"),
+                synthetic.load("nid", n_train=8192, n_test=2048), [49, 7]),
+    }
+
+
+def _train_with_learned_mappings(cfg, data, steps=STEPS, seed=0):
+    """The paper's full flow: dense+lasso pre-train -> structured pruning
+    -> sparse retrain (random mappings are the PRIOR-work behavior)."""
+    dense = lut_trainer.train(cfg, data, dense=True, lasso=1e-4,
+                              steps=max(60, steps // 3), seed=seed)
+    mappings = pruning.select_mappings(dense.params, cfg)
+    return lut_trainer.train(cfg, data, mappings=mappings, steps=steps,
+                             sgdr_t0=80, seed=seed)
+
+
+def table2() -> List[dict]:
+    rows = []
+    for name, (cfg, data, fc_widths) in _tasks().items():
+        fp_fc = lut_trainer.dense_mlp_reference(data, fc_widths, steps=250)
+        res = _train_with_learned_mappings(cfg, data)
+        acc = lut_trainer.accuracy(cfg, res.params, data)
+        acc_folded = lut_trainer.accuracy(cfg, res.params, data, folded=True)
+        rows.append({
+            "task": name, "fp_fc_acc": round(fp_fc, 4),
+            "ours_acc": round(acc, 4), "folded_acc": round(acc_folded, 4),
+            "fold_exact": bool(abs(acc - acc_folded) < 1e-9),
+            "w_l": [l.units for l in cfg.layers],
+            "F": [l.fan_in for l in cfg.layers],
+            "beta": [l.bits for l in cfg.layers],
+        })
+    return rows
+
+
+def table3() -> List[dict]:
+    rows = []
+    for name, cfg in [("mnist", paper_tasks.mnist()),
+                      ("jsc_cernbox", paper_tasks.jsc_cernbox()),
+                      ("jsc_openml", paper_tasks.jsc_openml()),
+                      ("nid", paper_tasks.nid())]:
+        for pe in (1, 3):
+            r = hwcost.report(cfg, pipeline_every=pe)
+            rows.append({
+                "task": name, "pipeline_every": pe, "luts": r.luts,
+                "ffs": r.ffs, "fmax_mhz": round(r.fmax_mhz),
+                "latency_ns": round(r.latency_ns, 2),
+                "area_delay": round(r.area_delay, 1),
+            })
+    return rows
+
+
+def _baseline_configs(task: str) -> Dict[str, AssembleConfig]:
+    """Prior-work-style models at comparable effective fan-in on the
+    reduced surrogate scale."""
+    if task == "nid":
+        # ours: trees of 6/3-input LUTs (effective fan-in 18)
+        ours = paper_tasks.reduced("nid")
+        # LogicNets-style: single L-LUTs, linear units, fan-in 6
+        logicnets = dataclasses.replace(
+            ours, subnet_depth=0, skip_step=0, tree_skips=False,
+            layers=(LayerSpec(24, 6, 2, False), LayerSpec(8, 3, 2, False),
+                    LayerSpec(4, 2, 2, False), LayerSpec(1, 4, 2, False)))
+        # NeuraLUT-style: in-LUT MLPs but NO assembly -> fan-in must come
+        # from one wide LUT (9 inputs -> 2^(9*2) entries, exponential cost)
+        neuralut = dataclasses.replace(
+            ours, tree_skips=False,
+            layers=(LayerSpec(12, 9, 2, False), LayerSpec(4, 3, 2, False),
+                    LayerSpec(1, 4, 2, False)))
+        # PolyLUT-style: degree-2 monomials, single L-LUTs
+        polylut = dataclasses.replace(
+            ours, subnet_depth=0, skip_step=0, poly_degree=2,
+            tree_skips=False,
+            layers=(LayerSpec(24, 6, 2, False), LayerSpec(8, 3, 2, False),
+                    LayerSpec(4, 2, 2, False), LayerSpec(1, 4, 2, False)))
+        return {"neuralut_assemble": ours, "logicnets": logicnets,
+                "neuralut": neuralut, "polylut": polylut}
+    raise ValueError(task)
+
+
+def table4() -> List[dict]:
+    data = synthetic.load("nid", n_train=8192, n_test=2048)
+    rows = []
+    for name, cfg in _baseline_configs("nid").items():
+        if name == "neuralut_assemble":
+            res = _train_with_learned_mappings(cfg, data)
+        else:  # prior works use random fan-in selection (their behavior)
+            res = lut_trainer.train(cfg, data, steps=STEPS)
+        acc = lut_trainer.accuracy(cfg, res.params, data)
+        rep = hwcost.report(cfg, pipeline_every=3)
+        rows.append({
+            "model": name, "acc": round(acc, 4), "luts": rep.luts,
+            "ffs": rep.ffs, "fmax_mhz": round(rep.fmax_mhz),
+            "latency_ns": round(rep.latency_ns, 2),
+            "area_delay": round(rep.area_delay, 1),
+        })
+    ours = next(r for r in rows if r["model"] == "neuralut_assemble")
+    for r in rows:
+        r["area_delay_vs_ours"] = round(r["area_delay"]
+                                        / ours["area_delay"], 2)
+    return rows
+
+
+def fig2_assembly_scaling(max_fan_in: int = 64, bits: int = 2
+                          ) -> List[dict]:
+    """The paper's central Fig. 2 argument, quantified: P-LUT cost of ONE
+    N-input function realized as (a) a single L-LUT (2^(beta*N) entries,
+    exponential) vs (b) a binary tree of 2-input L-LUTs (N-1 units,
+    linear).  Pure hwcost model — exact, no training."""
+    rows = []
+    n = 2
+    while n <= max_fan_in:
+        single = hwcost.plut_per_bit(bits * n) * bits
+        tree = hwcost.tree_area([2] * (n.bit_length() - 1), bits)
+        rows.append({
+            "fan_in": n, "beta": bits,
+            "single_llut_pluts": single,
+            "tree_pluts": tree,
+            "reduction": round(single / tree, 1),
+        })
+        n *= 2
+    return rows
+
+
+def _fig5_option(option: int, bits: int = 3) -> AssembleConfig:
+    """JSC-like nets whose hidden trees follow Fig. 2's options.
+
+    (1) 16-input trees from 4-input LUTs (depth 2)
+    (2) 16-input trees from 2-input LUTs (depth 4)
+    (3) 64-input trees from 2-input LUTs (depth 6)
+    """
+    if option == 1:
+        layers = [LayerSpec(16, 4, bits, False), LayerSpec(4, 4, bits, True),
+                  LayerSpec(1, 4, 6, True)]
+        trees = 5
+    elif option == 2:
+        layers = [LayerSpec(16, 2, bits, False), LayerSpec(8, 2, bits, True),
+                  LayerSpec(4, 2, bits, True), LayerSpec(2, 2, bits, True),
+                  LayerSpec(1, 2, 6, True)]
+        trees = 5
+    else:
+        layers = [LayerSpec(64, 2, bits, False),
+                  LayerSpec(32, 2, bits, True), LayerSpec(16, 2, bits, True),
+                  LayerSpec(8, 2, bits, True), LayerSpec(4, 2, bits, True),
+                  LayerSpec(2, 2, bits, True), LayerSpec(1, 2, 6, True)]
+        trees = 5
+    # `trees` parallel trees -> multiply unit counts; final layer = 5 logits
+    scaled = []
+    for i, l in enumerate(layers):
+        units = l.units * trees
+        scaled.append(LayerSpec(units, l.fan_in,
+                                6 if i == len(layers) - 1 else l.bits,
+                                l.assemble))
+    return AssembleConfig(in_features=16, input_bits=bits,
+                          input_signed=True, layers=tuple(scaled),
+                          subnet_width=16, subnet_depth=2, skip_step=2)
+
+
+def fig5(seeds=(0, 1, 2)) -> List[dict]:
+    data = synthetic.load("jsc_openml", n_train=8192, n_test=2048)
+    rows = []
+    for option in (1, 2, 3):
+        base = _fig5_option(option)
+        variants = {
+            "complete": dict(cfg=base, learned=True),
+            "wo_learned_mappings": dict(cfg=base, learned=False),
+            "wo_tree_skips": dict(
+                cfg=dataclasses.replace(base, tree_skips=False),
+                learned=True),
+        }
+        area = hwcost.network_luts(base)
+        for vname, v in variants.items():
+            accs = []
+            for seed in seeds:
+                cfg = v["cfg"]
+                mappings = None
+                if v["learned"]:
+                    dense = lut_trainer.train(cfg, data, dense=True,
+                                              lasso=1e-4, steps=80,
+                                              seed=seed)
+                    mappings = pruning.select_mappings(dense.params, cfg)
+                res = lut_trainer.train(cfg, data, mappings=mappings,
+                                        steps=STEPS, seed=seed)
+                accs.append(lut_trainer.accuracy(cfg, res.params, data))
+            rows.append({
+                "option": option, "variant": vname, "luts": area,
+                "acc_mean": round(float(np.mean(accs)), 4),
+                "acc_std": round(float(np.std(accs)), 4),
+                "tree_depth": sum(1 for l in v["cfg"].layers),
+            })
+    return rows

@@ -1,0 +1,131 @@
+"""Benchmark harness: one function per paper table/figure + kernel
+micro-benchmarks + the roofline report.
+
+Prints ``name,us_per_call,derived`` CSV rows (harness contract) followed by
+the structured tables.  ``python -m benchmarks.run [--fast] [--only NAME]``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time_call(fn, *args, reps: int = 5, warmup: int = 2) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def bench_kernels(rows: list) -> None:
+    """Micro-benchmarks: LUT lookup impls + folded vs quantized inference.
+
+    (CPU numbers — structural comparison only; the TPU story is in the
+    roofline tables.)"""
+    from repro.kernels import ops
+
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    table = jax.random.randint(k1, (256, 64), 0, 255, dtype=jnp.int32)
+    addr = jax.random.randint(k2, (4096, 256), 0, 64, dtype=jnp.int32)
+    for impl in ("take", "onehot", "pallas"):
+        us = _time_call(lambda t, a, i=impl: ops.lut_lookup(t, a, impl=i),
+                        table, addr)
+        rows.append((f"lut_lookup_{impl}", us,
+                     "batch=4096 units=256 entries=64"))
+
+    from repro.configs import paper_tasks
+    from repro.core import assemble, folding
+    from repro.data import synthetic
+    cfg = paper_tasks.reduced("nid")
+    data = synthetic.load("nid", n_train=64, n_test=2048)
+    params = assemble.init(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(data.x_test[:1024])
+    net = folding.fold_network(params, cfg)
+    q_fwd = jax.jit(lambda xx: assemble.apply_codes(params, cfg, xx))
+    f_fwd = jax.jit(lambda xx: folding.folded_apply_codes(net, params, xx))
+    rows.append(("nid_quantized_forward", _time_call(q_fwd, x), "batch=1024"))
+    rows.append(("nid_folded_forward", _time_call(f_fwd, x),
+                 "batch=1024 (pure table lookups)"))
+
+
+def bench_tables(rows: list, fast: bool) -> dict:
+    from benchmarks import paper_tables
+
+    out = {}
+    t0 = time.time()
+    out["table2"] = paper_tables.table2()
+    rows.append(("table2_accuracy", (time.time() - t0) * 1e6,
+                 json.dumps(out["table2"][0])[:80].replace(",", ";")))
+    t0 = time.time()
+    out["table3"] = paper_tables.table3()
+    rows.append(("table3_pipelining", (time.time() - t0) * 1e6,
+                 f"{len(out['table3'])} rows"))
+    t0 = time.time()
+    out["table4"] = paper_tables.table4()
+    rows.append(("table4_area_delay", (time.time() - t0) * 1e6,
+                 f"{len(out['table4'])} rows"))
+    t0 = time.time()
+    out["fig2"] = paper_tables.fig2_assembly_scaling()
+    rows.append(("fig2_assembly_scaling", (time.time() - t0) * 1e6,
+                 f"max reduction {out['fig2'][-1]['reduction']}x"))
+    t0 = time.time()
+    out["fig5"] = paper_tables.fig5(seeds=(0,) if fast else (0, 1, 2))
+    rows.append(("fig5_ablation", (time.time() - t0) * 1e6,
+                 f"{len(out['fig5'])} rows"))
+    return out
+
+
+def bench_roofline(rows: list) -> None:
+    from benchmarks import roofline
+    table = roofline.build_table()
+    ok = [r for r in table if r.get("status") == "ok"]
+    rows.append(("roofline_cells", 0.0,
+                 f"{len(ok)} analyzed / {len(table)} records"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default=None,
+                    choices=["kernels", "tables", "roofline"])
+    args = ap.parse_args()
+
+    rows: list = []
+    outputs = {}
+    if args.only in (None, "kernels"):
+        bench_kernels(rows)
+    if args.only in (None, "tables"):
+        outputs.update(bench_tables(rows, args.fast))
+    if args.only in (None, "roofline"):
+        bench_roofline(rows)
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+    for name, table in outputs.items():
+        print(f"\n=== {name} ===")
+        for row in table:
+            print(json.dumps(row))
+
+    out_dir = os.path.join(os.path.dirname(__file__), "..", "experiments")
+    os.makedirs(out_dir, exist_ok=True)
+    if outputs:
+        with open(os.path.join(out_dir, "bench_results.json"), "w") as f:
+            json.dump(outputs, f, indent=2)
+
+    if args.only in (None, "roofline"):
+        from benchmarks import roofline
+        roofline.main()
+
+
+if __name__ == "__main__":
+    main()

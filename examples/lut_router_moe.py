@@ -1,0 +1,116 @@
+"""Paper technique as a first-class LM feature: a folded LUT-tree MoE router.
+
+An MoE router is exactly the workload NeuraLUT-Assemble targets — a tiny
+ultra-low-latency classifier.  This example:
+
+  1. trains a small Mixtral-family MoE LM on synthetic tokens,
+  2. collects router inputs/decisions at one layer,
+  3. distills the dense router into a NeuraLUT-Assemble tree (dense
+     pre-train -> learned mappings -> sparse retrain, the paper's flow),
+  4. folds it into L-LUTs (bit-exact) and plugs it into the live MoE layer
+     via ``apply_moe(router_fn=...)``,
+  5. reports routing agreement, MoE-output error, and the FPGA cost of the
+     folded router (DESIGN.md §4 / §Arch-applicability).
+
+    PYTHONPATH=src python examples/lut_router_moe.py
+"""
+import dataclasses
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import lm_archs
+from repro.core import assemble, folding, hwcost, pruning
+from repro.core.assemble import AssembleConfig, LayerSpec
+from repro.data import synthetic, tokens
+from repro.models import layers, lm, moe
+from repro.train import losses, lut_trainer, optim
+
+
+def router_tree_config(d_model: int, n_experts: int) -> AssembleConfig:
+    """A LUT tree classifier: d_model inputs -> n_experts logits."""
+    return AssembleConfig(
+        in_features=d_model, input_bits=2, input_signed=True,
+        layers=(
+            LayerSpec(8 * n_experts, 4, 2, False),   # learned mappings
+            LayerSpec(2 * n_experts, 4, 2, True),    # assemble
+            LayerSpec(n_experts, 2, 4, True),        # assemble -> logits
+        ),
+        subnet_width=16, subnet_depth=2, skip_step=2)
+
+
+def main() -> None:
+    cfg = dataclasses.replace(lm_archs.smoke("mixtral-8x22b"),
+                              dtype="float32", remat=False)
+    print(f"== 1. train a {cfg.n_experts}-expert MoE LM "
+          f"({cfg.n_params() / 1e6:.1f}M params)")
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    from repro.launch import steps as steps_mod
+    step = jax.jit(steps_mod.make_train_step(
+        cfg, opt_cfg=optim.AdamWConfig(lr=3e-3)))
+    opt = optim.adamw_init(params)
+    corpus = tokens.SyntheticCorpus(tokens.TokenPipelineConfig(
+        vocab=cfg.vocab, seq_len=32, global_batch=16))
+    for i in range(40):
+        toks = jnp.asarray(corpus.sample_batch(i, 16))
+        batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+        params, opt, m = step(params, opt, batch)
+    print(f"   LM loss: {float(m['loss']):.3f}")
+
+    print("== 2. collect router inputs/decisions at layer 0")
+    layer0 = jax.tree.map(lambda a: a[0], params["blocks"])
+    mspec = lm.moe_spec(cfg)
+
+    toks = jnp.asarray(corpus.sample_batch(999, 64))[:, :-1]
+    x = lm._embed(params, cfg, toks)
+    h = layers.rms_norm(x, layer0["ln1"])
+    # pre-FFN stream: what the router actually sees
+    h2 = layers.rms_norm(x, layer0["ln2"]).reshape(-1, cfg.d_model)
+    router_logits = h2 @ layer0["moe"]["router"]
+    top1 = np.asarray(jnp.argmax(router_logits, -1))
+
+    ds = synthetic.Dataset(
+        name="router", x_train=np.asarray(h2[:1536]),
+        y_train=top1[:1536], x_test=np.asarray(h2[1536:]),
+        y_test=top1[1536:], n_classes=cfg.n_experts)
+
+    print("== 3. distill into a NeuraLUT-Assemble tree (paper toolflow)")
+    rcfg = router_tree_config(cfg.d_model, cfg.n_experts)
+    dense = lut_trainer.train(rcfg, ds, dense=True, lasso=1e-4, steps=100)
+    mappings = pruning.select_mappings(dense.params, rcfg)
+    res = lut_trainer.train(rcfg, ds, mappings=mappings, steps=300,
+                            lr=1e-2)
+    agree = lut_trainer.accuracy(rcfg, res.params, ds)
+    print(f"   top-1 routing agreement: {agree * 100:.1f}%")
+
+    print("== 4. fold + plug into the live MoE layer")
+    net = folding.fold_network(res.params, rcfg)
+
+    def lut_router_fn(xf):
+        return folding.folded_logits(net, res.params,
+                                     xf.astype(jnp.float32))
+
+    xin = h.astype(jnp.float32)
+    y_dense, _ = moe.apply_moe(layer0["moe"], mspec, xin)
+    y_lut, _ = moe.apply_moe(layer0["moe"], mspec, xin,
+                             router_fn=lut_router_fn)
+    rel = float(jnp.linalg.norm(y_dense - y_lut)
+                / jnp.maximum(jnp.linalg.norm(y_dense), 1e-9))
+    print(f"   MoE output relative diff (dense vs LUT router): {rel:.3f}")
+
+    print("== 5. hardware cost of the folded router")
+    rep = hwcost.report(rcfg, pipeline_every=3)
+    dense_macs = cfg.d_model * cfg.n_experts
+    print(f"   LUT router: {rep.luts} LUTs, {rep.latency_ns:.2f} ns "
+          f"latency, 0 multipliers (vs {dense_macs} MACs for the dense "
+          f"router)")
+    print(f"   area-delay: {rep.area_delay:.0f} LUTxns")
+
+
+if __name__ == "__main__":
+    main()

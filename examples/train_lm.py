@@ -1,0 +1,99 @@
+"""End-to-end LM training driver on the production loop.
+
+Trains a small member of an assigned architecture family on the synthetic
+token pipeline, through the REAL production substrate: pjit on a (1,1)
+(data, model) mesh, the same sharding rules as the 512-chip dry-run,
+AdamW + cosine schedule, atomic async checkpointing, straggler detection,
+and fault-tolerant step replay.
+
+    PYTHONPATH=src python examples/train_lm.py --arch gemma-2b --steps 200
+    PYTHONPATH=src python examples/train_lm.py --arch mixtral-8x22b \
+        --steps 300 --d-model 512 --layers 8      # ~100M-param MoE
+"""
+import argparse
+import dataclasses
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import lm_archs
+from repro.data import tokens
+from repro.dist import sharding as shd
+from repro.launch import mesh as mesh_mod, steps
+from repro.train import loop as train_loop, optim
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-2b", choices=list(lm_archs.ARCHS))
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--vocab", type=int, default=512)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    args = ap.parse_args()
+
+    base = lm_archs.smoke(args.arch)
+    n_heads = max(4, args.d_model // 32)
+    cfg = dataclasses.replace(
+        base, d_model=args.d_model, n_layers=args.layers,
+        n_heads=n_heads, n_kv_heads=max(1, n_heads // 2), head_dim=None,
+        d_ff=args.d_model * 4, vocab=args.vocab,
+        loss_chunk=min(64, args.seq))
+    print(f"== {args.arch} family, ~{cfg.n_params() / 1e6:.1f}M params, "
+          f"mesh=(1,1) [same code path as the 512-chip mesh]")
+
+    mesh = mesh_mod.make_host_mesh()
+    pspecs = steps.param_spec_tree(cfg)
+    psh = shd.to_shardings(mesh, pspecs)
+    with mesh:
+        params = jax.jit(steps.init_fn(cfg), out_shardings=psh)(
+            jax.random.PRNGKey(0))
+    opt_state = optim.adamw_init(params)
+
+    ocfg = optim.AdamWConfig(
+        lr=args.lr, weight_decay=0.1,
+        schedule=optim.cosine_schedule(args.steps, warmup=20))
+    step_fn = jax.jit(steps.make_train_step(cfg, opt_cfg=ocfg))
+
+    corpus = tokens.SyntheticCorpus(tokens.TokenPipelineConfig(
+        vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch))
+
+    def batch_fn(step):
+        toks, labels = corpus.sample_batch(step, args.batch), None
+        batch = {"tokens": jnp.asarray(toks[:, :-1]),
+                 "labels": jnp.asarray(toks[:, 1:])}
+        if cfg.is_enc_dec:
+            batch["audio_embed"] = jax.random.normal(
+                jax.random.PRNGKey(step), (args.batch, args.seq,
+                                           cfg.d_model))
+        return batch
+
+    def log(step, m):
+        print(f"step {step:5d}  loss {m['loss']:.4f}  "
+              f"gnorm {m['grad_norm']:.2f}  {m['step_time_s'] * 1e3:.0f} ms"
+              + ("  [STRAGGLER]" if m.get("straggler") else ""))
+
+    state = train_loop.LoopState(params=params, opt_state=opt_state)
+    lcfg = train_loop.LoopConfig(total_steps=args.steps,
+                                 ckpt_dir=args.ckpt_dir, ckpt_every=50,
+                                 log_every=10)
+    with mesh:
+        state = train_loop.run(lcfg, state, step_fn, batch_fn, log)
+    first = state.metrics_history[0]["loss"]
+    last = state.metrics_history[-1]["loss"]
+    print(f"== done: loss {first:.3f} -> {last:.3f} over {state.step} steps "
+          f"({state.failures} recovered failures, "
+          f"{len(state.straggler.events)} straggler flags)")
+    assert last < first, "training did not reduce loss"
+
+
+if __name__ == "__main__":
+    main()

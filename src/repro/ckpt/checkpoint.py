@@ -1,0 +1,147 @@
+"""Fault-tolerant, mesh-agnostic checkpointing (numpy + msgpack, no orbax).
+
+Design points for 1000+ node runs:
+  * **atomic**: writes go to ``step_XXXX.tmp`` then ``os.replace`` to the
+    final directory name; a crash mid-write never corrupts the latest
+    checkpoint, and restore always reads the newest *complete* step;
+  * **mesh-agnostic**: arrays are saved as full logical numpy arrays with a
+    path manifest — restore can re-shard onto ANY mesh (elastic scaling:
+    save on 512 chips, resume on 256);
+  * **async**: ``save_async`` snapshots to host memory synchronously (cheap)
+    and writes in a background thread so the train loop is never blocked on
+    the filesystem;
+  * retention: ``keep`` newest checkpoints are preserved.
+
+(On a real multi-host pod each host writes only its addressable shards;
+the single-process container exercises the same code path with one host.)
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+import msgpack
+import numpy as np
+
+SEP = "/"
+
+# numpy can't round-trip ml_dtypes through .npy; store as same-width uint
+# views and restore from the manifest dtype.
+_EXOTIC = {
+    "bfloat16": (ml_dtypes.bfloat16, np.uint16),
+    "float8_e4m3fn": (ml_dtypes.float8_e4m3fn, np.uint8),
+    "float8_e5m2": (ml_dtypes.float8_e5m2, np.uint8),
+}
+
+
+def _flatten(tree: Any):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    items = []
+    for path, leaf in flat:
+        key = SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        items.append((key, leaf))
+    return items, jax.tree_util.tree_structure(tree)
+
+
+def save(directory: str, step: int, tree: Any, *, keep: int = 3) -> str:
+    """Synchronous atomic save. Returns the checkpoint path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:010d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    items, _ = _flatten(tree)
+    manifest = {"step": step, "arrays": []}
+    for i, (key, leaf) in enumerate(items):
+        arr = np.asarray(leaf)
+        fname = f"arr_{i:05d}.npy"
+        dtype_name = str(arr.dtype)
+        if dtype_name in _EXOTIC:
+            arr = arr.view(_EXOTIC[dtype_name][1])
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["arrays"].append(
+            {"key": key, "file": fname, "dtype": dtype_name,
+             "shape": list(arr.shape)})
+    with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
+        f.write(msgpack.packb(manifest))
+    os.replace(tmp, final)  # atomic publish
+    _gc(directory, keep)
+    return final
+
+
+_PENDING: list = []
+
+
+def save_async(directory: str, step: int, tree: Any, *, keep: int = 3
+               ) -> threading.Thread:
+    """Snapshot to host memory now; write in a background thread."""
+    host_tree = jax.tree.map(lambda a: np.asarray(a), tree)
+    t = threading.Thread(target=save, args=(directory, step, host_tree),
+                         kwargs={"keep": keep}, daemon=True)
+    t.start()
+    _PENDING.append(t)
+    return t
+
+
+def wait_pending() -> None:
+    while _PENDING:
+        _PENDING.pop().join()
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore(directory: str, like: Any, *, step: Optional[int] = None,
+            shardings: Any = None) -> Tuple[Any, int]:
+    """Restore into the structure of ``like``.
+
+    ``shardings``: optional pytree of jax.sharding.Sharding matching
+    ``like`` — arrays are device_put with those shardings (elastic
+    re-sharding onto whatever mesh the caller is running now).
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"step_{step:010d}")
+    with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
+        manifest = msgpack.unpackb(f.read())
+    by_key = {a["key"]: a for a in manifest["arrays"]}
+    items, treedef = _flatten(like)
+    flat_shardings = (treedef.flatten_up_to(shardings)
+                      if shardings is not None else [None] * len(items))
+    leaves = []
+    for (key, leaf), shard in zip(items, flat_shardings):
+        meta = by_key[key]
+        arr = np.load(os.path.join(path, meta["file"]))
+        if meta["dtype"] in _EXOTIC:
+            arr = arr.view(_EXOTIC[meta["dtype"]][0])
+        if leaf is not None and hasattr(leaf, "shape"):
+            assert tuple(arr.shape) == tuple(leaf.shape), \
+                f"{key}: ckpt {arr.shape} != model {leaf.shape}"
+        if shard is not None:
+            leaves.append(jax.device_put(arr, shard))
+        else:
+            leaves.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, leaves), step
+
+
+def _gc(directory: str, keep: int) -> None:
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(directory)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(directory, f"step_{s:010d}"),
+                      ignore_errors=True)

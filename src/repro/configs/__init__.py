@@ -1,0 +1,1 @@
+"""Arch + paper-task config registry."""

@@ -1,0 +1,87 @@
+"""The paper's own model configurations (Table II), verbatim.
+
+w_l / a_l / F / beta decode into AssembleConfig layers; the subnet
+hyperparameters (L, N, S) are as listed.  The beta lists in the paper give
+the network input bit-width followed by per-layer output bit-widths.
+"""
+from __future__ import annotations
+
+from repro.core.assemble import AssembleConfig, LayerSpec
+
+
+def mnist(aug: bool = False) -> AssembleConfig:
+    # w_l=[2160,360,2160,360,60,10], a_l=[0,1,0,1,1,1], F=6, beta=[1]*5+[6]
+    del aug  # augmentation is a data-pipeline choice, not an architecture one
+    units = [2160, 360, 2160, 360, 60, 10]
+    asm = [False, True, False, True, True, True]
+    bits = [1, 1, 1, 1, 1, 6]
+    return AssembleConfig(
+        in_features=784, input_bits=1, input_signed=False,
+        layers=tuple(LayerSpec(u, 6, b, a)
+                     for u, b, a in zip(units, bits, asm)),
+        subnet_width=64, subnet_depth=2, skip_step=2)
+
+
+def jsc_cernbox() -> AssembleConfig:
+    # w_l=[320,160,80,40,20,10,5], a_l=[0,1,1,1,1,1,1], F=[1,2,2,2,2,2,2],
+    # beta: 8b inputs, 4b activations, 8b logits
+    units = [320, 160, 80, 40, 20, 10, 5]
+    asm = [False, True, True, True, True, True, True]
+    fan = [1, 2, 2, 2, 2, 2, 2]
+    bits = [4, 4, 4, 4, 4, 4, 8]
+    return AssembleConfig(
+        in_features=16, input_bits=8, input_signed=True,
+        layers=tuple(LayerSpec(u, f, b, a)
+                     for u, f, b, a in zip(units, fan, bits, asm)),
+        subnet_width=64, subnet_depth=2, skip_step=2)
+
+
+def jsc_openml() -> AssembleConfig:
+    # beta: 6b inputs, 3b activations, 8b logits
+    units = [320, 160, 80, 40, 20, 10, 5]
+    asm = [False, True, True, True, True, True, True]
+    fan = [1, 2, 2, 2, 2, 2, 2]
+    bits = [3, 3, 3, 3, 3, 3, 8]
+    return AssembleConfig(
+        in_features=16, input_bits=6, input_signed=True,
+        layers=tuple(LayerSpec(u, f, b, a)
+                     for u, f, b, a in zip(units, fan, bits, asm)),
+        subnet_width=64, subnet_depth=2, skip_step=2)
+
+
+def nid() -> AssembleConfig:
+    # w_l=[60,20,9,3,1], a_l=[0,1,0,1,1], F=[6,3,3,3,3],
+    # beta: 1b inputs, 2b activations/logits
+    units = [60, 20, 9, 3, 1]
+    asm = [False, True, False, True, True]
+    fan = [6, 3, 3, 3, 3]
+    bits = [2, 2, 2, 2, 2]
+    return AssembleConfig(
+        in_features=593, input_bits=1, input_signed=False,
+        layers=tuple(LayerSpec(u, f, b, a)
+                     for u, f, b, a in zip(units, fan, bits, asm)),
+        subnet_width=16, subnet_depth=2, skip_step=2)
+
+
+def reduced(task: str) -> AssembleConfig:
+    """Small same-shape variants that train in seconds on CPU (tests and
+    benchmark defaults; the full Table II configs remain available)."""
+    if task == "mnist":
+        return AssembleConfig(
+            in_features=784, input_bits=1, input_signed=False,
+            layers=(LayerSpec(144, 6, 1, False), LayerSpec(24, 6, 1, True),
+                    LayerSpec(60, 4, 1, False), LayerSpec(10, 6, 4, True)),
+            subnet_width=16, subnet_depth=2, skip_step=2)
+    if task == "jsc":
+        return AssembleConfig(
+            in_features=16, input_bits=3, input_signed=True,
+            layers=(LayerSpec(40, 2, 3, False), LayerSpec(20, 2, 3, True),
+                    LayerSpec(10, 2, 3, True), LayerSpec(5, 2, 6, True)),
+            subnet_width=16, subnet_depth=2, skip_step=2)
+    if task == "nid":
+        return AssembleConfig(
+            in_features=593, input_bits=1, input_signed=False,
+            layers=(LayerSpec(24, 6, 2, False), LayerSpec(8, 3, 2, True),
+                    LayerSpec(4, 2, 2, True), LayerSpec(1, 4, 2, True)),
+            subnet_width=16, subnet_depth=2, skip_step=2)
+    raise ValueError(task)

@@ -1,0 +1,10 @@
+"""--arch config module (see lm_archs.py for the exact hyperparameters)."""
+from repro.configs.lm_archs import WHISPER_SMALL as CONFIG, _smoke
+
+
+def config():
+    return CONFIG
+
+
+def smoke_config():
+    return _smoke(CONFIG)

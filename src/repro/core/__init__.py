@@ -1,0 +1,16 @@
+"""NeuraLUT-Assemble core: the paper's contribution as composable JAX modules.
+
+Public surface:
+  quant     — QAT quantizers, code packing, batch-norm
+  subnet    — MLP-in-LUT units (+ LogicNets / PolyLUT baseline units)
+  assemble  — LUT-layer networks with tree assembly and learned mappings
+  pruning   — hardware-aware structured pruning (learned mappings)
+  folding   — subnet -> L-LUT enumeration + folded (table-only) inference
+  dontcare  — reachability-based don't-care table compression (paper [20])
+  hwcost    — calibrated P-LUT area / Fmax / latency / area-delay model
+  rtl       — Verilog emission (ROM-per-L-LUT, pipeline strategies)
+"""
+from repro.core import (assemble, dontcare, folding, hwcost, pruning,  # noqa: F401
+                        quant, rtl, subnet)
+from repro.core.assemble import AssembleConfig, LayerSpec  # noqa: F401
+from repro.core.subnet import SubnetSpec  # noqa: F401

@@ -1,0 +1,229 @@
+"""NeuraLUT-Assemble networks: layers of L-LUT units with tree assembly.
+
+A network is a sequence of LUT layers (Table I of the paper):
+
+  * ``assemble=False`` layers ("mapping" layers, ``a_l = 0``): each unit reads
+    ``F`` inputs chosen from the previous layer's outputs.  The choice is
+    *learned* — dense pre-training with a group regularizer, then structured
+    pruning (pruning.py) — or random (the "w/o Learned Mappings" ablation).
+  * ``assemble=True`` layers (``a_l = 1``): fixed regular sparsity — unit
+    ``i`` reads the contiguous slice ``[i*F, (i+1)*F)`` of the previous
+    layer.  A mapping layer followed by a run of assemble layers forms the
+    paper's *tree*: e.g. MNIST's ``w_l=[2160, 360, ...]`` builds 360 trees of
+    effective fan-in 36 out of 6-input LUTs.
+
+Activation/quantization discipline (paper Fig. 1-right):
+  * every layer output is fake-quantized to ``bits_l`` (this is what defines
+    the next layer's LUT input width);
+  * a layer that feeds an assemble layer is an *inner tree* layer: its output
+    activation is removed (when ``tree_skips``) so the per-unit affine skip
+    paths compose into one activation-free path across the whole tree;
+  * other non-final layers use ReLU (unsigned codes); the final layer emits
+    signed logits codes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant, subnet
+from repro.core.quant import QuantSpec
+from repro.core.subnet import SubnetSpec
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    units: int        # w_l
+    fan_in: int       # F_l (inputs per unit)
+    bits: int         # beta_l (output bit-width of this layer)
+    assemble: bool    # a_l
+
+
+@dataclasses.dataclass(frozen=True)
+class AssembleConfig:
+    in_features: int
+    input_bits: int
+    layers: Tuple[LayerSpec, ...]
+    subnet_width: int = 16      # N
+    subnet_depth: int = 2       # L
+    skip_step: int = 2          # S  (0 disables intra-unit skips)
+    tree_skips: bool = True     # inner tree layers drop output activation
+    input_signed: bool = True
+    poly_degree: int = 1        # >1 => PolyLUT-style units everywhere
+
+    def __post_init__(self):
+        prev = self.in_features
+        for i, l in enumerate(self.layers):
+            if l.assemble:
+                if l.units * l.fan_in != prev:
+                    raise ValueError(
+                        f"layer {i}: assemble needs units*fan_in == prev "
+                        f"({l.units}*{l.fan_in} != {prev})")
+            elif l.fan_in > prev:
+                raise ValueError(f"layer {i}: fan_in {l.fan_in} > prev {prev}")
+            prev = l.units
+
+    # ---- static helpers -------------------------------------------------
+    def subnet_spec(self, l: int, *, dense: bool = False) -> SubnetSpec:
+        fan_in = self.layers[l].fan_in
+        if dense and not self.layers[l].assemble:
+            fan_in = self.prev_width(l)
+        return SubnetSpec(
+            fan_in=fan_in,
+            width=self.subnet_width,
+            depth=self.subnet_depth,
+            skip_step=self.skip_step,
+            poly_degree=self.poly_degree,
+        )
+
+    def prev_width(self, l: int) -> int:
+        return self.in_features if l == 0 else self.layers[l - 1].units
+
+    def has_activation(self, l: int) -> bool:
+        """ReLU at the output of layer ``l``?"""
+        if l == len(self.layers) - 1:
+            return False  # logits
+        if self.tree_skips and self.layers[l + 1].assemble:
+            return False  # inner tree layer: keep the skip path affine
+        return True
+
+    def quant_spec(self, l: int) -> QuantSpec:
+        # ReLU outputs are non-negative -> unsigned codes.
+        return QuantSpec(self.layers[l].bits, signed=not self.has_activation(l))
+
+    def input_quant_spec(self) -> QuantSpec:
+        return QuantSpec(self.input_bits, signed=self.input_signed)
+
+    def in_bits(self, l: int) -> int:
+        """LUT input bit-width seen by layer ``l``."""
+        return self.input_bits if l == 0 else self.layers[l - 1].bits
+
+    def lut_addr_bits(self, l: int) -> int:
+        return self.in_bits(l) * self.layers[l].fan_in
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init(rng: Array, cfg: AssembleConfig, *, dense: bool = False,
+         mappings: Optional[Sequence[Optional[Array]]] = None) -> dict:
+    """Initialize parameters.
+
+    ``dense=True`` builds the pre-training model in which mapping layers see
+    the whole previous layer (used by the hardware-aware pruning stage).
+    ``mappings[l]`` is an int32 [units, fan_in] index table for mapping
+    layers of the sparse model (ignored for assemble layers / dense mode).
+    """
+    keys = jax.random.split(rng, len(cfg.layers) + 1)
+    params: dict = {
+        "in_q": quant.init_quant(cfg.input_quant_spec()),
+        "layers": [],
+    }
+    for l, spec in enumerate(cfg.layers):
+        sn = subnet.init_subnet(keys[l], cfg.subnet_spec(l, dense=dense),
+                                spec.units)
+        layer = {
+            "subnet": sn,
+            "out_q": quant.init_quant(cfg.quant_spec(l)),
+        }
+        if not dense and not spec.assemble:
+            if mappings is not None and mappings[l] is not None:
+                idx = jnp.asarray(mappings[l], jnp.int32)
+                assert idx.shape == (spec.units, spec.fan_in), idx.shape
+            else:  # random fallback (the "w/o Learned Mappings" ablation)
+                idx = random_mapping(keys[-1], cfg, l)
+            layer["mapping"] = idx
+        params["layers"].append(layer)
+    return params
+
+
+def random_mapping(rng: Array, cfg: AssembleConfig, l: int) -> Array:
+    """Random fan-in selection (prior-work style, seed-sensitive)."""
+    spec = cfg.layers[l]
+    prev = cfg.prev_width(l)
+    rows = []
+    for u in range(spec.units):
+        rng, k = jax.random.split(rng)
+        rows.append(jax.random.choice(k, prev, (spec.fan_in,),
+                                      replace=prev < spec.fan_in))
+    return jnp.stack(rows).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _gather_layer_inputs(cfg: AssembleConfig, params_l: dict, l: int,
+                         h: Array, *, dense: bool) -> Array:
+    """[batch, prev] -> [batch, units, fan_in] (or broadcast in dense mode)."""
+    spec = cfg.layers[l]
+    if spec.assemble:
+        return h.reshape(h.shape[0], spec.units, spec.fan_in)
+    if dense:
+        return jnp.broadcast_to(h[:, None, :],
+                                (h.shape[0], spec.units, h.shape[-1]))
+    idx = params_l["mapping"]  # [units, fan_in]
+    return h[:, idx]  # fancy-index -> [batch, units, fan_in]
+
+
+def apply(params: dict, cfg: AssembleConfig, x: Array, *,
+          training: bool = False, dense: bool = False) -> Tuple[Array, dict]:
+    """Forward pass. x: [batch, in_features] -> (logits [batch, n_out], new
+    params with refreshed BN statistics)."""
+    in_spec = cfg.input_quant_spec()
+    h = quant.fake_quant(params["in_q"], in_spec, x)
+    new_layers = []
+    for l, spec in enumerate(cfg.layers):
+        pl = params["layers"][l]
+        xi = _gather_layer_inputs(cfg, pl, l, h, dense=dense)
+        out, new_sn = subnet.apply_subnet(
+            pl["subnet"], cfg.subnet_spec(l, dense=dense), xi,
+            activation=cfg.has_activation(l), training=training)
+        out = out[..., 0]  # out_dim == 1
+        h = quant.fake_quant(pl["out_q"], cfg.quant_spec(l), out)
+        nl = dict(pl)
+        nl["subnet"] = new_sn
+        new_layers.append(nl)
+    new_params = dict(params)
+    new_params["layers"] = new_layers
+    return h, new_params
+
+
+def apply_codes(params: dict, cfg: AssembleConfig, x: Array) -> Array:
+    """Eval forward that returns the *integer output codes* (used by the
+    exact folding-equivalence property test). x: [batch, in_features]."""
+    in_spec = cfg.input_quant_spec()
+    codes = quant.quantize_codes(params["in_q"], in_spec, x)
+    h = quant.dequantize_codes(params["in_q"], in_spec, codes)
+    for l, spec in enumerate(cfg.layers):
+        pl = params["layers"][l]
+        xi = _gather_layer_inputs(cfg, pl, l, h, dense=False)
+        out, _ = subnet.apply_subnet(
+            pl["subnet"], cfg.subnet_spec(l), xi,
+            activation=cfg.has_activation(l), training=False)
+        out = out[..., 0]
+        qs = cfg.quant_spec(l)
+        codes = quant.quantize_codes(pl["out_q"], qs, out)
+        h = quant.dequantize_codes(pl["out_q"], qs, codes)
+    return codes
+
+
+def group_lasso(params: dict, cfg: AssembleConfig) -> Array:
+    """Hardware-aware structured regularizer over mapping layers (dense
+    phase): sum of per-(unit, input) first-layer group norms."""
+    total = jnp.asarray(0.0)
+    for l, spec in enumerate(cfg.layers):
+        if not spec.assemble:
+            total = total + subnet.l2_group_penalty(params["layers"][l]["subnet"])
+    return total
+
+
+def logits_to_scores(cfg: AssembleConfig, h: Array) -> Array:
+    """Final layer output -> class scores (identity; named for clarity)."""
+    return h

@@ -1,0 +1,111 @@
+"""Sub-network -> L-LUT conversion by exhaustive enumeration (§III-B2).
+
+After training, every unit's computation between quantization boundaries is
+a pure function of ``F`` codes of ``b_in`` bits — 2^(b_in*F) possible inputs.
+We evaluate the trained subnet on *all* of them and store the resulting
+output codes: that table IS the L-LUT (``2^{beta*F}`` entries, exactly as in
+the paper).  Folded inference then touches no arithmetic: pack codes into an
+address, look up, repeat.  ``tests/test_folding.py`` asserts bit-exact
+equivalence with the quantized model for every input.
+
+On TPU the lookup is executed by ``repro.kernels.lut_gather`` — either a
+vectorized take-gather or a one-hot matmul on the MXU (see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import assemble, quant, subnet
+from repro.core.assemble import AssembleConfig
+
+Array = jax.Array
+
+_ENUM_CHUNK = 4096  # enumeration batch (keeps peak memory bounded)
+
+
+@dataclasses.dataclass
+class FoldedNetwork:
+    cfg: AssembleConfig
+    tables: List[Array]            # per layer: int32 [units, 2^(b_in*F)]
+    in_q: dict                     # input quantizer params
+    out_q: dict                    # final-layer quantizer params (for logits)
+
+    def num_entries(self) -> int:
+        return int(sum(t.shape[0] * t.shape[1] for t in self.tables))
+
+
+def fold_layer(params: dict, cfg: AssembleConfig, l: int) -> Array:
+    """Enumerate one layer's units -> int32 table [units, 2^(b_in*F)]."""
+    spec = cfg.layers[l]
+    b_in = cfg.in_bits(l)
+    n_codes = 2 ** (b_in * spec.fan_in)
+    in_spec = (cfg.input_quant_spec() if l == 0
+               else cfg.quant_spec(l - 1))
+    in_q = params["in_q"] if l == 0 else params["layers"][l - 1]["out_q"]
+    pl = params["layers"][l]
+    out_spec = cfg.quant_spec(l)
+
+    def eval_chunk(addr: Array) -> Array:
+        codes = quant.unpack_address(addr, b_in, spec.fan_in)
+        x = quant.dequantize_codes(in_q, in_spec, codes)       # [chunk, F]
+        xi = jnp.broadcast_to(x[:, None, :],
+                              (x.shape[0], spec.units, spec.fan_in))
+        out, _ = subnet.apply_subnet(
+            pl["subnet"], cfg.subnet_spec(l), xi,
+            activation=cfg.has_activation(l), training=False)
+        return quant.quantize_codes(pl["out_q"], out_spec, out[..., 0])
+
+    eval_chunk = jax.jit(eval_chunk)
+    pieces = []
+    for start in range(0, n_codes, _ENUM_CHUNK):
+        addr = jnp.arange(start, min(start + _ENUM_CHUNK, n_codes),
+                          dtype=jnp.int32)
+        pieces.append(eval_chunk(addr))
+    table = jnp.concatenate(pieces, axis=0)     # [n_codes, units]
+    return table.T.astype(jnp.int32)            # [units, n_codes]
+
+
+def fold_network(params: dict, cfg: AssembleConfig) -> FoldedNetwork:
+    tables = [fold_layer(params, cfg, l) for l in range(len(cfg.layers))]
+    return FoldedNetwork(cfg=cfg, tables=tables, in_q=params["in_q"],
+                         out_q=params["layers"][-1]["out_q"])
+
+
+def folded_apply_codes(net: FoldedNetwork, params: dict, x: Array,
+                       *, lut_impl: str = "take") -> Array:
+    """Folded inference. x: [batch, in_features] floats -> final codes.
+
+    ``lut_impl``: 'take' (pure-jnp oracle) or 'onehot' (MXU-style matmul) —
+    both live in kernels/lut_gather; the Pallas kernel is exercised by the
+    kernel tests.
+    """
+    from repro.kernels import ops as lut_ops
+
+    cfg = net.cfg
+    codes = quant.quantize_codes(params["in_q"], cfg.input_quant_spec(), x)
+    for l, spec in enumerate(cfg.layers):
+        pl = params["layers"][l]
+        if spec.assemble:
+            ci = codes.reshape(codes.shape[0], spec.units, spec.fan_in)
+        else:
+            ci = codes[:, pl["mapping"]]
+        addr = quant.pack_address(ci, cfg.in_bits(l), spec.fan_in)
+        codes = lut_ops.lut_lookup(net.tables[l], addr, impl=lut_impl)
+    return codes
+
+
+def folded_logits(net: FoldedNetwork, params: dict, x: Array,
+                  *, lut_impl: str = "take") -> Array:
+    codes = folded_apply_codes(net, params, x, lut_impl=lut_impl)
+    cfg = net.cfg
+    return quant.dequantize_codes(net.out_q, cfg.quant_spec(len(cfg.layers) - 1),
+                                  codes)
+
+
+def tables_to_numpy(net: FoldedNetwork) -> List[np.ndarray]:
+    return [np.asarray(t) for t in net.tables]

@@ -1,0 +1,142 @@
+"""Quantization-aware training primitives (Brevitas-equivalent, in JAX).
+
+The paper trains sub-networks whose *inputs and outputs* are quantized to a
+per-position bit-width beta (Table I/II), with learned scaling factors on the
+activations, batch-norm folded at conversion time.  Everything between the
+quantization boundaries runs in full precision and is later absorbed into the
+L-LUT by enumeration, so only the boundary quantizers define the hardware
+interface.
+
+We implement:
+  * ``LearnedScaleQuant`` — symmetric/unsigned fake-quant with a learned
+    log-scale, straight-through estimator for the rounding.
+  * integer <-> code helpers used by the folding stage (the L-LUT address is
+    the concatenation of the input codes).
+
+All functions are pure; parameters live in plain dicts (pytrees).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """Static description of one quantization boundary."""
+
+    bits: int
+    signed: bool = True
+
+    @property
+    def levels(self) -> int:
+        return 2 ** self.bits
+
+    @property
+    def qmin(self) -> int:
+        return -(2 ** (self.bits - 1)) if self.signed else 0
+
+    @property
+    def qmax(self) -> int:
+        return 2 ** (self.bits - 1) - 1 if self.signed else 2 ** self.bits - 1
+
+
+def init_quant(spec: QuantSpec, init_scale: float = 1.0) -> dict:
+    """Parameters of a learned-scale quantizer (a single log-scale scalar)."""
+    return {"log_scale": jnp.asarray(jnp.log(init_scale), jnp.float32)}
+
+
+def _round_ste(x: Array) -> Array:
+    """Round with straight-through gradient."""
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+def fake_quant(params: dict, spec: QuantSpec, x: Array) -> Array:
+    """Fake-quantize ``x``: returns dequantized values, STE gradients.
+
+    y = clip(round(x / s), qmin, qmax) * s    with  s = exp(log_scale)
+    """
+    s = jnp.exp(params["log_scale"])
+    q = _round_ste(x / s)
+    q = jnp.clip(q, spec.qmin, spec.qmax)
+    return q * s
+
+
+def quantize_codes(params: dict, spec: QuantSpec, x: Array) -> Array:
+    """Hard-quantize to integer *codes* in [0, 2^bits) (the LUT address bits).
+
+    Codes are the unsigned representation: code = q - qmin.
+    """
+    s = jnp.exp(params["log_scale"])
+    q = jnp.clip(jnp.round(x / s), spec.qmin, spec.qmax).astype(jnp.int32)
+    return q - spec.qmin
+
+
+def dequantize_codes(params: dict, spec: QuantSpec, codes: Array) -> Array:
+    """Inverse of :func:`quantize_codes` back to real values."""
+    s = jnp.exp(params["log_scale"])
+    return (codes.astype(jnp.float32) + spec.qmin) * s
+
+
+def pack_address(codes: Array, bits: int, fan_in: int) -> Array:
+    """Pack ``fan_in`` codes (last axis) of ``bits`` bits into one address.
+
+    codes: integer array [..., fan_in] with values in [0, 2^bits).
+    Returns [...] int32 addresses in [0, 2^(bits*fan_in)).
+    The first input occupies the most-significant bits (matches rtl.py).
+    """
+    assert codes.shape[-1] == fan_in, (codes.shape, fan_in)
+    weights = (2 ** (bits * jnp.arange(fan_in - 1, -1, -1))).astype(jnp.int32)
+    return jnp.sum(codes.astype(jnp.int32) * weights, axis=-1)
+
+
+def unpack_address(addr: Array, bits: int, fan_in: int) -> Array:
+    """Inverse of :func:`pack_address`: [...] -> [..., fan_in]."""
+    shifts = bits * jnp.arange(fan_in - 1, -1, -1)
+    mask = (1 << bits) - 1
+    return (addr[..., None] >> shifts) & mask
+
+
+def all_codes(bits: int, fan_in: int) -> Array:
+    """Every possible input-code combination, shape [2^(bits*fan_in), fan_in].
+
+    Used by the folding stage for exhaustive enumeration.
+    """
+    n = 2 ** (bits * fan_in)
+    return unpack_address(jnp.arange(n, dtype=jnp.int32), bits, fan_in)
+
+
+# ---------------------------------------------------------------------------
+# Batch-norm (folded into the sub-network before enumeration)
+# ---------------------------------------------------------------------------
+
+def init_batchnorm(width: int) -> dict:
+    return {
+        "gamma": jnp.ones((width,), jnp.float32),
+        "beta": jnp.zeros((width,), jnp.float32),
+        "mean": jnp.zeros((width,), jnp.float32),
+        "var": jnp.ones((width,), jnp.float32),
+    }
+
+
+def batchnorm_apply(params: dict, x: Array, *, training: bool,
+                    momentum: float = 0.9, eps: float = 1e-5
+                    ) -> Tuple[Array, dict]:
+    """BatchNorm over all leading axes. Returns (y, new_params)."""
+    if training:
+        axes = tuple(range(x.ndim - 1))
+        mean = jnp.mean(x, axis=axes)
+        var = jnp.var(x, axis=axes)
+        new = dict(params)
+        new["mean"] = momentum * params["mean"] + (1 - momentum) * jax.lax.stop_gradient(mean)
+        new["var"] = momentum * params["var"] + (1 - momentum) * jax.lax.stop_gradient(var)
+    else:
+        mean, var = params["mean"], params["var"]
+        new = params
+    y = (x - mean) * jax.lax.rsqrt(var + eps) * params["gamma"] + params["beta"]
+    return y, new

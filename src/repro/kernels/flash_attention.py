@@ -1,0 +1,127 @@
+"""Pallas TPU kernel: blockwise flash attention (GQA, causal, sliding window).
+
+The LM substrate's compute hot spot.  Online-softmax accumulation over KV
+blocks; the KV axis is the innermost grid dimension so the output block is
+revisited (sequential on TPU) while running max / denominator / accumulator
+live in VMEM scratch.  GQA is handled in the index maps (kv head =
+q head // group), so no repeated KV materialization.  Sliding-window and
+causal masks are applied with global-position iotas; fully-masked blocks are
+cheap but not skipped here — block-skipping via a pruned index map is logged
+as a §Perf iteration in EXPERIMENTS.md.
+
+Validated against ``ref.mha_ref`` over shape sweeps in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: Optional[int],
+                  q_offset: int, block_q: int, block_k: int, n_kv: int,
+                  kv_len: int):
+    kv_idx = pl.program_id(3)
+
+    @pl.when(kv_idx == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # [BQ, D]
+    k = k_ref[0, 0].astype(jnp.float32)          # [BK, D]
+    v = v_ref[0, 0].astype(jnp.float32)          # [BK, D]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    q_pos = (pl.program_id(2) * block_q
+             + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+             + q_offset)
+    k_pos = (kv_idx * block_k
+             + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1))
+    mask = k_pos < kv_len  # padded KV positions are never attended
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                           # [BQ, 1]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)               # [BQ, 1]
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1, keepdims=True)
+    acc_scr[...] = (acc_scr[...] * alpha
+                    + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                          preferred_element_type=jnp.float32))
+    m_scr[...] = m_new
+
+    @pl.when(kv_idx == n_kv - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "q_offset", "block_q", "block_k", "interpret"))
+def flash_attention_pallas(q: Array, k: Array, v: Array, *,
+                           causal: bool = True,
+                           window: Optional[int] = None,
+                           q_offset: int = 0,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = True) -> Array:
+    """q: [B, Hq, Sq, D]; k, v: [B, Hkv, Skv, D].  Hq % Hkv == 0."""
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    group = hq // hkv
+    block_q = min(block_q, sq)
+    block_k = min(block_k, skv)
+    pq = (-sq) % block_q
+    pk = (-skv) % block_k
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    # pad KV with positions masked out by a huge negative position trick:
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    sq_p, skv_p = sq + pq, skv + pk
+    n_q, n_kv = sq_p // block_q, skv_p // block_k
+    scale = d ** -0.5
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        q_offset=q_offset, block_q=block_q, block_k=block_k, n_kv=n_kv,
+        kv_len=skv)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, hq, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bi, hi, qi, ki, g=group: (bi, hi // g, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bi, hi, qi, ki, g=group: (bi, hi // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq_p, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :, :sq]

@@ -1,0 +1,71 @@
+"""Jit'd public wrappers over the Pallas kernels with jnp fallbacks.
+
+Dispatch policy (see DESIGN.md §2):
+  * ``lut_lookup``: 'take' = vectorized gather (oracle semantics, CPU
+    default); 'onehot' = MXU matmul formulation in pure jnp; 'pallas' = the
+    VMEM-tiled Pallas kernel (interpret mode on CPU, compiled on TPU).
+  * ``unit_affine``: einsum fallback vs the batched Pallas stage.
+  * ``flash_attention``: jnp scan fallback (models/attention.py) vs Pallas.
+
+The LM substrate lowers through the jnp paths by default so the multi-pod
+dry-run exercises plain XLA collectives; kernels are enabled per-config for
+real TPU runs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.lut_gather import lut_lookup_pallas
+from repro.kernels.subnet_mlp import unit_affine_pallas
+
+Array = jax.Array
+
+_ON_TPU = None
+
+
+def on_tpu() -> bool:
+    global _ON_TPU
+    if _ON_TPU is None:
+        _ON_TPU = jax.default_backend() == "tpu"
+    return _ON_TPU
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def lut_lookup(table: Array, addr: Array, *, impl: str = "take") -> Array:
+    """Batched L-LUT lookup. table: [U, T], addr: [B, U] -> [B, U]."""
+    if impl == "take":
+        return ref.lut_lookup_ref(table, addr)
+    if impl == "onehot":
+        return ref.lut_lookup_onehot_ref(table, addr)
+    if impl == "pallas":
+        return lut_lookup_pallas(table, addr, interpret=not on_tpu())
+    raise ValueError(f"unknown lut_lookup impl {impl!r}")
+
+
+def unit_affine(x: Array, w: Array, b: Array, *, activate: bool = False,
+                impl: str = "einsum") -> Array:
+    if impl == "einsum":
+        return ref.unit_affine_ref(x, w, b, activate=activate)
+    if impl == "pallas":
+        return unit_affine_pallas(x, w, b, activate=activate,
+                                  interpret=not on_tpu())
+    raise ValueError(f"unknown unit_affine impl {impl!r}")
+
+
+def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                    window: Optional[int] = None, q_offset: int = 0,
+                    impl: str = "ref") -> Array:
+    if impl == "ref":
+        return ref.mha_ref(q, k, v, causal=causal, window=window,
+                           q_offset=q_offset)
+    if impl == "pallas":
+        return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                      q_offset=q_offset,
+                                      interpret=not on_tpu())
+    raise ValueError(f"unknown flash_attention impl {impl!r}")

@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantic ground truth: kernel tests sweep shapes/dtypes and
+``assert_allclose`` against these functions (exact equality for the integer
+LUT lookup).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# lut_gather
+# ---------------------------------------------------------------------------
+
+def lut_lookup_ref(table: Array, addr: Array) -> Array:
+    """table: [units, entries] int; addr: [batch, units] int -> [batch, units].
+
+    out[b, u] = table[u, addr[b, u]]
+    """
+    return jnp.take_along_axis(table.T[None], addr[..., None].swapaxes(0, 2),
+                               axis=0)[..., 0].swapaxes(0, 1) if False else \
+        jax.vmap(lambda a: table[jnp.arange(table.shape[0]), a])(addr)
+
+
+def lut_lookup_onehot_ref(table: Array, addr: Array) -> Array:
+    """One-hot matmul formulation (the MXU-friendly TPU adaptation)."""
+    entries = table.shape[-1]
+    onehot = jax.nn.one_hot(addr, entries, dtype=jnp.float32)  # [B, U, T]
+    out = jnp.einsum("but,ut->bu", onehot, table.astype(jnp.float32))
+    return jnp.round(out).astype(table.dtype)
+
+
+# ---------------------------------------------------------------------------
+# subnet_mlp (batched per-unit affine stage)
+# ---------------------------------------------------------------------------
+
+def unit_affine_ref(x: Array, w: Array, b: Array,
+                    *, activate: bool = False) -> Array:
+    """x: [batch, units, din], w: [units, din, dout], b: [units, dout]."""
+    y = jnp.einsum("bui,uio->buo", x, w) + b
+    return jax.nn.relu(y) if activate else y
+
+
+# ---------------------------------------------------------------------------
+# flash attention (GQA + causal + sliding window)
+# ---------------------------------------------------------------------------
+
+def mha_ref(q: Array, k: Array, v: Array, *, causal: bool = True,
+            window: Optional[int] = None, q_offset: int = 0,
+            scale: Optional[float] = None) -> Array:
+    """Reference attention.
+
+    q: [B, Hq, Sq, D]; k, v: [B, Hkv, Skv, D] with Hq % Hkv == 0.
+    ``q_offset``: absolute position of q[0] (for decode: Skv - Sq).
+    ``window``: sliding-window size (None = full).
+    """
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    scale = (d ** -0.5) if scale is None else scale
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * scale
+    skv = k.shape[2]
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32))
+    return out.astype(q.dtype)

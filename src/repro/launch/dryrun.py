@@ -1,0 +1,225 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first
+# init.  (Tests may shrink the placeholder count via REPRO_DRYRUN_DEVICES
+# before importing this module.)
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_DRYRUN_DEVICES"])
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod over
+     512 placeholder host devices),
+  2. lowers the step function with ShapeDtypeStruct inputs (zero allocation)
+     and compiles it — sharding mismatches / OOM-at-compile / unsupported
+     collectives fail HERE, which is the point of the exercise,
+  3. records memory_analysis(), cost_analysis() and the collective-op
+     inventory parsed from the optimized HLO into a JSON cell record that
+     EXPERIMENTS.md §Dry-run / §Roofline and benchmarks/roofline.py consume.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all          # every runnable cell, cached
+"""
+import argparse
+import gzip
+import json
+import re
+import sys
+import time
+import traceback
+
+import numpy as np
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "experiments", "dryrun")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[8,128]{1,0}' or tuple '(f32[2]{0}, f32[4]{0})' -> bytes."""
+    total = 0
+    for m in re.finditer(r"(\w+)\[([\d,]*)\]", shape_str):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum output bytes per collective kind from optimized HLO text.
+
+    Async pairs (-start/-done) are counted once (the -start carries the
+    shape).  Bytes are the op's OUTPUT tensor size; benchmarks/roofline.py
+    applies the per-algorithm wire factors ((n-1)/n rings, 2x for
+    all-reduce)."""
+    stats = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?[\w.\-]+ = (.+?) (all-reduce|all-gather|"
+                     r"reduce-scatter|all-to-all|collective-permute)"
+                     r"(-start)?\(", line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        if "-done" in line.split("=")[1][:60]:
+            continue
+        stats[kind]["count"] += 1
+        stats[kind]["bytes"] += _shape_bytes(shape_str)
+    stats["total_bytes"] = int(sum(v["bytes"] for v in stats.values()
+                                   if isinstance(v, dict)))
+    return stats
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             verbose: bool = True) -> dict:
+    import jax
+    from repro.configs import lm_archs
+    from repro.launch import mesh as mesh_mod, steps
+
+    cfg = lm_archs.get(arch)
+    shape = steps.SHAPES[shape_name]
+    ok, reason = steps.cell_runnable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "status": "skipped", "reason": reason}
+
+    mesh = mesh_mod.make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_dev = mesh_mod.mesh_devices(mesh)
+    t0 = time.time()
+    fn, args = steps.build_cell(cfg, shape, mesh)
+    with mesh:
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    record = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "devices": n_dev, "status": "ok",
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+    }
+    try:
+        ma = compiled.memory_analysis()
+        record["memory_analysis"] = {
+            k: int(getattr(ma, k)) for k in (
+                "argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(ma, k)}
+    except Exception as e:  # noqa: BLE001 — backend-dependent availability
+        record["memory_analysis"] = {"error": str(e)}
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        record["cost_analysis"] = {
+            k: float(v) for k, v in ca.items()
+            if isinstance(v, (int, float)) and (
+                k in ("flops", "bytes accessed", "optimal_seconds")
+                or k.startswith("bytes accessed"))}
+    except Exception as e:  # noqa: BLE001
+        record["cost_analysis"] = {"error": str(e)}
+    try:
+        hlo = compiled.as_text()
+        record["collectives"] = parse_collectives(hlo)
+        record["hlo_bytes"] = len(hlo)
+        # loop-corrected structural analysis (benchmarks/hlo_analysis):
+        # cost_analysis() counts while bodies once; the walker multiplies
+        # through trip counts, giving true per-device totals.
+        sys.path.insert(0, os.path.join(os.path.dirname(__file__),
+                                        "..", "..", ".."))
+        from benchmarks import hlo_analysis
+        tot = hlo_analysis.analyze(hlo)
+        record["analysis"] = {
+            "dot_flops_per_device": tot.flops,
+            "collective_bytes_per_device": dict(tot.collective_bytes),
+            "collective_counts": dict(tot.collective_counts),
+        }
+        hlo_dir = os.path.join(RESULTS_DIR, "hlo")
+        os.makedirs(hlo_dir, exist_ok=True)
+        with gzip.open(os.path.join(
+                hlo_dir, f"{arch}__{shape_name}__{mesh_kind}.txt.gz"),
+                "wt") as f:
+            f.write(hlo)
+    except Exception as e:  # noqa: BLE001
+        record["collectives"] = {"error": str(e)}
+    if verbose:
+        print(json.dumps(record, indent=2))
+        try:
+            print(compiled.memory_analysis())
+        except Exception:
+            pass
+    return record
+
+
+def cell_path(arch: str, shape: str, mesh_kind: str) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    return os.path.join(RESULTS_DIR, f"{arch}__{shape}__{mesh_kind}.json")
+
+
+def run_and_save(arch: str, shape: str, mesh_kind: str,
+                 force: bool = False) -> dict:
+    path = cell_path(arch, shape, mesh_kind)
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            rec = json.load(f)
+        fresh = rec.get("status") == "skipped" or "analysis" in rec
+        if rec.get("status") in ("ok", "skipped") and fresh:
+            print(f"[cached] {arch} {shape} {mesh_kind}: {rec['status']}")
+            return rec
+    try:
+        rec = run_cell(arch, shape, mesh_kind)
+    except Exception as e:  # noqa: BLE001
+        rec = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+               "status": "error", "error": str(e),
+               "traceback": traceback.format_exc()}
+        print(rec["traceback"], file=sys.stderr)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=2)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs import lm_archs
+    from repro.launch import steps
+
+    if args.all:
+        failures = 0
+        for arch in lm_archs.ARCHS:
+            for shape in steps.SHAPES:
+                for mesh_kind in ("single", "multi"):
+                    rec = run_and_save(arch, shape, mesh_kind,
+                                       force=args.force)
+                    if rec["status"] == "error":
+                        failures += 1
+        sys.exit(1 if failures else 0)
+
+    rec = run_and_save(args.arch, args.shape, args.mesh, force=args.force)
+    sys.exit(0 if rec["status"] in ("ok", "skipped") else 1)
+
+
+if __name__ == "__main__":
+    main()

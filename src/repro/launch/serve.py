@@ -1,0 +1,43 @@
+"""Framework serving entry point (continuous batching engine).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --smoke \
+        --requests 8
+"""
+import argparse
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import lm_archs
+from repro.models import lm
+from repro.serve.engine import Request, ServeEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list(lm_archs.ARCHS))
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--context", type=int, default=128)
+    ap.add_argument("--max-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(lm_archs.smoke(args.arch), remat=False)
+    if cfg.is_enc_dec:
+        raise SystemExit("serve targets decoder-only archs")
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(cfg, params, slots=args.slots, context=args.context)
+    g = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=g.integers(0, cfg.vocab, 8).astype(
+        np.int32), max_tokens=args.max_tokens)
+        for i in range(args.requests)]
+    done = eng.run(reqs)
+    for r in sorted(done, key=lambda r: r.rid):
+        print(f"req {r.rid}: {r.out_tokens}")
+    print(f"{eng.stats.tokens_out} tokens, {eng.stats.decode_steps} ticks")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,267 @@
+"""Step builders: jitted train / prefill / decode steps with shardings.
+
+Everything the dry-run, the trainer, and the serving engine need to lower a
+(architecture x input-shape x mesh) cell lives here:
+  * abstract argument trees (ShapeDtypeStruct — no allocation),
+  * in/out sharding trees (dist.sharding rules),
+  * the step functions themselves.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.dist import act_sharding, sharding as shd
+from repro.models import lm, whisper
+from repro.models.config import ArchConfig
+from repro.train import losses, optim
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def cell_runnable(cfg: ArchConfig, shape: ShapeSpec) -> Tuple[bool, str]:
+    """DESIGN.md §5 skip table."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("pure full-attention arch: 500k decode reserved for "
+                       "sub-quadratic archs (SWA/SSM/hybrid)")
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# parameter / optimizer / batch structure (abstract or concrete)
+# ---------------------------------------------------------------------------
+
+def init_fn(cfg: ArchConfig):
+    if cfg.is_enc_dec:
+        return functools.partial(whisper.init_params, cfg=cfg)
+    return functools.partial(lm.init_params, cfg=cfg)
+
+
+def abstract_params(cfg: ArchConfig, *, serve: bool = False) -> Any:
+    tree = jax.eval_shape(lambda k: init_fn(cfg)(k),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+    if serve:  # serving deployments load bf16 weights (half the HBM)
+        tree = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, jnp.bfloat16)
+            if a.dtype == jnp.float32 else a, tree)
+    return tree
+
+
+def abstract_opt_state(params: Any) -> optim.AdamWState:
+    return jax.eval_shape(optim.adamw_init, params)
+
+
+def param_spec_tree(cfg: ArchConfig) -> Any:
+    if cfg.is_enc_dec:
+        return shd.whisper_param_specs(cfg)
+    return shd.param_specs(cfg)
+
+
+def opt_spec_tree(cfg: ArchConfig, pspecs: Any) -> optim.AdamWState:
+    return optim.AdamWState(step=P(), m=pspecs, v=pspecs)
+
+
+def batch_structs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    out = {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+    }
+    if cfg.is_enc_dec:
+        out["audio_embed"] = jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                                  jnp.float32)
+    return out
+
+
+def batch_specs(cfg: ArchConfig, mesh: Mesh) -> Dict[str, Any]:
+    dp = shd.dp_axes(mesh)
+    out = {"tokens": P(dp, None), "labels": P(dp, None)}
+    if cfg.is_enc_dec:
+        out["audio_embed"] = P(dp, None, None)
+    return out
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell
+    (weak-type-correct, shardable, no device allocation)."""
+    if shape.kind == "train":
+        return batch_structs(cfg, shape)
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "prefill":
+        out = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        if cfg.is_enc_dec:
+            out["audio_embed"] = jax.ShapeDtypeStruct(
+                (b, s, cfg.d_model), jnp.float32)
+        return out
+    # decode: one new token + cache of seq_len
+    out = {
+        "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        "cache": abstract_cache(cfg, b, s),
+    }
+    return out
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, context: int) -> Any:
+    if cfg.is_enc_dec:
+        return jax.eval_shape(
+            lambda: whisper.init_decode_cache(None, cfg, batch, context))
+    return jax.eval_shape(
+        lambda: lm.init_decode_cache(None, cfg, batch, context))
+
+
+def cache_spec_tree(cfg: ArchConfig, mesh: Mesh, batch: int) -> Any:
+    if cfg.is_enc_dec:
+        return shd.whisper_cache_specs(cfg, mesh, batch)
+    return shd.cache_specs(cfg, mesh, batch)
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ArchConfig, *, opt_cfg: Optional[optim.AdamWConfig]
+                    = None, aux_weight: float = 0.01):
+    ocfg = opt_cfg or optim.AdamWConfig(lr=3e-4, weight_decay=0.1)
+
+    def loss_fn(params, batch):
+        if cfg.is_enc_dec:
+            hidden, aux = whisper.forward_train(params, cfg,
+                                                batch["audio_embed"],
+                                                batch["tokens"])
+            head = params["lm_head"]
+        else:
+            hidden, aux = lm.forward_train(params, cfg, batch["tokens"])
+            head = (params["embed"].T if cfg.tie_embeddings
+                    else params["lm_head"])
+        loss, count = losses.chunked_cross_entropy(
+            hidden, head, batch["labels"], vocab=cfg.vocab,
+            chunk=cfg.loss_chunk)
+        return loss + aux_weight * aux, (loss, count)
+
+    def train_step(params, opt_state, batch):
+        grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+        (total, (loss, count)), grads = grad_fn(params, batch)
+        new_params, new_opt, om = optim.adamw_update(ocfg, grads, opt_state,
+                                                     params)
+        metrics = {"loss": loss, "total_loss": total, "tokens": count,
+                   **om}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, context: int):
+    if cfg.is_enc_dec:
+        def prefill_step(params, tokens, audio_embed):
+            return whisper.prefill(params, cfg, audio_embed, tokens, context)
+    else:
+        def prefill_step(params, tokens):
+            return lm.prefill(params, cfg, tokens, context)
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig):
+    if cfg.is_enc_dec:
+        def decode_step(params, cache, tokens):
+            return whisper.decode_step(params, cfg, cache, tokens)
+    else:
+        def decode_step(params, cache, tokens):
+            return lm.decode_step(params, cfg, cache, tokens)
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# jit assembly for one (cfg, shape, mesh) cell
+# ---------------------------------------------------------------------------
+
+def _with_rules(fn, mesh: Mesh):
+    """Wrap a step fn so activation-sharding rules are active at trace
+    time (with_sharding_constraint hints bind during tracing)."""
+    @functools.wraps(fn)
+    def wrapped(*args, **kw):
+        with act_sharding.activation_rules(mesh):
+            return fn(*args, **kw)
+    return wrapped
+
+
+def build_cell(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh):
+    """Returns (jitted fn, tuple of abstract args) ready to .lower()."""
+    pspecs = param_spec_tree(cfg)
+    psh = shd.to_shardings(mesh, pspecs)
+    params_abs = abstract_params(cfg, serve=shape.kind != "train")
+    dp = shd.dp_axes(mesh)
+
+    if shape.kind == "train":
+        ospecs = opt_spec_tree(cfg, pspecs)
+        osh = shd.to_shardings(mesh, ospecs)
+        bspecs = batch_specs(cfg, mesh)
+        bsh = shd.to_shardings(mesh, bspecs)
+        fn = jax.jit(_with_rules(make_train_step(cfg), mesh),
+                     in_shardings=(psh, osh, bsh),
+                     out_shardings=(psh, osh, None))
+        args = (params_abs, abstract_opt_state(params_abs),
+                batch_structs(cfg, shape))
+        return fn, args
+
+    if shape.kind == "prefill":
+        cache_specs_ = cache_spec_tree(cfg, mesh, shape.global_batch)
+        csh = shd.to_shardings(mesh, cache_specs_)
+        logits_sh = NamedSharding(mesh, P(dp, "model"))
+        tok = jax.ShapeDtypeStruct((shape.global_batch, shape.seq_len),
+                                   jnp.int32)
+        tok_sh = NamedSharding(mesh, P(dp, None))
+        if cfg.is_enc_dec:
+            audio = jax.ShapeDtypeStruct(
+                (shape.global_batch, shape.seq_len, cfg.d_model),
+                jnp.float32)
+            audio_sh = NamedSharding(mesh, P(dp, None, None))
+            fn = jax.jit(_with_rules(make_prefill_step(cfg, shape.seq_len),
+                                     mesh),
+                         in_shardings=(psh, tok_sh, audio_sh),
+                         out_shardings=(logits_sh, csh))
+            return fn, (params_abs, tok, audio)
+        fn = jax.jit(_with_rules(make_prefill_step(cfg, shape.seq_len),
+                                 mesh),
+                     in_shardings=(psh, tok_sh),
+                     out_shardings=(logits_sh, csh))
+        return fn, (params_abs, tok)
+
+    # decode
+    b = shape.global_batch
+    cache_specs_ = cache_spec_tree(cfg, mesh, b)
+    csh = shd.to_shardings(mesh, cache_specs_)
+    cache_abs = abstract_cache(cfg, b, shape.seq_len)
+    dp_count = 1
+    for a in dp:
+        dp_count *= mesh.shape[a]
+    tok_spec = P(dp, None) if b % dp_count == 0 and b >= dp_count \
+        else P(None, None)
+    tok_sh = NamedSharding(mesh, tok_spec)
+    logits_sh = NamedSharding(mesh, P(tok_spec[0], "model"))
+    tok = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    fn = jax.jit(_with_rules(make_decode_step(cfg), mesh),
+                 in_shardings=(psh, csh, tok_sh),
+                 out_shardings=(logits_sh, csh),
+                 donate_argnums=(1,))
+    return fn, (params_abs, cache_abs, tok)

@@ -1,0 +1,77 @@
+"""Framework training entry point.
+
+    PYTHONPATH=src python -m repro.launch.train --arch gemma-2b --smoke \
+        --steps 50 [--mesh 1,1] [--ckpt-dir DIR]
+
+Full-size configs require real accelerators; --smoke runs the reduced
+family config through the identical pjit path on the local device(s).
+"""
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import lm_archs
+from repro.data import tokens
+from repro.dist import sharding as shd
+from repro.launch import mesh as mesh_mod, steps
+from repro.train import loop as train_loop, optim
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list(lm_archs.ARCHS))
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--mesh", default=None,
+                    help="data,model (default: 1,1 local)")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--remat-group", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = lm_archs.smoke(args.arch) if args.smoke else lm_archs.get(args.arch)
+    cfg = dataclasses.replace(cfg, remat_group=args.remat_group,
+                              loss_chunk=min(cfg.loss_chunk, args.seq))
+    if args.mesh:
+        shape = tuple(int(x) for x in args.mesh.split(","))
+        mesh = mesh_mod.make_mesh(shape, ("data", "model"))
+    else:
+        mesh = mesh_mod.make_host_mesh()
+
+    psh = shd.to_shardings(mesh, steps.param_spec_tree(cfg))
+    with mesh:
+        params = jax.jit(steps.init_fn(cfg), out_shardings=psh)(
+            jax.random.PRNGKey(0))
+    opt_state = optim.adamw_init(params)
+    ocfg = optim.AdamWConfig(lr=args.lr, weight_decay=0.1,
+                             schedule=optim.cosine_schedule(args.steps,
+                                                            warmup=10))
+    step_fn = jax.jit(steps.make_train_step(cfg, opt_cfg=ocfg))
+    corpus = tokens.SyntheticCorpus(tokens.TokenPipelineConfig(
+        vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch))
+
+    def batch_fn(step):
+        toks = jnp.asarray(corpus.sample_batch(step, args.batch))
+        b = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+        if cfg.is_enc_dec:
+            b["audio_embed"] = jax.random.normal(
+                jax.random.PRNGKey(step), (args.batch, args.seq, cfg.d_model))
+        return b
+
+    def log(step, m):
+        print(f"step {step:5d} loss {m['loss']:.4f} "
+              f"({m['step_time_s'] * 1e3:.0f} ms)")
+
+    state = train_loop.LoopState(params=params, opt_state=opt_state)
+    lcfg = train_loop.LoopConfig(total_steps=args.steps,
+                                 ckpt_dir=args.ckpt_dir, log_every=10)
+    with mesh:
+        train_loop.run(lcfg, state, step_fn, batch_fn, log)
+
+
+if __name__ == "__main__":
+    main()

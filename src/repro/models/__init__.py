@@ -1,0 +1,2 @@
+"""LM substrate: configs, layers, attention, FFN/MoE, RWKV6, SSM, whisper."""
+from repro.models.config import ArchConfig  # noqa: F401

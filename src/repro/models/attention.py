@@ -1,0 +1,311 @@
+"""GQA attention: blockwise-flash training path + ring-buffer decode path.
+
+Pure-JAX formulation used by every arch (the Pallas flash kernel in
+``repro.kernels`` is the TPU drop-in; the scan form below lowers cleanly
+under pjit/SPMD for the multi-pod dry-run and has the same online-softmax
+structure, so the HLO roofline is representative).
+
+GQA is computed in the grouped layout [B, Hkv, G, S, D] — KV is never
+repeated, which matters both for HBM traffic and for TP sharding.
+
+KV caches are ring buffers of length ``window`` (SWA archs) or the max
+context (full attention): slot(p) = p % W, with stored absolute positions
+providing the validity/causality mask.  This is the production decode
+layout — SWA decode cost is O(window), independent of context, which is
+what makes the 500k-context cells feasible (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.act_sharding import constrain
+from repro.models import layers
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    causal: bool = True
+    window: Optional[int] = None
+    rope: bool = True
+    rope_theta: float = 10_000.0
+    block_k: int = 512  # flash KV block
+
+
+def init_attention(rng: Array, spec: AttnSpec, n_layers: int) -> dict:
+    ks = jax.random.split(rng, 4)
+    d, h, hk, hd = spec.d_model, spec.n_heads, spec.n_kv_heads, spec.head_dim
+    p = {
+        "wq": layers.he_init(ks[0], (n_layers, d, h * hd)),
+        "wk": layers.he_init(ks[1], (n_layers, d, hk * hd)),
+        "wv": layers.he_init(ks[2], (n_layers, d, hk * hd)),
+        "wo": layers.he_init(ks[3], (n_layers, h * hd, d)),
+    }
+    if spec.qkv_bias:
+        p["bq"] = jnp.zeros((n_layers, h * hd))
+        p["bk"] = jnp.zeros((n_layers, hk * hd))
+        p["bv"] = jnp.zeros((n_layers, hk * hd))
+    if spec.qk_norm:
+        p["q_norm"] = jnp.ones((n_layers, hd))
+        p["k_norm"] = jnp.ones((n_layers, hd))
+    return p
+
+
+def _project_qkv(pl_: dict, spec: AttnSpec, x: Array, positions: Array,
+                 freqs: Optional[Array]) -> Tuple[Array, Array, Array]:
+    """x: [B, S, D] -> q [B,Hkv,G,S,hd], k/v [B,Hkv,S,hd]."""
+    b, s, _ = x.shape
+    h, hk, hd = spec.n_heads, spec.n_kv_heads, spec.head_dim
+    g = h // hk
+    dt = x.dtype
+    q = x @ pl_["wq"].astype(dt)
+    k = x @ pl_["wk"].astype(dt)
+    v = x @ pl_["wv"].astype(dt)
+    if spec.qkv_bias:
+        q = q + pl_["bq"].astype(dt)
+        k = k + pl_["bk"].astype(dt)
+        v = v + pl_["bv"].astype(dt)
+    q = q.reshape(b, s, hk, g, hd).transpose(0, 2, 3, 1, 4)  # [B,Hkv,G,S,hd]
+    k = k.reshape(b, s, hk, hd).transpose(0, 2, 1, 3)        # [B,Hkv,S,hd]
+    v = v.reshape(b, s, hk, hd).transpose(0, 2, 1, 3)
+    # sequence-parallel attention layout (see dist.act_sharding docstring);
+    # constrained BEFORE rope/qk-norm so no elementwise op inherits the
+    # flattened-projection sharding (involuntary-remat copies otherwise).
+    q = constrain(q, "batch", "heads", None, "act_seq", None)
+    k = constrain(k, "batch", "heads", None, None)
+    v = constrain(v, "batch", "heads", None, None)
+    if spec.qk_norm:
+        q = layers.rms_norm(q, pl_["q_norm"])
+        k = layers.rms_norm(k, pl_["k_norm"])
+    if spec.rope and freqs is not None:
+        q = layers.apply_rope(q, positions[None, None, None], freqs)
+        k = layers.apply_rope(k, positions[None, None], freqs)
+        q = constrain(q, "batch", "heads", None, "act_seq", None)
+        k = constrain(k, "batch", "heads", None, None)
+    return q, k, v
+
+
+def flash_scan(q: Array, k: Array, v: Array, *, causal: bool,
+               window: Optional[int], q_positions: Array,
+               k_positions: Array, block_k: int) -> Array:
+    """Online-softmax attention, scanning KV blocks.
+
+    The KV-block body is ``jax.checkpoint``-wrapped so the scan transpose
+    saves only the (m, l, acc) carries per block — the [.., Sq, block_k]
+    score/softmax tensors are recomputed in backward instead of being saved
+    as 8-step stacks (12 GiB/device on qwen2-72b train_4k, see §Perf).
+
+    q: [B,Hkv,G,Sq,hd]; k/v: [B,Hkv,Skv,hd]; positions are absolute.
+    Returns [B,Hkv,G,Sq,hd] in q.dtype.
+    """
+    b, hk, g, sq, hd = q.shape
+    skv = k.shape[2]
+    block_k = min(block_k, skv)
+    pad = (-skv) % block_k
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k_positions = jnp.pad(k_positions, (0, pad), constant_values=-1)
+    nb = k.shape[2] // block_k
+    scale = hd ** -0.5
+    # operands stay bf16; the MXU accumulates in f32 via
+    # preferred_element_type — no f32 materialization of Q/K/V (SPerf C:
+    # the hoisted f32 converts were all-gathered at 2x the bytes).
+    qf = q * jnp.asarray(scale, q.dtype)
+
+    kb = k.reshape(b, hk, nb, block_k, hd).transpose(2, 0, 1, 3, 4)
+    vb = v.reshape(b, hk, nb, block_k, hd).transpose(2, 0, 1, 3, 4)
+    pb = k_positions.reshape(nb, block_k)
+
+    def body(carry, blk):
+        m, l, acc = carry
+        kblk, vblk, kpos = blk
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kblk,
+                       preferred_element_type=jnp.float32)
+        s = constrain(s, "batch", "heads", None, "act_seq", None)
+        valid = kpos >= 0
+        mask = valid[None, None, None, None, :]
+        if causal:
+            mask = mask & (kpos[None, None, None, None, :]
+                           <= q_positions[None, None, None, :, None])
+        if window is not None:
+            mask = mask & (kpos[None, None, None, None, :]
+                           > q_positions[None, None, None, :, None] - window)
+        s = jnp.where(mask, s, -1e30)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = (acc * alpha[..., None]
+                   + jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(vblk.dtype),
+                                vblk, preferred_element_type=jnp.float32))
+        m_new = constrain(m_new, "batch", "heads", None, "act_seq")
+        l_new = constrain(l_new, "batch", "heads", None, "act_seq")
+        acc_new = constrain(acc_new, "batch", "heads", None, "act_seq", None)
+        return (m_new, l_new, acc_new), None
+
+    body = jax.checkpoint(body,
+                          policy=jax.checkpoint_policies.nothing_saveable)
+    m0 = constrain(jnp.full((b, hk, g, sq), -1e30, jnp.float32),
+                   "batch", "heads", None, "act_seq")
+    l0 = constrain(jnp.zeros((b, hk, g, sq), jnp.float32),
+                   "batch", "heads", None, "act_seq")
+    a0 = constrain(jnp.zeros((b, hk, g, sq, hd), jnp.float32),
+                   "batch", "heads", None, "act_seq", None)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kb, vb, pb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = constrain(out, "batch", "heads", None, "act_seq", None)
+    return out.astype(q.dtype)
+
+
+def _merge_heads(o: Array) -> Array:
+    """[B,Hkv,G,S,hd] -> [B,S,H*hd]."""
+    b, hk, g, s, hd = o.shape
+    return o.transpose(0, 3, 1, 2, 4).reshape(b, s, hk * g * hd)
+
+
+def attention_train(pl_: dict, spec: AttnSpec, x: Array,
+                    positions: Array, freqs: Optional[Array]) -> Array:
+    """Full-sequence attention (training / prefill compute). x: [B,S,D]."""
+    q, k, v = _project_qkv(pl_, spec, x, positions, freqs)
+    o = flash_scan(q, k, v, causal=spec.causal, window=spec.window,
+                   q_positions=positions, k_positions=positions,
+                   block_k=spec.block_k)
+    return _merge_heads(o) @ pl_["wo"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV cache (ring buffer)
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: Array          # [B, Hkv, W, hd]   (per layer; stacked [L, ...] outside)
+    v: Array          # [B, Hkv, W, hd]
+
+
+def cache_length(spec: AttnSpec, context: int) -> int:
+    return min(context, spec.window) if spec.window else context
+
+
+def init_cache(spec: AttnSpec, batch: int, context: int,
+               dtype=jnp.bfloat16) -> KVCache:
+    w = cache_length(spec, context)
+    shape = (batch, spec.n_kv_heads, w, spec.head_dim)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+def prefill_to_cache(spec: AttnSpec, k: Array, v: Array, seq_len: int,
+                     context: int) -> KVCache:
+    """Pack full-sequence K/V [B,Hkv,S,hd] into the ring cache."""
+    w = cache_length(spec, context)
+    if seq_len >= w:
+        k_last = k[:, :, seq_len - w:]
+        v_last = v[:, :, seq_len - w:]
+        shift = (seq_len - w) % w
+        k_r = jnp.roll(k_last, shift, axis=2)
+        v_r = jnp.roll(v_last, shift, axis=2)
+    else:
+        pad = w - seq_len
+        k_r = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v_r = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    return KVCache(k=k_r, v=v_r)
+
+
+def cache_positions(seq_len: int, w: int) -> Array:
+    """Absolute positions stored in each ring slot after prefill ([-1] =
+    empty).  Shared across layers and batch."""
+    slots = jnp.arange(w)
+    if seq_len >= w:
+        base = seq_len - w
+        # slot s holds position p with p % w == s and p in [base, seq_len)
+        pos = base + ((slots - base % w) % w)
+    else:
+        pos = jnp.where(slots < seq_len, slots, -1)
+    return pos.astype(jnp.int32)
+
+
+def attention_prefill(pl_: dict, spec: AttnSpec, x: Array, positions: Array,
+                      freqs: Optional[Array], context: int
+                      ) -> Tuple[Array, KVCache]:
+    q, k, v = _project_qkv(pl_, spec, x, positions, freqs)
+    o = flash_scan(q, k, v, causal=spec.causal, window=spec.window,
+                   q_positions=positions, k_positions=positions,
+                   block_k=spec.block_k)
+    cache = prefill_to_cache(spec, k, v, x.shape[1], context)
+    return _merge_heads(o) @ pl_["wo"].astype(x.dtype), cache
+
+
+def attention_decode(pl_: dict, spec: AttnSpec, x: Array, pos: Array,
+                     freqs: Optional[Array], cache: KVCache,
+                     slot_positions: Array) -> Tuple[Array, KVCache]:
+    """One-token decode. x: [B,1,D]; pos: scalar int32 (absolute position);
+    slot_positions: [W] absolute position stored in each ring slot (after
+    this token's update)."""
+    b = x.shape[0]
+    q, k, v = _project_qkv(pl_, spec, x, pos[None], freqs)
+    w = cache.k.shape[2]
+    slot = pos % w
+    k_new = jax.lax.dynamic_update_index_in_dim(cache.k, k[:, :, 0], slot,
+                                                axis=2)
+    v_new = jax.lax.dynamic_update_index_in_dim(cache.v, v[:, :, 0], slot,
+                                                axis=2)
+    scale = spec.head_dim ** -0.5
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", q.astype(jnp.float32) * scale,
+                   k_new.astype(jnp.float32))
+    valid = slot_positions >= 0
+    mask = valid & (slot_positions <= pos)
+    if spec.window is not None:
+        mask = mask & (slot_positions > pos - spec.window)
+    s = jnp.where(mask[None, None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v_new.astype(jnp.float32))
+    o = _merge_heads(o.astype(x.dtype))
+    return o @ pl_["wo"].astype(x.dtype), KVCache(k=k_new, v=v_new)
+
+
+def cross_attention(pl_: dict, spec: AttnSpec, x: Array, k: Array, v: Array
+                    ) -> Array:
+    """Encoder-decoder cross attention (whisper). k/v precomputed
+    [B,Hkv,S_enc,hd]; no mask (full visibility), no rope."""
+    b, s, _ = x.shape
+    h, hk, hd = spec.n_heads, spec.n_kv_heads, spec.head_dim
+    g = h // hk
+    dt = x.dtype
+    q = (x @ pl_["wq"].astype(dt))
+    if spec.qkv_bias:
+        q = q + pl_["bq"].astype(dt)
+    q = q.reshape(b, s, hk, g, hd).transpose(0, 2, 3, 1, 4)
+    skv = k.shape[2]
+    kpos = jnp.arange(skv, dtype=jnp.int32)
+    qpos = jnp.full((s,), skv, jnp.int32)  # no causal restriction
+    o = flash_scan(q, k, v, causal=False, window=None, q_positions=qpos,
+                   k_positions=kpos, block_k=spec.block_k)
+    return _merge_heads(o) @ pl_["wo"].astype(dt)
+
+
+def project_kv(pl_: dict, spec: AttnSpec, x: Array) -> Tuple[Array, Array]:
+    """K/V projection only (cross-attention source). x: [B,S,D]."""
+    b, s, _ = x.shape
+    hk, hd = spec.n_kv_heads, spec.head_dim
+    dt = x.dtype
+    k = x @ pl_["wk"].astype(dt)
+    v = x @ pl_["wv"].astype(dt)
+    if spec.qkv_bias:
+        k = k + pl_["bk"].astype(dt)
+        v = v + pl_["bv"].astype(dt)
+    k = k.reshape(b, s, hk, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, hk, hd).transpose(0, 2, 1, 3)
+    return k, v

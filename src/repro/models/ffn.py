@@ -1,0 +1,43 @@
+"""Feed-forward blocks: gated (SwiGLU / GeGLU) and plain (squared-ReLU)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class FFNSpec:
+    d_model: int
+    d_ff: int
+    act: str = "silu"     # silu -> SwiGLU, gelu -> GeGLU, relu2 -> plain
+    gated: bool = True
+
+
+def init_ffn(rng: Array, spec: FFNSpec, n_layers: int) -> dict:
+    ks = jax.random.split(rng, 3)
+    d, f = spec.d_model, spec.d_ff
+    p = {
+        "w_up": layers.he_init(ks[0], (n_layers, d, f)),
+        "w_down": layers.he_init(ks[1], (n_layers, f, d)),
+    }
+    if spec.gated:
+        p["w_gate"] = layers.he_init(ks[2], (n_layers, d, f))
+    return p
+
+
+def apply_ffn(pl_: dict, spec: FFNSpec, x: Array) -> Array:
+    dt = x.dtype
+    act = layers.activation(spec.act)
+    up = x @ pl_["w_up"].astype(dt)
+    if spec.gated:
+        gate = act(x @ pl_["w_gate"].astype(dt))
+        h = gate * up
+    else:
+        h = act(up)
+    return h @ pl_["w_down"].astype(dt)

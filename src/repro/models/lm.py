@@ -1,0 +1,399 @@
+"""Generic causal LM covering dense / MoE / SSM (RWKV6) / hybrid / VLM archs.
+
+Single code path, three lowering modes:
+  * ``train``   — full-sequence forward, returns hidden states for the
+                  chunked-CE loss (no logits materialization);
+  * ``prefill`` — full-sequence forward that also emits the ring KV cache
+                  (and SSM/RWKV states) + last-position logits;
+  * ``decode``  — one-token step consuming/updating the cache.
+
+The layer stack lowers as ONE ``jax.lax.scan`` over stacked parameters
+(optionally ``jax.checkpoint``-wrapped for remat), which keeps the HLO small
+enough that 80-layer/72B-parameter configs compile quickly even on the
+512-device dry-run mesh.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.act_sharding import constrain
+from repro.models import attention, ffn, layers, moe, rwkv, ssm
+from repro.models.attention import AttnSpec, KVCache
+from repro.models.config import ArchConfig
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# spec builders
+# ---------------------------------------------------------------------------
+
+def attn_spec(cfg: ArchConfig, *, causal: bool = True) -> AttnSpec:
+    return AttnSpec(
+        d_model=cfg.d_model, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.head_dim_, qkv_bias=cfg.qkv_bias, qk_norm=cfg.qk_norm,
+        causal=causal, window=cfg.window, rope_theta=cfg.rope_theta,
+        block_k=cfg.flash_block_k)
+
+
+def ffn_spec(cfg: ArchConfig) -> ffn.FFNSpec:
+    return ffn.FFNSpec(d_model=cfg.d_model, d_ff=cfg.d_ff, act=cfg.act,
+                       gated=cfg.gated_ffn)
+
+
+def moe_spec(cfg: ArchConfig) -> moe.MoESpec:
+    return moe.MoESpec(d_model=cfg.d_model, d_ff=cfg.d_ff,
+                       n_experts=cfg.n_experts, top_k=cfg.top_k, act=cfg.act,
+                       gated=cfg.gated_ffn,
+                       capacity_factor=cfg.capacity_factor)
+
+
+def rwkv_spec(cfg: ArchConfig) -> rwkv.RWKVSpec:
+    return rwkv.RWKVSpec(d_model=cfg.d_model, n_heads=cfg.n_heads,
+                         d_ff=cfg.d_ff, chunk=cfg.rwkv_chunk)
+
+
+def ssm_spec(cfg: ArchConfig) -> ssm.SSMSpec:
+    return ssm.SSMSpec(d_model=cfg.d_model,
+                       d_inner=cfg.ssm_expand * cfg.d_model,
+                       d_state=cfg.ssm_state)
+
+
+def compute_dtype(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(rng: Array, cfg: ArchConfig) -> dict:
+    ks = jax.random.split(rng, 8)
+    vp, d, L = cfg.padded_vocab, cfg.d_model, cfg.n_layers
+    params: Dict[str, Any] = {
+        "embed": jax.random.normal(ks[0], (vp, d), jnp.float32) * 0.02,
+        "final_norm": jnp.ones((d,)),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = layers.he_init(ks[1], (d, vp))
+    blocks: Dict[str, Any] = {}
+    if cfg.family == "ssm":
+        blocks = rwkv.init_rwkv_layer(ks[2], rwkv_spec(cfg), L)
+    else:
+        blocks["ln1"] = jnp.ones((L, d))
+        blocks["ln2"] = jnp.ones((L, d))
+        blocks["attn"] = attention.init_attention(ks[2], attn_spec(cfg), L)
+        if cfg.family == "moe":
+            blocks["moe"] = moe.init_moe(ks[3], moe_spec(cfg), L)
+        else:
+            blocks["ffn"] = ffn.init_ffn(ks[3], ffn_spec(cfg), L)
+        if cfg.family == "hybrid":
+            blocks["ssm"] = ssm.init_ssm(ks[4], ssm_spec(cfg), L)
+    params["blocks"] = blocks
+    return params
+
+
+# ---------------------------------------------------------------------------
+# block bodies (one layer; scanned over the stacked leading axis)
+# ---------------------------------------------------------------------------
+
+def _mix_out(cfg: ArchConfig, pl_: dict, h: Array, attn_out: Array,
+             ssm_out: Optional[Array]) -> Array:
+    if ssm_out is None:
+        return attn_out
+    return 0.5 * (attn_out + ssm_out)  # hymba parallel heads (mean fusion)
+
+
+def _block_train(cfg: ArchConfig, pl_: dict, x: Array, positions: Array,
+                 freqs: Optional[Array]) -> Tuple[Array, Array]:
+    """One transformer block, training mode. Returns (x, aux_loss)."""
+    aspec = attn_spec(cfg)
+    h = layers.rms_norm(x, pl_["ln1"], plus_one=cfg.norm_plus_one)
+    attn_out = attention.attention_train(pl_["attn"], aspec, h, positions,
+                                         freqs)
+    ssm_out = None
+    if cfg.family == "hybrid":
+        ssm_out, _ = ssm.apply_ssm(
+            pl_["ssm"], ssm_spec(cfg), h,
+            ssm.init_state(ssm_spec(cfg), x.shape[0], h.dtype))
+    x = x + _mix_out(cfg, pl_, h, attn_out, ssm_out)
+    h2 = layers.rms_norm(x, pl_["ln2"], plus_one=cfg.norm_plus_one)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "moe":
+        out, aux = moe.apply_moe(pl_["moe"], moe_spec(cfg), h2)
+    else:
+        out = ffn.apply_ffn(pl_["ffn"], ffn_spec(cfg), h2)
+    return constrain(x + out, "batch", "act_seq", "embed"), aux
+
+
+def _block_prefill(cfg: ArchConfig, pl_: dict, x: Array, positions: Array,
+                   freqs: Optional[Array], context: int
+                   ) -> Tuple[Array, Any]:
+    aspec = attn_spec(cfg)
+    h = layers.rms_norm(x, pl_["ln1"], plus_one=cfg.norm_plus_one)
+    attn_out, kv = attention.attention_prefill(pl_["attn"], aspec, h,
+                                               positions, freqs, context)
+    ssm_out, ssm_state = None, None
+    if cfg.family == "hybrid":
+        ssm_out, ssm_state = ssm.apply_ssm(
+            pl_["ssm"], ssm_spec(cfg), h,
+            ssm.init_state(ssm_spec(cfg), x.shape[0], h.dtype))
+    x = x + _mix_out(cfg, pl_, h, attn_out, ssm_out)
+    h2 = layers.rms_norm(x, pl_["ln2"], plus_one=cfg.norm_plus_one)
+    if cfg.family == "moe":
+        out, _ = moe.apply_moe(pl_["moe"], moe_spec(cfg), h2)
+    else:
+        out = ffn.apply_ffn(pl_["ffn"], ffn_spec(cfg), h2)
+    return constrain(x + out, "batch", "act_seq", "embed"), (kv, ssm_state)
+
+
+def _block_decode(cfg: ArchConfig, pl_: dict, x: Array, pos: Array,
+                  freqs: Optional[Array], kv: KVCache, slot_pos: Array,
+                  ssm_state) -> Tuple[Array, KVCache, Any]:
+    aspec = attn_spec(cfg)
+    h = layers.rms_norm(x, pl_["ln1"], plus_one=cfg.norm_plus_one)
+    attn_out, kv_new = attention.attention_decode(pl_["attn"], aspec, h, pos,
+                                                  freqs, kv, slot_pos)
+    ssm_out, ssm_new = None, None
+    if cfg.family == "hybrid":
+        ssm_out, ssm_new = ssm.apply_ssm(pl_["ssm"], ssm_spec(cfg), h,
+                                         ssm_state)
+    x = x + _mix_out(cfg, pl_, h, attn_out, ssm_out)
+    h2 = layers.rms_norm(x, pl_["ln2"], plus_one=cfg.norm_plus_one)
+    if cfg.family == "moe":
+        out, _ = moe.apply_moe(pl_["moe"], moe_spec(cfg), h2)
+    else:
+        out = ffn.apply_ffn(pl_["ffn"], ffn_spec(cfg), h2)
+    return x + out, kv_new, ssm_new
+
+
+def _rwkv_train(cfg: ArchConfig, pl_: dict, x: Array, state: rwkv.RWKVState
+                ) -> Tuple[Array, rwkv.RWKVState]:
+    return rwkv.rwkv_block(pl_, rwkv_spec(cfg), x, state)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / head
+# ---------------------------------------------------------------------------
+
+def _embed(params: dict, cfg: ArchConfig, tokens: Array) -> Array:
+    dt = compute_dtype(cfg)
+    scale = cfg.d_model ** 0.5 if cfg.embed_scale else None
+    x = layers.embed_lookup(params["embed"], tokens, dtype=dt, scale=scale)
+    # Megatron-SP: the residual stream lives seq-sharded over the TP axis;
+    # XLA inserts the all-gather before qkv/ffn projections and the
+    # reduce-scatter after wo/w_down.  This is what keeps the per-layer
+    # scan carry (saved for backward) at [B, S/tp, D] instead of [B, S, D].
+    return constrain(x, "batch", "act_seq", "embed")
+
+
+def _head_matrix(params: dict, cfg: ArchConfig) -> Array:
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+def final_hidden(params: dict, cfg: ArchConfig, x: Array) -> Array:
+    return layers.rms_norm(x, params["final_norm"],
+                           plus_one=cfg.norm_plus_one)
+
+
+def logits_at(params: dict, cfg: ArchConfig, h: Array) -> Array:
+    """h: [..., D] -> [..., padded_vocab] fp32 logits (small positions only:
+    decode / last-token; training uses the chunked loss instead)."""
+    w = _head_matrix(params, cfg).astype(compute_dtype(cfg))
+    logits = (h @ w).astype(jnp.float32)
+    if cfg.padded_vocab != cfg.vocab:
+        pad = cfg.padded_vocab - cfg.vocab
+        mask = jnp.concatenate([jnp.zeros((cfg.vocab,), jnp.float32),
+                                jnp.full((pad,), -1e30, jnp.float32)])
+        logits = logits + mask
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+def _cast_blocks(cfg: ArchConfig, blocks):
+    """Cast stacked layer params to the compute dtype ONCE, before the
+    layer scan.  FSDP all-gathers then move bf16, not f32 — measured 433
+    GiB/device of f32 weight gathers on qwen2-72b train_4k (SPerf C)."""
+    dt = compute_dtype(cfg)
+
+    def cast(a):
+        if jnp.issubdtype(a.dtype, jnp.floating) and a.dtype != dt:
+            return a.astype(dt)
+        return a
+    return jax.tree.map(cast, blocks)
+
+
+def _scan_blocks(cfg: ArchConfig, body, x, xs):
+    if cfg.remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    k = cfg.remat_group
+    if k <= 1:
+        return jax.lax.scan(body, x, xs)
+    # two-level (sqrt-L) remat: outer scan saves the carry only every k
+    # layers; each group's forward is recomputed during backward.  Cuts the
+    # saved residual stack from [L, B, S/tp, D] to [L/k, ...] at the cost
+    # of one extra group-forward per backward (see EXPERIMENTS.md SPerf).
+    def group(x, xs_g):
+        return jax.lax.scan(body, x, xs_g)
+
+    group = jax.checkpoint(group,
+                           policy=jax.checkpoint_policies.nothing_saveable)
+    xs_grouped = jax.tree.map(
+        lambda a: a.reshape((a.shape[0] // k, k) + a.shape[1:]), xs)
+    return jax.lax.scan(group, x, xs_grouped)
+
+
+def forward_train(params: dict, cfg: ArchConfig, tokens: Array
+                  ) -> Tuple[Array, Array]:
+    """tokens [B, S] -> (final hidden [B, S, D], aux loss)."""
+    b, s = tokens.shape
+    x = _embed(params, cfg, tokens)
+    positions = jnp.arange(s, dtype=jnp.int32)
+    if cfg.family == "ssm":
+        state0 = rwkv.init_state(rwkv_spec(cfg), b, compute_dtype(cfg))
+
+        def body(x, pl_l):
+            y, _ = _rwkv_train(cfg, pl_l, x, state0)
+            return y, jnp.zeros((), jnp.float32)
+    else:
+        freqs = layers.rope_freqs(cfg.head_dim_, cfg.rope_theta)
+
+        def body(x, pl_l):
+            return _block_train(cfg, pl_l, x, positions, freqs)
+
+    x, aux = _scan_blocks(cfg, body, x, _cast_blocks(cfg, params["blocks"]))
+    return final_hidden(params, cfg, x), jnp.sum(aux)
+
+
+def init_decode_cache(params: dict, cfg: ArchConfig, batch: int,
+                      context: int) -> dict:
+    """Zeroed decode cache pytree (used for ShapeDtypeStruct specs too)."""
+    L = cfg.n_layers
+    dt = compute_dtype(cfg)
+    cache: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    if cfg.family != "ssm":
+        aspec = attn_spec(cfg)
+        w = attention.cache_length(aspec, context)
+        shape = (L, batch, cfg.n_kv_heads, w, cfg.head_dim_)
+        cache["kv_k"] = jnp.zeros(shape, dt)
+        cache["kv_v"] = jnp.zeros(shape, dt)
+        cache["slot_pos"] = jnp.full((w,), -1, jnp.int32)
+    if cfg.family == "hybrid":
+        sspec = ssm_spec(cfg)
+        cache["ssm_h"] = jnp.zeros((L, batch, sspec.d_inner, sspec.d_state),
+                                   jnp.float32)
+        cache["ssm_conv"] = jnp.zeros(
+            (L, batch, sspec.conv_kernel - 1, sspec.d_inner), dt)
+    if cfg.family == "ssm":
+        rspec = rwkv_spec(cfg)
+        h, hd = rspec.n_heads, rspec.head_dim
+        cache["rwkv_wkv"] = jnp.zeros((L, batch, h, hd, hd), jnp.float32)
+        cache["rwkv_tm"] = jnp.zeros((L, batch, cfg.d_model), dt)
+        cache["rwkv_cm"] = jnp.zeros((L, batch, cfg.d_model), dt)
+    return cache
+
+
+def prefill(params: dict, cfg: ArchConfig, tokens: Array, context: int
+            ) -> Tuple[Array, dict]:
+    """tokens [B, S] -> (last-token logits [B, vocab_p], decode cache)."""
+    b, s = tokens.shape
+    x = _embed(params, cfg, tokens)
+    positions = jnp.arange(s, dtype=jnp.int32)
+    cache = {"pos": jnp.asarray(s, jnp.int32)}
+    if cfg.family == "ssm":
+        state0 = rwkv.init_state(rwkv_spec(cfg), b, compute_dtype(cfg))
+
+        def body(x, pl_l):
+            y, st = _rwkv_train(cfg, pl_l, x, state0)
+            return y, st
+        x, states = _scan_blocks(cfg, body, x,
+                                 _cast_blocks(cfg, params["blocks"]))
+        cache["rwkv_wkv"] = states.wkv
+        cache["rwkv_tm"] = states.shift_tm
+        cache["rwkv_cm"] = states.shift_cm
+    else:
+        freqs = layers.rope_freqs(cfg.head_dim_, cfg.rope_theta)
+
+        def body(x, pl_l):
+            y, (kv, sst) = _block_prefill(cfg, pl_l, x, positions, freqs,
+                                          context)
+            extras = (kv, sst) if sst is not None else (kv,)
+            return y, extras
+        x, extras = _scan_blocks(cfg, body, x,
+                                 _cast_blocks(cfg, params["blocks"]))
+        kv = extras[0]
+        cache["kv_k"], cache["kv_v"] = kv.k, kv.v
+        aspec = attn_spec(cfg)
+        w = attention.cache_length(aspec, context)
+        cache["slot_pos"] = attention.cache_positions(s, w)
+        if cfg.family == "hybrid":
+            sst = extras[1]
+            cache["ssm_h"], cache["ssm_conv"] = sst.h, sst.conv
+    h_last = final_hidden(params, cfg, x[:, -1])
+    return logits_at(params, cfg, h_last), cache
+
+
+def decode_step(params: dict, cfg: ArchConfig, cache: dict, tokens: Array
+                ) -> Tuple[Array, dict]:
+    """tokens [B, 1] -> (logits [B, vocab_p], updated cache)."""
+    b = tokens.shape[0]
+    pos = cache["pos"]
+    x = _embed(params, cfg, tokens)
+    new_cache = dict(cache)
+    if cfg.family == "ssm":
+        def body(x, xs):
+            pl_l, wkv, tm, cm = xs
+            st = rwkv.RWKVState(wkv=wkv, shift_tm=tm, shift_cm=cm)
+            y, st_new = _rwkv_train(cfg, pl_l, x, st)
+            return y, (st_new.wkv, st_new.shift_tm, st_new.shift_cm)
+        x, (wkv, tm, cm) = _scan_blocks(
+            cfg, body, x, (_cast_blocks(cfg, params["blocks"]),
+                           cache["rwkv_wkv"],
+                           cache["rwkv_tm"], cache["rwkv_cm"]))
+        new_cache.update(rwkv_wkv=wkv, rwkv_tm=tm, rwkv_cm=cm)
+    else:
+        freqs = layers.rope_freqs(cfg.head_dim_, cfg.rope_theta)
+        w = cache["kv_k"].shape[3]
+        slot = pos % w
+        slot_pos = cache["slot_pos"].at[slot].set(pos)
+
+        if cfg.family == "hybrid":
+            def body(x, xs):
+                pl_l, k_l, v_l, h_l, conv_l = xs
+                kv = KVCache(k=k_l, v=v_l)
+                sst = ssm.SSMState(h=h_l, conv=conv_l)
+                y, kv_new, ssm_new = _block_decode(cfg, pl_l, x, pos, freqs,
+                                                   kv, slot_pos, sst)
+                return y, (kv_new.k, kv_new.v, ssm_new.h, ssm_new.conv)
+            x, (ck, cv, sh, sc) = _scan_blocks(
+                cfg, body, x, (_cast_blocks(cfg, params["blocks"]),
+                               cache["kv_k"],
+                               cache["kv_v"], cache["ssm_h"],
+                               cache["ssm_conv"]))
+            new_cache.update(kv_k=ck, kv_v=cv, ssm_h=sh, ssm_conv=sc)
+        else:
+            def body(x, xs):
+                pl_l, k_l, v_l = xs
+                kv = KVCache(k=k_l, v=v_l)
+                y, kv_new, _ = _block_decode(cfg, pl_l, x, pos, freqs, kv,
+                                             slot_pos, None)
+                return y, (kv_new.k, kv_new.v)
+            x, (ck, cv) = _scan_blocks(
+                cfg, body, x, (_cast_blocks(cfg, params["blocks"]),
+                               cache["kv_k"],
+                               cache["kv_v"]))
+            new_cache.update(kv_k=ck, kv_v=cv)
+        new_cache["slot_pos"] = slot_pos
+    new_cache["pos"] = pos + 1
+    h_last = final_hidden(params, cfg, x[:, -1])
+    return logits_at(params, cfg, h_last), new_cache

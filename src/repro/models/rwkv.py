@@ -1,0 +1,211 @@
+"""RWKV-6 "Finch": data-dependent-decay linear attention, chunked for TPU.
+
+The reference GPU implementation uses a sequential CUDA WKV kernel.  On TPU
+we use the *chunked-parallel* form: within a chunk of C tokens the
+contribution is two MXU matmuls (an intra-chunk lower-triangular score and
+an inter-chunk state read), and the recurrent state [dk, dv] is carried
+across chunks by one lax.scan — O(S*C) work, MXU-resident, with the
+sequential dependency reduced from S steps to S/C steps.  Decay products are
+kept in log space; within-chunk ratio factors are clamped at exp(80) (f32
+headroom; contributions that deep into the decay are < e^-80 anyway).
+
+Recurrence (per head; k-dim d, v-dim m):
+    o_t = r_t . (S_{t-1} + (u * k_t)^T v_t)
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t ,   w_t = exp(-exp(z_t)) in (0,1)
+
+Token-shift "ddlerp" mixing, LoRA decay projection, per-head group norm and
+the squared-ReLU channel-mix follow the RWKV-6 architecture.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.act_sharding import constrain
+from repro.models import layers
+
+Array = jax.Array
+
+_CLAMP = 80.0
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKVSpec:
+    d_model: int
+    n_heads: int          # head_dim = d_model // n_heads
+    d_ff: int
+    chunk: int = 64
+    lora_rank: int = 64
+    decay_lora: int = 64
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+def init_rwkv_layer(rng: Array, spec: RWKVSpec, n_layers: int) -> dict:
+    d, h, hd, f = spec.d_model, spec.n_heads, spec.head_dim, spec.d_ff
+    ks = jax.random.split(rng, 16)
+    L = n_layers
+    return {
+        # --- time mixing ---
+        "mu_x": jnp.zeros((L, d)), "mu_w": jnp.zeros((L, d)),
+        "mu_k": jnp.zeros((L, d)), "mu_v": jnp.zeros((L, d)),
+        "mu_r": jnp.zeros((L, d)), "mu_g": jnp.zeros((L, d)),
+        "ddl_a": layers.he_init(ks[0], (L, d, spec.lora_rank)),
+        "ddl_b": layers.he_init(ks[1], (L, spec.lora_rank, 5 * d)) * 0.0,
+        "w0": jnp.full((L, d), -6.0),   # base decay: w ~ exp(-exp(-6)) ~ 1
+        "w_a": layers.he_init(ks[2], (L, d, spec.decay_lora)),
+        "w_b": layers.he_init(ks[3], (L, spec.decay_lora, d)) * 0.0,
+        "u": jnp.zeros((L, h, hd)),     # per-channel bonus
+        "wr": layers.he_init(ks[4], (L, d, d)),
+        "wk": layers.he_init(ks[5], (L, d, d)),
+        "wv": layers.he_init(ks[6], (L, d, d)),
+        "wg": layers.he_init(ks[7], (L, d, d)),
+        "wo": layers.he_init(ks[8], (L, d, d)),
+        "gn_scale": jnp.ones((L, h, hd)), "gn_bias": jnp.zeros((L, h, hd)),
+        # --- channel mixing ---
+        "cm_mu_k": jnp.zeros((L, d)), "cm_mu_r": jnp.zeros((L, d)),
+        "cm_wk": layers.he_init(ks[9], (L, d, f)),
+        "cm_wv": layers.he_init(ks[10], (L, f, d)),
+        "cm_wr": layers.he_init(ks[11], (L, d, d)),
+        # --- norms ---
+        "ln1": jnp.ones((L, d)), "ln1_b": jnp.zeros((L, d)),
+        "ln2": jnp.ones((L, d)), "ln2_b": jnp.zeros((L, d)),
+    }
+
+
+class RWKVState(NamedTuple):
+    wkv: Array        # [B, H, dk, dv] fp32 recurrent state
+    shift_tm: Array   # [B, D] last token input (time mix)
+    shift_cm: Array   # [B, D] last token input (channel mix)
+
+
+def init_state(spec: RWKVSpec, batch: int, dtype=jnp.bfloat16) -> RWKVState:
+    h, hd, d = spec.n_heads, spec.head_dim, spec.d_model
+    return RWKVState(
+        wkv=jnp.zeros((batch, h, hd, hd), jnp.float32),
+        shift_tm=jnp.zeros((batch, d), dtype),
+        shift_cm=jnp.zeros((batch, d), dtype),
+    )
+
+
+def _ddlerp(pl_: dict, x: Array, xx: Array) -> Tuple[Array, ...]:
+    """Data-dependent lerp producing the 5 mixed streams (w,k,v,r,g)."""
+    d = x.shape[-1]
+    z = x + (xx - x) * pl_["mu_x"].astype(x.dtype)
+    delta = jnp.tanh(z @ pl_["ddl_a"].astype(x.dtype)) @ \
+        pl_["ddl_b"].astype(x.dtype)
+    deltas = jnp.split(delta, 5, axis=-1)
+    names = ["mu_w", "mu_k", "mu_v", "mu_r", "mu_g"]
+    return tuple(x + (xx - x) * (pl_[n].astype(x.dtype) + dl)
+                 for n, dl in zip(names, deltas))
+
+
+def _decay(pl_: dict, xw: Array) -> Array:
+    """log(w) in (-inf, 0): data-dependent per-channel decay."""
+    z = pl_["w0"].astype(jnp.float32) + \
+        (jnp.tanh(xw @ pl_["w_a"].astype(xw.dtype)) @
+         pl_["w_b"].astype(xw.dtype)).astype(jnp.float32)
+    return -jnp.exp(z)  # = log w
+
+
+def wkv_chunked(r: Array, k: Array, v: Array, logw: Array, u: Array,
+                s0: Array, chunk: int) -> Tuple[Array, Array]:
+    """Chunked WKV. r,k,v,logw: [B,S,H,hd] (fp32); u: [H,hd];
+    s0: [B,H,hd,hd]. Returns (o [B,S,H,hd] fp32, s_final)."""
+    b, s, h, hd = r.shape
+    c = min(chunk, s)
+    pad = (-s) % c
+    if pad:
+        z = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = z(r), z(k), z(v)
+        logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = r.shape[1] // c
+
+    def to_chunks(a):  # [B, S, H, hd] -> [nc, B, H, C, hd]
+        return a.reshape(b, nc, c, h, hd).transpose(1, 0, 3, 2, 4)
+
+    rc, kc, vc, lwc = map(to_chunks, (r, k, v, logw))
+    lw_cum = jnp.cumsum(lwc, axis=3)                  # inclusive
+    lw_excl = lw_cum - lwc                            # exclusive
+    lw_tot = lw_cum[:, :, :, -1:, :]                  # [nc,B,H,1,hd]
+
+    # factored intra-chunk scores: a_i = r_i*exp(lw_excl_i), b_j = k_j*exp(-lw_cum_j)
+    a_fac = rc * jnp.exp(lw_excl)
+    b_fac = kc * jnp.exp(jnp.minimum(-lw_cum, _CLAMP))
+    diag_c = jnp.sum(rc * u[None, None, :, None, :] * kc, axis=-1)  # [nc,B,H,C]
+    # state-update factors: kk_j = k_j * exp(lw_tot - lw_cum_j)
+    kk = kc * jnp.exp(lw_tot - lw_cum)
+
+    tri = jnp.tril(jnp.ones((c, c), jnp.float32), -1)
+
+    def body(s_prev, xs):
+        ra, bf, vv, dg, kkc, ltot = xs
+        # inter-chunk: read the carried state
+        o_inter = jnp.einsum("bhcd,bhdm->bhcm", ra, s_prev)
+        att = jnp.einsum("bhcd,bhjd->bhcj", ra, bf) * tri
+        o_intra = jnp.einsum("bhcj,bhjm->bhcm", att, vv) + \
+            dg[..., None] * vv
+        s_new = jnp.exp(ltot[:, :, 0, :, None]) * s_prev + \
+            jnp.einsum("bhjd,bhjm->bhdm", kkc, vv)
+        return s_new, o_inter + o_intra
+
+    s_fin, oc = jax.lax.scan(
+        body, s0, (a_fac, b_fac, vc, diag_c, kk, lw_tot))
+    o = oc.transpose(1, 0, 3, 2, 4).reshape(b, nc * c, h, hd)
+    return o[:, :s], s_fin
+
+
+def time_mix(pl_: dict, spec: RWKVSpec, x: Array, shift: Array,
+             s0: Array) -> Tuple[Array, Array, Array]:
+    """x: [B,S,D]; shift: [B,D] last token of the previous segment.
+    Returns (out [B,S,D], new_shift, s_final)."""
+    b, s, d = x.shape
+    h, hd = spec.n_heads, spec.head_dim
+    xx = jnp.concatenate([shift[:, None, :].astype(x.dtype), x[:, :-1]],
+                         axis=1)
+    xw, xk, xv, xr, xg = _ddlerp(pl_, x, xx)
+    dt = x.dtype
+    r = (xr @ pl_["wr"].astype(dt)).reshape(b, s, h, hd)
+    k = (xk @ pl_["wk"].astype(dt)).reshape(b, s, h, hd)
+    v = (xv @ pl_["wv"].astype(dt)).reshape(b, s, h, hd)
+    g = jax.nn.silu(xg @ pl_["wg"].astype(dt))
+    logw = _decay(pl_, xw).reshape(b, s, h, hd)
+    r, k, v, logw = (constrain(t, "batch", None, "heads_tp", None)
+                     for t in (r, k, v, logw))
+    o, s_fin = wkv_chunked(r.astype(jnp.float32), k.astype(jnp.float32),
+                           v.astype(jnp.float32), logw,
+                           pl_["u"].astype(jnp.float32), s0, spec.chunk)
+    # per-head group norm
+    o = layers.layer_norm(o, pl_["gn_scale"], pl_["gn_bias"])
+    o = o.reshape(b, s, d).astype(dt) * g
+    return o @ pl_["wo"].astype(dt), x[:, -1], s_fin
+
+
+def channel_mix(pl_: dict, spec: RWKVSpec, x: Array, shift: Array
+                ) -> Tuple[Array, Array]:
+    xx = jnp.concatenate([shift[:, None, :].astype(x.dtype), x[:, :-1]],
+                         axis=1)
+    dt = x.dtype
+    xk = x + (xx - x) * pl_["cm_mu_k"].astype(dt)
+    xr = x + (xx - x) * pl_["cm_mu_r"].astype(dt)
+    k = jnp.square(jax.nn.relu(xk @ pl_["cm_wk"].astype(dt)))
+    kv = k @ pl_["cm_wv"].astype(dt)
+    out = jax.nn.sigmoid(xr @ pl_["cm_wr"].astype(dt)) * kv
+    return out, x[:, -1]
+
+
+def rwkv_block(pl_: dict, spec: RWKVSpec, x: Array, state: RWKVState
+               ) -> Tuple[Array, RWKVState]:
+    """One RWKV layer (time mix + channel mix with pre-LN)."""
+    h1 = layers.layer_norm(x, pl_["ln1"], pl_["ln1_b"])
+    att, new_tm, s_fin = time_mix(pl_, spec, h1, state.shift_tm, state.wkv)
+    x = x + att
+    h2 = layers.layer_norm(x, pl_["ln2"], pl_["ln2_b"])
+    cm, new_cm = channel_mix(pl_, spec, h2, state.shift_cm)
+    x = constrain(x + cm, "batch", "act_seq", None)
+    return x, RWKVState(wkv=s_fin, shift_tm=new_tm, shift_cm=new_cm)

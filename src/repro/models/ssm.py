@@ -1,0 +1,154 @@
+"""Selective SSM (Mamba-style) branch used by the Hymba hybrid blocks.
+
+Diagonal state recurrence  h_t = a_t * h_{t-1} + b_t  with input-dependent
+(a, b) ("selective scan").  On TPU we lower it as a log-space associative
+scan over the sequence — O(log S) depth, no sequential kernel needed — and a
+single-step path for decode.  The depthwise causal conv is expressed with
+shifts (kernel size 4), so everything is plain XLA.
+
+    x_in  -> in_proj -> (x, z)
+    x     -> causal depthwise conv -> silu
+    dt    = softplus(x @ W_dt + bias);  B, C = x @ W_B, x @ W_C
+    h_t   = exp(dt * A) h_{t-1} + dt * B * x_t      (A diag negative)
+    y     = C . h + D * x;   out = (y * silu(z)) @ out_proj
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.act_sharding import constrain
+from repro.models import layers
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMSpec:
+    d_model: int
+    d_inner: int           # expansion (Hymba: ~2x d_model per branch share)
+    d_state: int = 16
+    conv_kernel: int = 4
+    dt_rank: int = 64
+
+
+def init_ssm(rng: Array, spec: SSMSpec, n_layers: int) -> dict:
+    ks = jax.random.split(rng, 8)
+    d, di, n = spec.d_model, spec.d_inner, spec.d_state
+    L = n_layers
+    # A init: -[1..n] per channel (S4D-real)
+    a = -jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None], (di, 1))
+    return {
+        "in_proj": layers.he_init(ks[0], (L, d, 2 * di)),
+        "conv_w": layers.he_init(ks[1], (L, spec.conv_kernel, di), in_axis=1),
+        "conv_b": jnp.zeros((L, di)),
+        "w_dt": layers.he_init(ks[2], (L, di, spec.dt_rank)),
+        "w_dt_out": layers.he_init(ks[3], (L, spec.dt_rank, di)),
+        "dt_bias": jnp.full((L, di), -4.0),  # softplus ~= 0.018: slow init
+        "w_b": layers.he_init(ks[4], (L, di, n)),
+        "w_c": layers.he_init(ks[5], (L, di, n)),
+        "log_a": jnp.log(-a)[None].repeat(L, 0),   # store log(-A)
+        "d_skip": jnp.ones((L, di)),
+        "out_proj": layers.he_init(ks[6], (L, di, d)),
+    }
+
+
+class SSMState(NamedTuple):
+    h: Array        # [B, d_inner, d_state] fp32
+    conv: Array     # [B, conv_kernel - 1, d_inner] trailing inputs
+
+
+def init_state(spec: SSMSpec, batch: int, dtype=jnp.bfloat16) -> SSMState:
+    return SSMState(
+        h=jnp.zeros((batch, spec.d_inner, spec.d_state), jnp.float32),
+        conv=jnp.zeros((batch, spec.conv_kernel - 1, spec.d_inner),
+                       dtype),
+    )
+
+
+def _causal_conv(pl_: dict, spec: SSMSpec, x: Array, conv_state: Array
+                 ) -> Tuple[Array, Array]:
+    """Depthwise causal conv via shifted adds. x: [B,S,di]."""
+    kk = spec.conv_kernel
+    hist = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    y = jnp.zeros_like(x)
+    for i in range(kk):  # small static kernel -> unrolled shifts
+        w_i = pl_["conv_w"][i].astype(x.dtype)
+        y = y + hist[:, i:i + x.shape[1]] * w_i
+    y = y + pl_["conv_b"].astype(x.dtype)
+    new_state = hist[:, hist.shape[1] - (kk - 1):]
+    return y, new_state
+
+
+def selective_scan(a_log: Array, bx: Array, h0: Array,
+                   chunk: int = 64) -> Tuple[Array, Array]:
+    """Chunked scan of h_t = exp(a_log_t) * h_{t-1} + bx_t.
+
+    a_log, bx: [B, S, di, n] (fp32).  h0: [B, di, n].
+    Returns (h_all [B,S,di,n], h_final).
+
+    SPerf iteration B (hymba): a flat ``associative_scan`` over S makes
+    O(log S) full passes over the [B,S,di,n] state tensor — 15 passes at
+    32k context dominated the memory roofline term (37.6 s on
+    hymba prefill_32k).  The chunked form scans nc = S/C sequential chunks
+    carrying only [B,di,n]; the intra-chunk associative scan touches
+    [B,C,di,n] tiles that stay on-chip, so HBM sees ~2 passes total."""
+    b, s, di, n = a_log.shape
+    c = min(chunk, s)
+    pad = (-s) % c
+    if pad:
+        a_log = jnp.pad(a_log, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bx = jnp.pad(bx, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = a_log.shape[1] // c
+    a_c = a_log.reshape(b, nc, c, di, n).transpose(1, 0, 2, 3, 4)
+    b_c = bx.reshape(b, nc, c, di, n).transpose(1, 0, 2, 3, 4)
+    # keep d_inner TP-sharded through the chunk reshuffle (otherwise the
+    # partitioner re-shards per chunk step — measured 45 s of collectives
+    # on hymba train_4k, see EXPERIMENTS.md SPerf)
+    a_c = constrain(a_c, None, "batch", None, "tp", None)
+    b_c = constrain(b_c, None, "batch", None, "tp", None)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 + a2, jnp.exp(a2) * b1 + b2
+
+    def chunk_step(h, xs):
+        ac, bc = xs  # [B, C, di, n]
+        bc = bc.at[:, 0].add(jnp.exp(ac[:, 0]) * h)
+        _, h_all = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+        h_all = constrain(h_all, "batch", None, "tp", None)
+        return h_all[:, -1], h_all
+
+    h_fin, h_chunks = jax.lax.scan(chunk_step, h0, (a_c, b_c))
+    h_all = h_chunks.transpose(1, 0, 2, 3, 4).reshape(b, nc * c, di, n)
+    return h_all[:, :s], h_fin
+
+
+def apply_ssm(pl_: dict, spec: SSMSpec, x: Array, state: SSMState
+              ) -> Tuple[Array, SSMState]:
+    """x: [B, S, D] -> (y [B, S, D], new state)."""
+    b, s, d = x.shape
+    dt_ = x.dtype
+    xz = x @ pl_["in_proj"].astype(dt_)
+    xs, z = jnp.split(xz, 2, axis=-1)                      # [B,S,di]
+    xs, conv_new = _causal_conv(pl_, spec, xs, state.conv)
+    xs = jax.nn.silu(xs)
+
+    dt = jax.nn.softplus(
+        (xs @ pl_["w_dt"].astype(dt_)) @ pl_["w_dt_out"].astype(dt_)
+        + pl_["dt_bias"].astype(dt_)).astype(jnp.float32)  # [B,S,di]
+    bmat = (xs @ pl_["w_b"].astype(dt_)).astype(jnp.float32)   # [B,S,n]
+    cmat = (xs @ pl_["w_c"].astype(dt_)).astype(jnp.float32)   # [B,S,n]
+    a = -jnp.exp(pl_["log_a"].astype(jnp.float32))             # [di,n]
+
+    a_log = dt[..., None] * a[None, None]                      # [B,S,di,n]
+    bx = (dt * xs.astype(jnp.float32))[..., None] * bmat[:, :, None, :]
+    h_all, h_fin = selective_scan(a_log, bx, state.h)
+    y = jnp.einsum("bsdn,bsn->bsd", h_all, cmat)               # [B,S,di]
+    y = y + pl_["d_skip"].astype(jnp.float32) * xs.astype(jnp.float32)
+    y = (y.astype(dt_) * jax.nn.silu(z))
+    return y @ pl_["out_proj"].astype(dt_), SSMState(h=h_fin, conv=conv_new)

@@ -1,0 +1,252 @@
+"""Whisper-style encoder-decoder backbone (audio family).
+
+Per the assignment the conv/mel frontend is a STUB: ``input_specs()``
+supplies precomputed frame embeddings [B, S_enc, D].  The transformer
+backbone is faithful: sinusoidal encoder positions, learned decoder
+positions, pre-LN blocks, GELU non-gated FFN, full bidirectional encoder
+attention, causal decoder self-attention + cross-attention.
+
+Decode uses the same ring-buffer self-attention cache as the causal LMs,
+plus precomputed cross K/V (computed once at prefill from the encoder
+output).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.act_sharding import constrain
+from repro.models import attention, ffn, layers
+from repro.models.attention import AttnSpec, KVCache
+from repro.models.config import ArchConfig
+
+Array = jax.Array
+
+MAX_TARGET_POSITIONS = 32_768
+
+
+def attn_spec(cfg: ArchConfig, *, causal: bool) -> AttnSpec:
+    return AttnSpec(d_model=cfg.d_model, n_heads=cfg.n_heads,
+                    n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim_,
+                    qkv_bias=True, causal=causal, rope=False,
+                    block_k=cfg.flash_block_k)
+
+
+def ffn_spec(cfg: ArchConfig) -> ffn.FFNSpec:
+    return ffn.FFNSpec(d_model=cfg.d_model, d_ff=cfg.d_ff, act="gelu",
+                       gated=False)
+
+
+def init_params(rng: Array, cfg: ArchConfig) -> dict:
+    ks = jax.random.split(rng, 8)
+    d, L, Le = cfg.d_model, cfg.n_layers, cfg.encoder_layers
+    vp = cfg.padded_vocab
+    return {
+        "embed": jax.random.normal(ks[0], (vp, d), jnp.float32) * 0.02,
+        "dec_pos": jax.random.normal(ks[1], (MAX_TARGET_POSITIONS, d),
+                                     jnp.float32) * 0.01,
+        "lm_head": layers.he_init(ks[2], (d, vp)),
+        "final_norm": jnp.ones((d,)), "final_norm_b": jnp.zeros((d,)),
+        "enc_final_norm": jnp.ones((d,)), "enc_final_norm_b": jnp.zeros((d,)),
+        "enc": {
+            "ln1": jnp.ones((Le, d)), "ln1_b": jnp.zeros((Le, d)),
+            "ln2": jnp.ones((Le, d)), "ln2_b": jnp.zeros((Le, d)),
+            "attn": attention.init_attention(ks[3],
+                                             attn_spec(cfg, causal=False), Le),
+            "ffn": ffn.init_ffn(ks[4], ffn_spec(cfg), Le),
+        },
+        "dec": {
+            "ln1": jnp.ones((L, d)), "ln1_b": jnp.zeros((L, d)),
+            "ln2": jnp.ones((L, d)), "ln2_b": jnp.zeros((L, d)),
+            "ln3": jnp.ones((L, d)), "ln3_b": jnp.zeros((L, d)),
+            "self_attn": attention.init_attention(
+                ks[5], attn_spec(cfg, causal=True), L),
+            "cross_attn": attention.init_attention(
+                ks[6], attn_spec(cfg, causal=False), L),
+            "ffn": ffn.init_ffn(ks[7], ffn_spec(cfg), L),
+        },
+    }
+
+
+def _scan(cfg: ArchConfig, body, x, xs):
+    inner = body
+
+    def barriered(x, xs):  # see lm._scan_blocks
+        return inner(jax.lax.optimization_barrier(x), xs)
+
+    body = barriered
+    if cfg.remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    return jax.lax.scan(body, x, xs)
+
+
+def encode(params: dict, cfg: ArchConfig, audio_embed: Array) -> Array:
+    """audio_embed: [B, S_enc, D] (stub frontend output) -> encoder states."""
+    b, s, d = audio_embed.shape
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    x = audio_embed.astype(dt) + \
+        layers.sinusoidal_positions(s, d).astype(dt)[None]
+    x = constrain(x, "batch", None, "embed")
+    positions = jnp.arange(s, dtype=jnp.int32)
+    spec = attn_spec(cfg, causal=False)
+
+    def body(x, pl_):
+        h = layers.layer_norm(x, pl_["ln1"], pl_["ln1_b"])
+        x = x + attention.attention_train(pl_["attn"], spec, h, positions,
+                                          None)
+        h2 = layers.layer_norm(x, pl_["ln2"], pl_["ln2_b"])
+        x = x + ffn.apply_ffn(pl_["ffn"], ffn_spec(cfg), h2)
+        return constrain(x, "batch", "act_seq", "embed"), None
+
+    x, _ = _scan(cfg, body, x, params["enc"])
+    return layers.layer_norm(x, params["enc_final_norm"],
+                             params["enc_final_norm_b"])
+
+
+def _decoder_embed(params: dict, cfg: ArchConfig, tokens: Array,
+                   pos_offset: Array) -> Array:
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    x = layers.embed_lookup(params["embed"], tokens, dtype=dt)
+    pos = pos_offset + jnp.arange(tokens.shape[1])
+    x = x + jnp.take(params["dec_pos"], pos, axis=0).astype(dt)[None]
+    return constrain(x, "batch", None, "embed")
+
+
+def cross_kv(params: dict, cfg: ArchConfig, enc_out: Array
+             ) -> Tuple[Array, Array]:
+    """Precompute per-layer cross K/V: [L, B, Hkv, S_enc, hd] x2."""
+    spec = attn_spec(cfg, causal=False)
+
+    def body(_, pl_):
+        k, v = attention.project_kv(pl_, spec, enc_out)
+        return _, (k, v)
+
+    _, (k, v) = jax.lax.scan(body, 0, params["dec"]["cross_attn"])
+    return k, v
+
+
+def forward_train(params: dict, cfg: ArchConfig, audio_embed: Array,
+                  tokens: Array) -> Tuple[Array, Array]:
+    """Teacher-forced decoder hidden states [B, S_dec, D] (+ zero aux)."""
+    enc_out = encode(params, cfg, audio_embed)
+    x = _decoder_embed(params, cfg, tokens, jnp.asarray(0, jnp.int32))
+    positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+    self_spec = attn_spec(cfg, causal=True)
+    cross_spec = attn_spec(cfg, causal=False)
+    ck, cv = cross_kv(params, cfg, enc_out)
+
+    def body(x, xs):
+        pl_, k_l, v_l = xs
+        h = layers.layer_norm(x, pl_["ln1"], pl_["ln1_b"])
+        x = x + attention.attention_train(pl_["self_attn"], self_spec, h,
+                                          positions, None)
+        h2 = layers.layer_norm(x, pl_["ln2"], pl_["ln2_b"])
+        x = x + attention.cross_attention(pl_["cross_attn"], cross_spec, h2,
+                                          k_l, v_l)
+        h3 = layers.layer_norm(x, pl_["ln3"], pl_["ln3_b"])
+        x = x + ffn.apply_ffn(pl_["ffn"], ffn_spec(cfg), h3)
+        return constrain(x, "batch", "act_seq", "embed"), None
+
+    x, _ = _scan(cfg, body, x, (params["dec"], ck, cv))
+    h = layers.layer_norm(x, params["final_norm"], params["final_norm_b"])
+    return h, jnp.zeros((), jnp.float32)
+
+
+def init_decode_cache(params: dict, cfg: ArchConfig, batch: int,
+                      context: int) -> dict:
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    L = cfg.n_layers
+    hk, hd = cfg.n_kv_heads, cfg.head_dim_
+    return {
+        "pos": jnp.zeros((), jnp.int32),
+        "kv_k": jnp.zeros((L, batch, hk, context, hd), dt),
+        "kv_v": jnp.zeros((L, batch, hk, context, hd), dt),
+        "slot_pos": jnp.full((context,), -1, jnp.int32),
+        "cross_k": jnp.zeros((L, batch, hk, cfg.enc_context, hd), dt),
+        "cross_v": jnp.zeros((L, batch, hk, cfg.enc_context, hd), dt),
+    }
+
+
+def prefill(params: dict, cfg: ArchConfig, audio_embed: Array,
+            tokens: Array, context: int) -> Tuple[Array, dict]:
+    enc_out = encode(params, cfg, audio_embed)
+    ck, cv = cross_kv(params, cfg, enc_out)
+    b, s = tokens.shape
+    x = _decoder_embed(params, cfg, tokens, jnp.asarray(0, jnp.int32))
+    positions = jnp.arange(s, dtype=jnp.int32)
+    self_spec = attn_spec(cfg, causal=True)
+    cross_spec = attn_spec(cfg, causal=False)
+
+    def body(x, xs):
+        pl_, k_l, v_l = xs
+        h = layers.layer_norm(x, pl_["ln1"], pl_["ln1_b"])
+        attn_out, kv = attention.attention_prefill(pl_["self_attn"],
+                                                   self_spec, h, positions,
+                                                   None, context)
+        x = x + attn_out
+        h2 = layers.layer_norm(x, pl_["ln2"], pl_["ln2_b"])
+        x = x + attention.cross_attention(pl_["cross_attn"], cross_spec, h2,
+                                          k_l, v_l)
+        h3 = layers.layer_norm(x, pl_["ln3"], pl_["ln3_b"])
+        x = x + ffn.apply_ffn(pl_["ffn"], ffn_spec(cfg), h3)
+        return constrain(x, "batch", "act_seq", "embed"), kv
+
+    x, kv = _scan(cfg, body, x, (params["dec"], ck, cv))
+    cache = {
+        "pos": jnp.asarray(s, jnp.int32),
+        "kv_k": kv.k, "kv_v": kv.v,
+        "slot_pos": attention.cache_positions(s, context),
+        "cross_k": ck, "cross_v": cv,
+    }
+    h = layers.layer_norm(x[:, -1], params["final_norm"],
+                          params["final_norm_b"])
+    return _logits(params, cfg, h), cache
+
+
+def _logits(params: dict, cfg: ArchConfig, h: Array) -> Array:
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    logits = (h @ params["lm_head"].astype(dt)).astype(jnp.float32)
+    if cfg.padded_vocab != cfg.vocab:
+        pad = cfg.padded_vocab - cfg.vocab
+        mask = jnp.concatenate([jnp.zeros((cfg.vocab,), jnp.float32),
+                                jnp.full((pad,), -1e30, jnp.float32)])
+        logits = logits + mask
+    return logits
+
+
+def decode_step(params: dict, cfg: ArchConfig, cache: dict, tokens: Array
+                ) -> Tuple[Array, dict]:
+    pos = cache["pos"]
+    x = _decoder_embed(params, cfg, tokens, pos)
+    self_spec = attn_spec(cfg, causal=True)
+    cross_spec = attn_spec(cfg, causal=False)
+    w = cache["kv_k"].shape[3]
+    slot = pos % w
+    slot_pos = cache["slot_pos"].at[slot].set(pos)
+
+    def body(x, xs):
+        pl_, k_l, v_l, ck_l, cv_l = xs
+        h = layers.layer_norm(x, pl_["ln1"], pl_["ln1_b"])
+        attn_out, kv_new = attention.attention_decode(
+            pl_["self_attn"], self_spec, h, pos, None,
+            KVCache(k=k_l, v=v_l), slot_pos)
+        x = x + attn_out
+        h2 = layers.layer_norm(x, pl_["ln2"], pl_["ln2_b"])
+        x = x + attention.cross_attention(pl_["cross_attn"], cross_spec, h2,
+                                          ck_l, cv_l)
+        h3 = layers.layer_norm(x, pl_["ln3"], pl_["ln3_b"])
+        x = x + ffn.apply_ffn(pl_["ffn"], ffn_spec(cfg), h3)
+        return x, (kv_new.k, kv_new.v)
+
+    x, (ck_new, cv_new) = _scan(
+        cfg, body, x, (params["dec"], cache["kv_k"], cache["kv_v"],
+                       cache["cross_k"], cache["cross_v"]))
+    new_cache = dict(cache)
+    new_cache.update(kv_k=ck_new, kv_v=cv_new, slot_pos=slot_pos,
+                     pos=pos + 1)
+    h = layers.layer_norm(x[:, -1], params["final_norm"],
+                          params["final_norm_b"])
+    return _logits(params, cfg, h), new_cache

@@ -1,0 +1,65 @@
+"""Sampling strategies for the serving engine (host- and device-side).
+
+Greedy, temperature, top-k, and nucleus (top-p) sampling over the final
+logits.  ``sample_jax`` is the jit-friendly device-side variant used when
+the logits tensor is vocab-sharded (argmax/top-k lower to collectives under
+pjit); the numpy variant serves the single-host engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    temperature: float = 0.0     # 0 => greedy
+    top_k: int = 0               # 0 => disabled
+    top_p: float = 1.0           # 1.0 => disabled
+
+
+def sample_np(logits: np.ndarray, params: SamplingParams,
+              rng: np.random.Generator) -> int:
+    """logits: [vocab] -> token id (host-side)."""
+    if params.temperature <= 0:
+        return int(np.argmax(logits))
+    logits = logits.astype(np.float64) / params.temperature
+    if params.top_k > 0:
+        kth = np.partition(logits, -params.top_k)[-params.top_k]
+        logits = np.where(logits < kth, -np.inf, logits)
+    probs = np.exp(logits - logits.max())
+    probs /= probs.sum()
+    if params.top_p < 1.0:
+        order = np.argsort(-probs)
+        csum = np.cumsum(probs[order])
+        cutoff = np.searchsorted(csum, params.top_p) + 1
+        mask = np.zeros_like(probs)
+        mask[order[:cutoff]] = 1.0
+        probs = probs * mask
+        probs /= probs.sum()
+    return int(rng.choice(len(probs), p=probs))
+
+
+def sample_jax(logits: Array, params: SamplingParams, key: Array) -> Array:
+    """logits: [B, vocab] -> [B] token ids (device-side, jit-friendly)."""
+    if params.temperature <= 0:
+        return jnp.argmax(logits, axis=-1)
+    scaled = logits.astype(jnp.float32) / params.temperature
+    if params.top_k > 0:
+        kth = jax.lax.top_k(scaled, params.top_k)[0][:, -1:]
+        scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
+    if params.top_p < 1.0:
+        sorted_logits = jnp.sort(scaled, axis=-1)[:, ::-1]
+        probs = jax.nn.softmax(sorted_logits, axis=-1)
+        csum = jnp.cumsum(probs, axis=-1)
+        # smallest set with cumulative prob >= top_p
+        k_idx = jnp.sum(csum < params.top_p, axis=-1, keepdims=True)
+        threshold = jnp.take_along_axis(sorted_logits, k_idx, axis=-1)
+        scaled = jnp.where(scaled < threshold, -jnp.inf, scaled)
+    return jax.random.categorical(key, scaled, axis=-1)

@@ -1,0 +1,84 @@
+"""Losses.  The LM loss is *vocab-chunked*: the [B, S, vocab] logits tensor
+(up to 1 TB at the assigned shapes) is never materialized — we scan over
+sequence chunks, computing logits + log-sum-exp per chunk and accumulating
+scalar loss, which keeps live activation memory at
+``B * chunk * vocab_p / (dp * tp)`` per device."""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+IGNORE = -1  # label value that is masked out
+
+
+def chunked_cross_entropy(hidden: Array, head: Array, labels: Array, *,
+                          vocab: int, chunk: int = 512
+                          ) -> Tuple[Array, Array]:
+    """hidden: [B, S, D]; head: [D, Vp]; labels: [B, S] int32.
+
+    Returns (mean NLL over non-ignored tokens, token count).
+    """
+    b, s, d = hidden.shape
+    vp = head.shape[-1]
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)),
+                         constant_values=IGNORE)
+    nc = hidden.shape[1] // chunk
+    hc = hidden.reshape(b, nc, chunk, d).swapaxes(0, 1)   # [nc,B,C,D]
+    lc = labels.reshape(b, nc, chunk).swapaxes(0, 1)      # [nc,B,C]
+    head_c = head.astype(hidden.dtype)
+
+    @functools.partial(jax.checkpoint,
+                       policy=jax.checkpoint_policies.nothing_saveable)
+    def body(carry, xs):
+        total, count = carry
+        h, lab = xs
+        logits = (h @ head_c).astype(jnp.float32)         # [B,C,Vp]
+        if vp != vocab:  # mask padded vocab columns
+            pad_mask = jnp.arange(vp) >= vocab
+            logits = jnp.where(pad_mask[None, None], -1e30, logits)
+        lse = jax.nn.logsumexp(logits, axis=-1)           # [B,C]
+        lab_safe = jnp.clip(lab, 0, vocab - 1)
+        gold = jnp.take_along_axis(logits, lab_safe[..., None],
+                                   axis=-1)[..., 0]
+        mask = (lab != IGNORE).astype(jnp.float32)
+        nll = (lse - gold) * mask
+        return (total + nll.sum(), count + mask.sum()), None
+
+    (total, count), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hc, lc))
+    return total / jnp.maximum(count, 1.0), count
+
+
+def softmax_cross_entropy(logits: Array, labels: Array) -> Array:
+    """Plain CE for the (small) LUT-model classifiers. logits [B, C]."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    return -jnp.mean(gold)
+
+
+def accuracy(logits: Array, labels: Array) -> Array:
+    return jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(
+        jnp.float32))
+
+
+def binary_cross_entropy(logit: Array, labels: Array) -> Array:
+    """For NID (single-output binary classifier). logit [B] or [B, 1]."""
+    logit = logit.reshape(logit.shape[0]).astype(jnp.float32)
+    lab = labels.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(logit, 0) - logit * lab
+                    + jnp.log1p(jnp.exp(-jnp.abs(logit))))
+
+
+def binary_accuracy(logit: Array, labels: Array) -> Array:
+    pred = (logit.reshape(logit.shape[0]) > 0).astype(jnp.int32)
+    return jnp.mean((pred == labels).astype(jnp.float32))

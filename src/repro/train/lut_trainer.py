@@ -1,0 +1,143 @@
+"""Training driver for NeuraLUT-Assemble models (paper toolflow stage 1).
+
+Implements the paper's three-phase flow as library calls:
+  1. ``train``  (dense=True, lasso>0)  — dense pre-training with the
+     hardware-aware group regularizer;
+  2. ``pruning.select_mappings``       — structured pruning to fan-in F;
+  3. ``train``  (mappings=...)         — sparse re-training from scratch.
+
+AdamW + SGDR (the paper's optimizers).  Used by tests, benchmarks, and
+examples; scales from the reduced surrogate configs (seconds on CPU) to the
+full Table II configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import assemble, folding
+from repro.core.assemble import AssembleConfig
+from repro.data.synthetic import Dataset
+from repro.train import losses, optim
+
+
+@dataclasses.dataclass
+class TrainResult:
+    params: dict
+    losses: list
+
+
+def train(cfg: AssembleConfig, data: Dataset, *, steps: int = 200,
+          lr: float = 5e-3, batch_size: int = 256, dense: bool = False,
+          mappings: Optional[Sequence] = None, lasso: float = 0.0,
+          weight_decay: float = 1e-4, sgdr_t0: int = 0, seed: int = 0,
+          max_train: int = 4096) -> TrainResult:
+    rng = jax.random.PRNGKey(seed)
+    params = assemble.init(rng, cfg, dense=dense, mappings=mappings)
+    schedule = optim.sgdr_schedule(sgdr_t0) if sgdr_t0 else None
+    ocfg = optim.AdamWConfig(lr=lr, weight_decay=weight_decay,
+                             schedule=schedule)
+    opt = optim.adamw_init(params)
+    x = jnp.asarray(data.x_train[:max_train])
+    y = jnp.asarray(data.y_train[:max_train])
+    binary = cfg.layers[-1].units == 1
+
+    @jax.jit
+    def step(params, opt, xb, yb):
+        def loss_fn(p):
+            logits, new_p = assemble.apply(p, cfg, xb, training=True,
+                                           dense=dense)
+            if binary:
+                l = losses.binary_cross_entropy(logits, yb)
+            else:
+                l = losses.softmax_cross_entropy(logits, yb)
+            if lasso:
+                l = l + lasso * assemble.group_lasso(p, cfg)
+            return l, new_p
+        (l, new_p), g = jax.value_and_grad(loss_fn, has_aux=True,
+                                   allow_int=True)(params)
+        new_p2, opt2, _ = optim.adamw_update(ocfg, g, opt, new_p)
+        return new_p2, opt2, l
+
+    n = x.shape[0]
+    bs = min(batch_size, n)
+    hist = []
+    for i in range(steps):
+        lo = (i * bs) % (n - bs + 1)
+        params, opt, l = step(params, opt, x[lo:lo + bs], y[lo:lo + bs])
+        hist.append(float(l))
+    return TrainResult(params=params, losses=hist)
+
+
+def accuracy(cfg: AssembleConfig, params: dict, data: Dataset, *,
+             folded: bool = False, max_eval: int = 2048) -> float:
+    x = jnp.asarray(data.x_test[:max_eval])
+    y = np.asarray(data.y_test[:max_eval])
+    if folded:
+        net = folding.fold_network(params, cfg)
+        logits = folding.folded_logits(net, params, x)
+    else:
+        logits, _ = assemble.apply(params, cfg, x, training=False)
+    logits = np.asarray(logits)
+    if cfg.layers[-1].units == 1:
+        pred = (logits[:, 0] > 0).astype(np.int32)
+    else:
+        pred = logits.argmax(-1)
+    return float((pred == y).mean())
+
+
+def dense_mlp_reference(data: Dataset, widths: Sequence[int], *,
+                        steps: int = 300, lr: float = 3e-3,
+                        seed: int = 0, max_train: int = 4096) -> float:
+    """Floating-point fully-connected reference (Table II 'FP FC' column)."""
+    rng = jax.random.PRNGKey(seed)
+    n_classes = data.n_classes
+    dims = [data.in_features] + list(widths) + \
+        [1 if n_classes == 2 else n_classes]
+    keys = jax.random.split(rng, len(dims))
+    params = [
+        {"w": jax.random.normal(keys[i], (dims[i], dims[i + 1]))
+         * (dims[i] ** -0.5), "b": jnp.zeros(dims[i + 1])}
+        for i in range(len(dims) - 1)]
+
+    def fwd(p, xb):
+        h = xb
+        for i, layer in enumerate(p):
+            h = h @ layer["w"] + layer["b"]
+            if i < len(p) - 1:
+                h = jax.nn.relu(h)
+        return h
+
+    ocfg = optim.AdamWConfig(lr=lr)
+    opt = optim.adamw_init(params)
+    x = jnp.asarray(data.x_train[:max_train])
+    y = jnp.asarray(data.y_train[:max_train])
+    binary = n_classes == 2
+
+    @jax.jit
+    def step(p, o, xb, yb):
+        def loss_fn(pp):
+            logits = fwd(pp, xb)
+            if binary:
+                return losses.binary_cross_entropy(logits, yb)
+            return losses.softmax_cross_entropy(logits, yb)
+        l, g = jax.value_and_grad(loss_fn)(p)
+        p2, o2, _ = optim.adamw_update(ocfg, g, o, p)
+        return p2, o2, l
+
+    bs = min(256, x.shape[0])
+    for i in range(steps):
+        lo = (i * bs) % (x.shape[0] - bs + 1)
+        params, opt, _ = step(params, opt, x[lo:lo + bs], y[lo:lo + bs])
+    xt = jnp.asarray(data.x_test[:2048])
+    yt = np.asarray(data.y_test[:2048])
+    logits = np.asarray(fwd(params, xt))
+    if binary:
+        pred = (logits[:, 0] > 0).astype(np.int32)
+    else:
+        pred = logits.argmax(-1)
+    return float((pred == yt).mean())

@@ -1,0 +1,136 @@
+"""Optimizers and schedules (no optax dependency).
+
+The paper trains with Decoupled Weight Decay (AdamW, [24]) and Stochastic
+Gradient Descent with Warm Restarts (SGDR cosine schedule, [25]); both are
+implemented here and shared by the LUT models and the LM substrate.
+
+AdamW state is a pytree shaped like the parameters, so under pjit it shards
+exactly like the parameters (ZeRO-style when FSDP specs are used).  Integer
+leaves (e.g. learned LUT mappings) are held constant.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def _is_float(x) -> bool:
+    return jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: Optional[float] = 1.0
+    schedule: Optional[Callable[[Array], Array]] = None  # step -> lr scale
+
+
+class AdamWState(NamedTuple):
+    step: Array
+    m: Any
+    v: Any
+
+
+def adamw_init(params: Any) -> AdamWState:
+    zeros = jax.tree.map(
+        lambda p: jnp.zeros_like(p) if _is_float(p) else None, params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros, v=zeros)
+
+
+def global_norm(tree: Any) -> Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree) if _is_float(x)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(cfg: AdamWConfig, grads: Any, state: AdamWState,
+                 params: Any) -> Tuple[Any, AdamWState, dict]:
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.asarray(1.0, jnp.float32)
+    if cfg.grad_clip is not None:
+        scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    lr = jnp.asarray(cfg.lr, jnp.float32)
+    if cfg.schedule is not None:
+        lr = lr * cfg.schedule(step)
+
+    bc1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        if not _is_float(p) or g is None:
+            return p, m, v
+        g = g.astype(jnp.float32) * scale
+        m_new = cfg.b1 * m + (1 - cfg.b1) * g
+        v_new = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        p32 = p.astype(jnp.float32)
+        p_new = p32 - lr * (delta + cfg.weight_decay * p32)
+        return p_new.astype(p.dtype), m_new, v_new
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v)
+           for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, AdamWState(step=step, m=new_m, v=new_v), metrics
+
+
+# ---------------------------------------------------------------------------
+# SGDR: cosine annealing with warm restarts (Loshchilov & Hutter)
+# ---------------------------------------------------------------------------
+
+def sgdr_schedule(t0: int, t_mult: int = 2, lr_min_frac: float = 0.01,
+                  warmup: int = 0) -> Callable[[Array], Array]:
+    """Returns step -> multiplicative lr factor in [lr_min_frac, 1]."""
+    # precompute enough restart boundaries for any realistic run
+    starts = [0]
+    length = t0
+    for _ in range(24):
+        starts.append(starts[-1] + length)
+        length *= t_mult
+    starts_arr = jnp.asarray(starts, jnp.float32)
+
+    def schedule(step: Array) -> Array:
+        s = step.astype(jnp.float32)
+        idx = jnp.sum(starts_arr <= s) - 1
+        start = starts_arr[idx]
+        period = jnp.asarray(t0, jnp.float32) * (t_mult ** idx.astype(
+            jnp.float32))
+        frac = jnp.clip((s - start) / jnp.maximum(period, 1.0), 0.0, 1.0)
+        cos = lr_min_frac + (1 - lr_min_frac) * 0.5 * (1 + jnp.cos(
+            jnp.pi * frac))
+        if warmup > 0:
+            cos = cos * jnp.minimum(1.0, s / warmup)
+        return cos
+
+    return schedule
+
+
+def cosine_schedule(total_steps: int, warmup: int = 0,
+                    lr_min_frac: float = 0.1) -> Callable[[Array], Array]:
+    def schedule(step: Array) -> Array:
+        s = step.astype(jnp.float32)
+        frac = jnp.clip(s / total_steps, 0.0, 1.0)
+        cos = lr_min_frac + (1 - lr_min_frac) * 0.5 * (1 + jnp.cos(
+            jnp.pi * frac))
+        if warmup > 0:
+            cos = cos * jnp.minimum(1.0, s / warmup)
+        return cos
+    return schedule

@@ -1,0 +1,153 @@
+"""Per-arch smoke tests: reduced same-family config, one forward + one
+train step on CPU, asserting output shapes and finite values (deliverable f).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import lm_archs
+from repro.launch import steps
+from repro.models import lm, whisper
+from repro.train import optim
+
+ARCH_IDS = list(lm_archs.ARCHS)
+
+
+def _batch(cfg, b=2, s=16, seed=0):
+    rng = jax.random.PRNGKey(seed)
+    toks = jax.random.randint(rng, (b, s), 0, cfg.vocab, dtype=jnp.int32)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+    if cfg.is_enc_dec:
+        batch["audio_embed"] = jax.random.normal(rng, (b, s, cfg.d_model),
+                                                 jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward(arch):
+    cfg = lm_archs.smoke(arch)
+    params = steps.init_fn(cfg)(jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    if cfg.is_enc_dec:
+        h, aux = whisper.forward_train(params, cfg, batch["audio_embed"],
+                                       batch["tokens"])
+    else:
+        h, aux = lm.forward_train(params, cfg, batch["tokens"])
+    assert h.shape == (2, 16, cfg.d_model)
+    assert bool(jnp.isfinite(h.astype(jnp.float32)).all()), arch
+    assert bool(jnp.isfinite(aux)), arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch):
+    cfg = lm_archs.smoke(arch)
+    params = steps.init_fn(cfg)(jax.random.PRNGKey(0))
+    opt_state = optim.adamw_init(params)
+    step = jax.jit(steps.make_train_step(cfg))
+    batch = _batch(cfg)
+    new_params, new_opt, metrics = step(params, opt_state, batch)
+    assert bool(jnp.isfinite(metrics["loss"])), arch
+    assert float(metrics["loss"]) > 0
+    assert int(new_opt.step) == 1
+    # params actually moved
+    moved = jax.tree.map(
+        lambda a, b: float(jnp.abs(a.astype(jnp.float32)
+                                   - b.astype(jnp.float32)).max()),
+        new_params, params)
+    assert max(jax.tree.leaves(moved)) > 0, arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_loss_decreases(arch):
+    """A few steps on a repeated batch must reduce the loss (learning
+    signal flows through every family's machinery)."""
+    cfg = lm_archs.smoke(arch)
+    params = steps.init_fn(cfg)(jax.random.PRNGKey(0))
+    opt_state = optim.adamw_init(params)
+    step = jax.jit(steps.make_train_step(
+        cfg, opt_cfg=optim.AdamWConfig(lr=3e-3)))
+    batch = _batch(cfg)
+    first = None
+    for i in range(8):
+        params, opt_state, metrics = step(params, opt_state, batch)
+        if first is None:
+            first = float(metrics["loss"])
+    assert float(metrics["loss"]) < first, arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_prefill_decode(arch):
+    cfg = lm_archs.smoke(arch)
+    params = steps.init_fn(cfg)(jax.random.PRNGKey(0))
+    b, s, ctx = 2, 12, 24
+    rng = jax.random.PRNGKey(1)
+    toks = jax.random.randint(rng, (b, s), 0, cfg.vocab, dtype=jnp.int32)
+    if cfg.is_enc_dec:
+        audio = jax.random.normal(rng, (b, s, cfg.d_model), jnp.float32)
+        logits, cache = whisper.prefill(params, cfg, audio, toks, ctx)
+        logits2, cache = whisper.decode_step(params, cfg, cache,
+                                             toks[:, :1])
+    else:
+        logits, cache = lm.prefill(params, cfg, toks, ctx)
+        logits2, cache = lm.decode_step(params, cfg, cache, toks[:, :1])
+    assert logits.shape == (b, cfg.padded_vocab)
+    assert logits2.shape == (b, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits2).all()), arch
+    assert int(cache["pos"]) == s + 1
+    # padded vocab entries are masked out
+    if cfg.padded_vocab != cfg.vocab:
+        assert float(logits2[:, cfg.vocab:].max()) < -1e20
+
+
+@pytest.mark.parametrize("arch", ["qwen2-72b", "mixtral-8x22b", "rwkv6-7b",
+                                  "hymba-1.5b", "gemma-2b"])
+def test_decode_matches_prefill(arch):
+    """Ring-cache decode == one-shot prefill logits (fp32 smoke configs)."""
+    import dataclasses
+    cfg = dataclasses.replace(lm_archs.smoke(arch), dtype="float32",
+                              remat=False)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 17), 0, cfg.vocab,
+                              dtype=jnp.int32)
+    if cfg.family == "moe":
+        cfg = dataclasses.replace(cfg, capacity_factor=64.0)  # no drops
+    full, _ = lm.prefill(params, cfg, toks, 32)
+    _, cache = lm.prefill(params, cfg, toks[:, :16], 32)
+    dec, _ = lm.decode_step(params, cfg, cache, toks[:, 16:17])
+    np.testing.assert_allclose(np.asarray(full), np.asarray(dec),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_full_config_parameters_match_assignment():
+    """The exact assigned hyperparameters are encoded."""
+    q = lm_archs.get("qwen2-72b")
+    assert (q.n_layers, q.d_model, q.n_heads, q.n_kv_heads, q.d_ff,
+            q.vocab) == (80, 8192, 64, 8, 29568, 152064)
+    assert q.qkv_bias
+    g = lm_archs.get("gemma-2b")
+    assert (g.n_layers, g.d_model, g.n_heads, g.n_kv_heads, g.head_dim_,
+            g.vocab) == (18, 2048, 8, 1, 256, 256000)
+    m = lm_archs.get("mixtral-8x22b")
+    assert (m.n_experts, m.top_k, m.window) == (8, 2, 4096)
+    d = lm_archs.get("dbrx-132b")
+    assert (d.n_experts, d.top_k, d.d_ff) == (16, 4, 10752)
+    h = lm_archs.get("hymba-1.5b")
+    assert (h.n_heads, h.n_kv_heads, h.ssm_state, h.d_model) == (25, 5, 16,
+                                                                 1600)
+    r = lm_archs.get("rwkv6-7b")
+    assert r.family == "ssm" and r.d_ff == 14336
+    w = lm_archs.get("whisper-small")
+    assert w.encoder_layers == 12 and w.vocab == 51865
+
+
+def test_param_counts_plausible():
+    """n_params() estimates land near the advertised sizes."""
+    approx = {
+        "qwen2-72b": 72e9, "gemma-2b": 2.5e9, "internlm2-20b": 20e9,
+        "minitron-4b": 4.2e9, "mixtral-8x22b": 140e9, "dbrx-132b": 132e9,
+        "rwkv6-7b": 7e9, "chameleon-34b": 34e9, "hymba-1.5b": 1.5e9,
+    }
+    for name, target in approx.items():
+        n = lm_archs.get(name).n_params()
+        assert 0.55 * target < n < 1.75 * target, (name, n, target)

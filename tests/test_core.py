@@ -1,0 +1,220 @@
+"""Unit + property tests for the core NeuraLUT-Assemble building blocks."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import assemble, hwcost, pruning, quant, rtl, subnet
+from repro.core.assemble import AssembleConfig, LayerSpec
+from repro.core.quant import QuantSpec
+
+
+# ---------------------------------------------------------------------------
+# quant
+# ---------------------------------------------------------------------------
+
+@hypothesis.settings(max_examples=30, deadline=None)
+@hypothesis.given(bits=st.integers(1, 8), signed=st.booleans(),
+                  seed=st.integers(0, 999))
+def test_pack_unpack_roundtrip(bits, signed, seed):
+    spec = QuantSpec(bits, signed)
+    fan_in = 3
+    rng = jax.random.PRNGKey(seed)
+    codes = jax.random.randint(rng, (17, fan_in), 0, spec.levels)
+    addr = quant.pack_address(codes, bits, fan_in)
+    back = quant.unpack_address(addr, bits, fan_in)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(codes))
+    assert int(addr.max()) < 2 ** (bits * fan_in)
+
+
+@hypothesis.settings(max_examples=30, deadline=None)
+@hypothesis.given(bits=st.integers(1, 6), signed=st.booleans(),
+                  scale=st.floats(0.05, 4.0), seed=st.integers(0, 999))
+def test_quant_dequant_consistency(bits, signed, scale, seed):
+    """fake_quant(x) == dequantize(quantize_codes(x)) exactly."""
+    spec = QuantSpec(bits, signed)
+    params = {"log_scale": jnp.log(jnp.asarray(scale))}
+    x = jax.random.normal(jax.random.PRNGKey(seed), (64,)) * 2
+    fq = quant.fake_quant(params, spec, x)
+    codes = quant.quantize_codes(params, spec, x)
+    dq = quant.dequantize_codes(params, spec, codes)
+    np.testing.assert_allclose(np.asarray(fq), np.asarray(dq), rtol=1e-6)
+    assert int(codes.min()) >= 0 and int(codes.max()) < spec.levels
+
+
+def test_fake_quant_gradient_is_ste():
+    spec = QuantSpec(3, True)
+    params = {"log_scale": jnp.asarray(0.0)}
+    g = jax.grad(lambda x: jnp.sum(quant.fake_quant(params, spec, x)))(
+        jnp.asarray([0.3, -0.7, 1.2]))
+    np.testing.assert_allclose(np.asarray(g), 1.0)  # pass-through in range
+
+
+def test_all_codes_enumeration():
+    codes = quant.all_codes(2, 3)
+    assert codes.shape == (64, 3)
+    assert len(set(map(tuple, np.asarray(codes).tolist()))) == 64
+
+
+# ---------------------------------------------------------------------------
+# subnet
+# ---------------------------------------------------------------------------
+
+def test_subnet_shapes_and_finite():
+    spec = subnet.SubnetSpec(fan_in=4, width=8, depth=2, skip_step=2)
+    params = subnet.init_subnet(jax.random.PRNGKey(0), spec, units=5)
+    x = jax.random.normal(jax.random.PRNGKey(1), (7, 5, 4))
+    y, _ = subnet.apply_subnet(params, spec, x, activation=True,
+                               training=True)
+    assert y.shape == (7, 5, 1)
+    assert bool(jnp.isfinite(y).all())
+
+
+def test_subnet_depth0_is_logicnets_style():
+    """depth=0 == pure affine + BN (+act): the LogicNets baseline unit."""
+    spec = subnet.SubnetSpec(fan_in=3, width=1, depth=0, skip_step=0)
+    params = subnet.init_subnet(jax.random.PRNGKey(0), spec, units=2)
+    assert len(params["w"]) == 1
+    x = jnp.ones((4, 2, 3))
+    y, _ = subnet.apply_subnet(params, spec, x, activation=True)
+    assert y.shape == (4, 2, 1)
+
+
+def test_polylut_monomials():
+    feats = subnet.monomial_indices(3, 2)
+    # deg1: 3, deg2: C(3+1,2)=6 -> 9 total
+    assert len(feats) == 9
+    spec = subnet.SubnetSpec(fan_in=3, width=4, depth=1, poly_degree=2)
+    assert subnet.expanded_fan_in(spec) == 9
+    x = jnp.asarray([[[1.0, 2.0, 3.0]]])
+    ex = subnet.expand_poly(spec, x)
+    assert ex.shape == (1, 1, 9)
+    np.testing.assert_allclose(np.asarray(ex[0, 0])[:3], [1, 2, 3])
+    assert float(ex[0, 0, 3]) == 1.0  # x0*x0
+    assert float(ex[0, 0, -1]) == 9.0  # x2*x2
+
+
+def test_skip_edges():
+    spec = subnet.SubnetSpec(fan_in=4, width=8, depth=2, skip_step=2)
+    assert spec.skip_edges() == ((0, 2),)
+    spec4 = subnet.SubnetSpec(fan_in=4, width=8, depth=4, skip_step=2)
+    assert spec4.skip_edges() == ((0, 2), (2, 4))
+
+
+# ---------------------------------------------------------------------------
+# pruning / learned mappings
+# ---------------------------------------------------------------------------
+
+def test_learned_mappings_pick_informative_inputs():
+    """Dense training + group lasso concentrates saliency on informative
+    inputs — the paper's NID argument."""
+    cfg = AssembleConfig(
+        in_features=16, input_bits=2, input_signed=False,
+        layers=(LayerSpec(4, 3, 2, False), LayerSpec(1, 4, 3, True)),
+        subnet_width=8, subnet_depth=1, skip_step=0)
+    rng = jax.random.PRNGKey(0)
+    dense_params = assemble.init(rng, cfg, dense=True)
+    # synthetic task: label depends ONLY on inputs {1, 5, 9}
+    x = jax.random.uniform(jax.random.PRNGKey(1), (512, 16))
+    y = ((x[:, 1] + x[:, 5] - x[:, 9]) > 0.5).astype(jnp.int32)
+
+    def loss_fn(p):
+        logits, _ = assemble.apply(p, cfg, x, training=True, dense=True)
+        z = logits[:, 0]
+        bce = jnp.mean(jnp.maximum(z, 0) - z * y
+                       + jnp.log1p(jnp.exp(-jnp.abs(z))))
+        return bce + 1e-3 * assemble.group_lasso(p, cfg)
+
+    params = dense_params
+    for _ in range(60):
+        g = jax.grad(loss_fn)(params)
+        params = jax.tree.map(
+            lambda p, gg: p - 0.1 * gg
+            if jnp.issubdtype(p.dtype, jnp.floating) else p, params, g)
+    mappings = pruning.select_mappings(params, cfg)
+    used = set(int(i) for i in np.asarray(mappings[0]).ravel())
+    assert used & {1, 5, 9}, f"no informative input selected: {used}"
+    cov = pruning.mapping_coverage(mappings, cfg)
+    assert 0 < cov[0] <= 1
+
+
+def test_random_mapping_valid():
+    cfg = AssembleConfig(
+        in_features=10, input_bits=1, input_signed=False,
+        layers=(LayerSpec(4, 3, 1, False), LayerSpec(1, 4, 2, True)),
+        subnet_width=4, subnet_depth=1)
+    m = assemble.random_mapping(jax.random.PRNGKey(0), cfg, 0)
+    assert m.shape == (4, 3)
+    assert int(m.max()) < 10 and int(m.min()) >= 0
+
+
+# ---------------------------------------------------------------------------
+# hwcost
+# ---------------------------------------------------------------------------
+
+def test_plut_decomposition():
+    assert hwcost.plut_per_bit(6) == 1
+    assert hwcost.plut_per_bit(7) == 2
+    assert hwcost.plut_per_bit(8) == 4
+    assert hwcost.plut_per_bit(9) == 8 + 1   # 8 LUT6 + one 2:1 mux level
+    assert hwcost.logic_levels(6) == 1.0
+    assert hwcost.logic_levels(8) == 1.5
+
+
+def test_hwcost_monotonic_in_bits():
+    def net(bits):
+        return AssembleConfig(
+            in_features=8, input_bits=bits,
+            layers=(LayerSpec(4, 2, bits, False), LayerSpec(2, 2, bits, True),
+                    LayerSpec(1, 2, bits, True)),
+            subnet_width=4, subnet_depth=1)
+    luts = [hwcost.network_luts(net(b)) for b in (1, 2, 3, 4)]
+    assert luts == sorted(luts)
+
+
+def test_timing_fit_matches_paper_regimes():
+    """The fitted timing model reproduces the paper's Table III within 30%"""
+    a, b, c = hwcost.fit_timing()
+    import math
+    for name, luts, k, pe, period in hwcost.PAPER_TABLE3:
+        pred = a + b * math.log10(luts) + c * hwcost._effective_levels(k, pe)
+        assert abs(pred - period) / period < 0.45, (name, pe, pred, period)
+
+
+def test_paper_config_area_delay_magnitude():
+    """Area-delay of the MNIST config lands in the paper's 1e4 decade."""
+    from repro.configs import paper_tasks
+    rep = hwcost.report(paper_tasks.mnist(), pipeline_every=3)
+    assert 5e3 < rep.area_delay < 5e4
+    assert rep.luts == 5160  # structural count (paper measures 5037-5070)
+
+
+def test_tree_area_fig5_ratio():
+    """Fig. 5 claim: 16-input tree of 4-LUTs -> 2-LUTs cuts area ~26x
+    (at beta=3)."""
+    a1 = hwcost.tree_area([4, 4], bits=3)
+    a2 = hwcost.tree_area([2, 2, 2, 2], bits=3)
+    ratio = a1 / a2
+    assert 15 < ratio < 40, ratio
+
+
+# ---------------------------------------------------------------------------
+# rtl
+# ---------------------------------------------------------------------------
+
+def test_verilog_emission():
+    from repro.core import folding
+    cfg = AssembleConfig(
+        in_features=6, input_bits=1, input_signed=False,
+        layers=(LayerSpec(3, 2, 1, False), LayerSpec(1, 3, 2, True)),
+        subnet_width=4, subnet_depth=1)
+    params = assemble.init(jax.random.PRNGKey(0), cfg)
+    net = folding.fold_network(params, cfg)
+    v = rtl.emit_verilog(net, params, pipeline_every=1)
+    assert "module neuralut_assemble" in v
+    assert v.count("case (") == 4  # one ROM per L-LUT unit
+    assert "always @(posedge clk)" in v
+    # ROM contents must match the folded tables
+    assert f"2'd{int(net.tables[1][0][0])};" in v

@@ -1,0 +1,46 @@
+"""Don't-care analysis: reachability is sound and the optimized LUT count
+is bounded by the structural one."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import paper_tasks
+from repro.core import assemble, dontcare, folding, hwcost
+from repro.data import synthetic
+
+
+@pytest.fixture(scope="module")
+def folded_nid():
+    cfg = paper_tasks.reduced("nid")
+    data = synthetic.load("nid", n_train=2048, n_test=256)
+    params = assemble.init(jax.random.PRNGKey(0), cfg)
+    net = folding.fold_network(params, cfg)
+    return cfg, data, params, net
+
+
+def test_dontcare_bounds(folded_nid):
+    cfg, data, params, net = folded_nid
+    rep = dontcare.analyze(net, params, data.x_train[:1024])
+    assert rep.optimized_luts <= rep.structural_luts
+    assert rep.lut_reduction >= 1.0
+    assert rep.structural_luts == hwcost.network_luts(cfg)
+    for frac in rep.per_layer_observed:
+        assert 0.0 < frac <= 1.0
+
+
+def test_dontcare_monotone_in_data(folded_nid):
+    """More inputs can only reach more addresses (reachability grows)."""
+    cfg, data, params, net = folded_nid
+    small = dontcare.analyze(net, params, data.x_train[:64])
+    large = dontcare.analyze(net, params, data.x_train[:1024])
+    for a, b in zip(small.per_layer_observed, large.per_layer_observed):
+        assert b >= a - 1e-12
+
+
+def test_dontcare_explains_paper_gap(folded_nid):
+    """The paper measures 91 LUTs where our structural model says 186;
+    don't-cares must recover a nontrivial part of that gap on the
+    surrogate too (binary inputs -> sparse reachable address sets)."""
+    cfg, data, params, net = folded_nid
+    rep = dontcare.analyze(net, params, data.x_train[:2048])
+    assert rep.lut_reduction > 1.05, rep

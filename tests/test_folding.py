@@ -1,0 +1,114 @@
+"""THE core property of the paper: folding a trained sub-network into
+L-LUTs is *bit-exact* — for every possible input, the folded table cascade
+produces the same integer codes as the quantized network."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import assemble, folding, quant
+from repro.core.assemble import AssembleConfig, LayerSpec
+
+
+def _rand_config(rng_seed, in_features, bits_in, layers, width, depth, skip,
+                 tree_skips=True, poly=1):
+    return AssembleConfig(
+        in_features=in_features, input_bits=bits_in, input_signed=False,
+        layers=tuple(layers), subnet_width=width, subnet_depth=depth,
+        skip_step=skip, tree_skips=tree_skips, poly_degree=poly)
+
+
+def _assert_fold_exact(cfg, seed=0, n=64):
+    rng = jax.random.PRNGKey(seed)
+    params = assemble.init(rng, cfg)
+    x = jax.random.uniform(jax.random.PRNGKey(seed + 1),
+                           (n, cfg.in_features), minval=-1.0, maxval=1.0)
+    ref_codes = assemble.apply_codes(params, cfg, x)
+    net = folding.fold_network(params, cfg)
+    folded = folding.folded_apply_codes(net, params, x)
+    np.testing.assert_array_equal(np.asarray(folded), np.asarray(ref_codes))
+
+
+@hypothesis.settings(max_examples=12, deadline=None)
+@hypothesis.given(
+    bits=st.integers(1, 3),
+    fan_in=st.integers(2, 4),
+    width=st.sampled_from([4, 8]),
+    depth=st.integers(0, 3),
+    skip=st.integers(0, 2),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_fold_exact_single_tree(bits, fan_in, width, depth, skip, seed):
+    """One mapping layer + one assemble layer (a 2-level tree)."""
+    hypothesis.assume(bits * fan_in <= 8)
+    units0 = fan_in * 2
+    cfg = _rand_config(seed, in_features=8, bits_in=bits,
+                       layers=[LayerSpec(units0, fan_in, bits, False),
+                               LayerSpec(2, fan_in, bits, True)],
+                       width=width, depth=depth, skip=skip)
+    _assert_fold_exact(cfg, seed=seed % 7)
+
+
+@hypothesis.settings(max_examples=8, deadline=None)
+@hypothesis.given(
+    tree_skips=st.booleans(),
+    poly=st.integers(1, 2),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_fold_exact_deep_tree(tree_skips, poly, seed):
+    """Deeper trees, with/without tree-level skips, PolyLUT-style units."""
+    cfg = _rand_config(seed, in_features=16, bits_in=2,
+                       layers=[LayerSpec(8, 2, 2, False),
+                               LayerSpec(4, 2, 2, True),
+                               LayerSpec(2, 2, 2, True),
+                               LayerSpec(1, 2, 3, True)],
+                       width=6, depth=2, skip=2, tree_skips=tree_skips,
+                       poly=poly)
+    _assert_fold_exact(cfg, seed=seed % 5)
+
+
+def test_fold_exact_signed_inputs():
+    cfg = AssembleConfig(
+        in_features=6, input_bits=3, input_signed=True,
+        layers=(LayerSpec(4, 3, 2, False), LayerSpec(2, 2, 2, True),
+                LayerSpec(1, 2, 4, True)),
+        subnet_width=8, subnet_depth=1, skip_step=1)
+    _assert_fold_exact(cfg)
+
+
+def test_folded_logits_match_quantized_forward():
+    from repro.configs import paper_tasks
+    cfg = paper_tasks.reduced("nid")
+    rng = jax.random.PRNGKey(3)
+    params = assemble.init(rng, cfg)
+    x = (jax.random.uniform(rng, (32, cfg.in_features)) < 0.4).astype(
+        jnp.float32)
+    net = folding.fold_network(params, cfg)
+    logits = folding.folded_logits(net, params, x)
+    # dequantized folded logits == quantized model's forward output
+    ref, _ = assemble.apply(params, cfg, x, training=False)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_lut_entry_count_matches_paper_formula():
+    """#entries per L-LUT == 2^(beta*F) (paper §III-B2)."""
+    from repro.configs import paper_tasks
+    cfg = paper_tasks.reduced("jsc")
+    params = assemble.init(jax.random.PRNGKey(0), cfg)
+    net = folding.fold_network(params, cfg)
+    for l, spec in enumerate(cfg.layers):
+        expected = 2 ** (cfg.in_bits(l) * spec.fan_in)
+        assert net.tables[l].shape == (spec.units, expected)
+
+
+def test_mappings_affect_folding():
+    """Learned vs random mappings give different (but both exact) folds."""
+    cfg = _rand_config(0, in_features=12, bits_in=1,
+                       layers=[LayerSpec(6, 3, 1, False),
+                               LayerSpec(2, 3, 2, True)],
+                       width=4, depth=1, skip=0)
+    _assert_fold_exact(cfg, seed=11)
+    _assert_fold_exact(cfg, seed=12)

@@ -1,0 +1,89 @@
+"""The loop-aware HLO walker must be exact on known-FLOP programs —
+the roofline's correctness rests on it."""
+import subprocess
+import sys
+import os
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def run_sub(code):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [SRC, ROOT, env.get("PYTHONPATH", "")])
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=300)
+    assert out.returncode == 0, out.stderr[-2000:]
+    return out.stdout
+
+
+def test_walker_exact_on_scans_and_collectives():
+    out = run_sub("""
+import jax, jax.numpy as jnp
+from benchmarks import hlo_analysis as ha
+M = K = N = 128
+
+def f(a, bs):
+    def body(x, b):
+        return x @ b, ()
+    return jax.lax.scan(body, a, bs)[0]
+
+comp = jax.jit(f).lower(jax.ShapeDtypeStruct((M, K), jnp.float32),
+                        jax.ShapeDtypeStruct((4, K, N), jnp.float32)
+                        ).compile()
+t = ha.analyze(comp.as_text())
+assert t.flops == 4 * 2 * M * K * N, t.flops
+
+def g(a, bs):
+    def outer(x, bs2):
+        def inner(y, b):
+            return y @ b, ()
+        return jax.lax.scan(inner, x, bs2)[0], ()
+    return jax.lax.scan(outer, a, bs)[0]
+
+comp2 = jax.jit(g).lower(jax.ShapeDtypeStruct((M, K), jnp.float32),
+                         jax.ShapeDtypeStruct((3, 4, K, N), jnp.float32)
+                         ).compile()
+t2 = ha.analyze(comp2.as_text())
+assert t2.flops == 12 * 2 * M * K * N, t2.flops
+
+# collectives on a sharded grad
+from jax.sharding import NamedSharding, PartitionSpec as P
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+def h(x, w):
+    return jnp.sum(x @ w)
+with mesh:
+    c3 = jax.jit(jax.grad(h, argnums=1),
+                 in_shardings=(NamedSharding(mesh, P("data", None)),
+                               NamedSharding(mesh, P(None, "model"))),
+                 out_shardings=NamedSharding(mesh, P(None, "model"))
+                 ).lower(jax.ShapeDtypeStruct((64, 256), jnp.float32),
+                         jax.ShapeDtypeStruct((256, 512), jnp.float32)
+                         ).compile()
+t3 = ha.analyze(c3.as_text())
+assert t3.collective_bytes["all-reduce"] > 0
+print("WALKER-OK")
+""")
+    assert "WALKER-OK" in out
+
+
+def test_roofline_builds_from_records():
+    """If dry-run records exist, the roofline table builds cleanly."""
+    results = os.path.join(ROOT, "experiments", "dryrun")
+    if not os.path.isdir(results):
+        pytest.skip("no dry-run records present")
+    out = run_sub("""
+from benchmarks import roofline
+rows = roofline.build_table()
+ok = [r for r in rows if r.get("status") == "ok"]
+assert len(ok) > 0
+for r in ok:
+    assert r["compute_s"] >= 0 and r["memory_s"] >= 0
+    assert r["dominant"] in ("compute", "memory", "collective")
+print("ROWS", len(ok))
+""")
+    assert "ROWS" in out

@@ -1,0 +1,294 @@
+"""Substrate tests: optimizer, schedules, losses, data, checkpointing,
+straggler detection, gradient compression, elastic planning."""
+import math
+import os
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import checkpoint
+from repro.data import synthetic, tokens
+from repro.dist import compress, elastic, straggler
+from repro.train import losses, optim
+
+
+# ---------------------------------------------------------------------------
+# optimizer / schedules
+# ---------------------------------------------------------------------------
+
+def test_adamw_converges_quadratic():
+    cfg = optim.AdamWConfig(lr=0.1)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = optim.adamw_init(params)
+    for _ in range(200):
+        g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        params, state, _ = optim.adamw_update(cfg, g, state, params)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_adamw_skips_integer_leaves():
+    cfg = optim.AdamWConfig(lr=0.1)
+    params = {"w": jnp.ones(3), "mapping": jnp.arange(3, dtype=jnp.int32)}
+    state = optim.adamw_init(params)
+    grads = {"w": jnp.ones(3), "mapping": None}
+    new_params, state, _ = optim.adamw_update(cfg, grads, state, params)
+    np.testing.assert_array_equal(np.asarray(new_params["mapping"]),
+                                  np.arange(3))
+
+
+def test_weight_decay_decoupled():
+    """wd shrinks params even with zero gradients (decoupled semantics)."""
+    cfg = optim.AdamWConfig(lr=0.1, weight_decay=0.5, grad_clip=None)
+    params = {"w": jnp.asarray([1.0])}
+    state = optim.adamw_init(params)
+    new_params, *_ = optim.adamw_update(cfg, {"w": jnp.zeros(1)}, state,
+                                        params)
+    assert float(new_params["w"][0]) < 1.0
+
+
+def test_grad_clip():
+    cfg = optim.AdamWConfig(lr=1.0, grad_clip=1.0)
+    params = {"w": jnp.zeros(4)}
+    state = optim.adamw_init(params)
+    _, _, m = optim.adamw_update(cfg, {"w": jnp.full(4, 100.0)}, state,
+                                 params)
+    assert float(m["grad_norm"]) == pytest.approx(200.0)
+
+
+def test_sgdr_restarts():
+    sched = optim.sgdr_schedule(t0=10, t_mult=2)
+    vals = [float(sched(jnp.asarray(s))) for s in range(35)]
+    assert vals[0] == pytest.approx(1.0)
+    assert vals[9] < 0.05  # end of first period
+    assert vals[10] == pytest.approx(1.0)  # restart
+    assert vals[29] < 0.05  # end of second period (10 + 20)
+    assert vals[30] == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+@hypothesis.settings(max_examples=10, deadline=None)
+@hypothesis.given(b=st.integers(1, 4), s=st.integers(2, 33),
+                  v=st.integers(3, 40), chunk=st.sampled_from([4, 8, 512]),
+                  seed=st.integers(0, 99))
+def test_chunked_ce_matches_dense(b, s, v, chunk, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    d = 16
+    vp = v + (-v) % 8  # padded vocab
+    hidden = jax.random.normal(ks[0], (b, s, d))
+    head = jax.random.normal(ks[1], (d, vp))
+    labels = jax.random.randint(ks[2], (b, s), 0, v, dtype=jnp.int32)
+    loss, count = losses.chunked_cross_entropy(hidden, head, labels,
+                                               vocab=v, chunk=chunk)
+    # dense reference
+    logits = (hidden @ head)[..., :v]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ref = -jnp.mean(jnp.take_along_axis(logp, labels[..., None],
+                                        axis=-1))
+    assert float(count) == b * s
+    np.testing.assert_allclose(float(loss), float(ref), rtol=2e-4)
+
+
+def test_chunked_ce_ignore_labels():
+    hidden = jnp.ones((1, 4, 8))
+    head = jnp.ones((8, 8))
+    labels = jnp.asarray([[1, losses.IGNORE, 2, losses.IGNORE]])
+    _, count = losses.chunked_cross_entropy(hidden, head, labels, vocab=8,
+                                            chunk=2)
+    assert float(count) == 2
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+def test_synthetic_datasets_deterministic():
+    a = synthetic.load("nid", n_train=100, n_test=10)
+    b = synthetic.load("nid", n_train=100, n_test=10)
+    np.testing.assert_array_equal(a.x_train, b.x_train)
+    assert a.in_features == 593
+    m = synthetic.load("mnist", n_train=50, n_test=10)
+    assert m.x_train.shape == (50, 784)
+    assert 0 <= m.x_train.min() and m.x_train.max() <= 1
+    j = synthetic.load("jsc_openml", n_train=50, n_test=10)
+    assert j.x_train.shape == (50, 16) and j.n_classes == 5
+
+
+def test_token_pipeline_sharding():
+    cfg = tokens.TokenPipelineConfig(vocab=64, seq_len=8, global_batch=8,
+                                     seed=1)
+    corpus = tokens.SyntheticCorpus(cfg)
+    full = list(corpus.batches(host_index=0, host_count=1, steps=1))[0]
+    h0 = list(corpus.batches(host_index=0, host_count=2, steps=1))[0]
+    h1 = list(corpus.batches(host_index=1, host_count=2, steps=1))[0]
+    np.testing.assert_array_equal(full[0][:4], h0[0])
+    np.testing.assert_array_equal(full[0][4:], h1[0])
+    # labels are next tokens
+    np.testing.assert_array_equal(full[0][:, 1:], full[1][:, :-1])
+
+
+def test_mnist_augmentation_shifts():
+    x = np.zeros((2, 784), np.float32)
+    x[:, 14 * 28 + 14] = 1.0
+    out = synthetic.augment_shift(x, np.random.default_rng(0))
+    assert out.shape == x.shape
+    assert out.sum() == x.sum()  # rolled, not lost
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3),
+            "b": {"c": jnp.ones(4, jnp.bfloat16)},
+            "d": [jnp.zeros(2), jnp.asarray(3)]}
+    checkpoint.save(str(tmp_path), 7, tree)
+    like = jax.tree.map(lambda a: jnp.zeros_like(a), tree)
+    restored, step = checkpoint.restore(str(tmp_path), like)
+    assert step == 7
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                      np.asarray(y, np.float32))
+
+
+def test_checkpoint_atomicity_and_gc(tmp_path):
+    tree = {"w": jnp.ones(3)}
+    for s in (1, 2, 3, 4, 5):
+        checkpoint.save(str(tmp_path), s, tree, keep=2)
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(tmp_path))
+    assert steps == [4, 5]
+    # a stale tmp dir must not be picked up
+    os.makedirs(os.path.join(str(tmp_path), "step_0000000009.tmp"))
+    assert checkpoint.latest_step(str(tmp_path)) == 5
+
+
+def test_checkpoint_async(tmp_path):
+    tree = {"w": jnp.full(8, 2.0)}
+    t = checkpoint.save_async(str(tmp_path), 3, tree)
+    t.join()
+    restored, step = checkpoint.restore(str(tmp_path), tree)
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(tree["w"]))
+
+
+# ---------------------------------------------------------------------------
+# straggler / fault tolerance
+# ---------------------------------------------------------------------------
+
+def test_straggler_detector_flags_outlier():
+    det = straggler.StragglerDetector(warmup=3)
+    flags = [det.observe(i, 1.0 + 0.01 * (i % 3)) for i in range(20)]
+    assert not any(flags)
+    assert det.observe(20, 10.0)  # 10x the mean -> flagged
+    assert det.events and det.events[0]["step"] == 20
+
+
+def test_retry_step_restores_and_replays():
+    calls = {"n": 0, "restores": 0}
+
+    def step():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("simulated device loss")
+        return "ok"
+
+    out = straggler.retry_step(step, lambda: calls.__setitem__(
+        "restores", calls["restores"] + 1), max_retries=3)
+    assert out == "ok"
+    assert calls["restores"] == 2
+
+
+def test_train_loop_survives_injected_failures(tmp_path):
+    """Full loop integration: a step that fails twice mid-run completes
+    with checkpoint-restore replay and reaches the target step."""
+    from repro.train import loop as train_loop
+
+    params = {"w": jnp.zeros(2)}
+    opt = optim.adamw_init(params)
+    fail_at = {"steps": {3, 4}}
+
+    def step_fn(p, o, batch):
+        if batch["step"] in fail_at["steps"]:
+            fail_at["steps"].discard(batch["step"])
+            raise RuntimeError("boom")
+        g = {"w": jnp.ones(2) * 0.1}
+        p2, o2, m = optim.adamw_update(optim.AdamWConfig(lr=0.1), g, o, p)
+        return p2, o2, {"loss": jnp.sum(p2["w"] ** 2)}
+
+    def batch_fn(step):
+        return {"step": step}
+
+    state = train_loop.LoopState(params=params, opt_state=opt)
+    cfg = train_loop.LoopConfig(total_steps=6, ckpt_dir=str(tmp_path),
+                                ckpt_every=2, ckpt_async=False,
+                                max_retries=2)
+    state = train_loop.run(cfg, state, step_fn, batch_fn)
+    assert state.step == 6
+    assert state.failures == 2
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+@hypothesis.settings(max_examples=20, deadline=None)
+@hypothesis.given(seed=st.integers(0, 999), scale=st.floats(0.01, 100.0))
+def test_compress_error_feedback_bounded(seed, scale):
+    """|accumulated error| <= quantization step (error feedback invariant)."""
+    g = jax.random.normal(jax.random.PRNGKey(seed), (64,)) * scale
+    err = jnp.zeros(64)
+    for _ in range(5):
+        c, err = compress.compress(g, err)
+        step = float(c.scale)
+        assert float(jnp.abs(err).max()) <= step * 0.5 + 1e-6
+
+
+def test_compressed_sgd_tracks_uncompressed():
+    """Error feedback keeps compressed-SGD near the exact trajectory."""
+    w_exact = jnp.asarray([2.0, -3.0, 1.0, 4.0])
+    w_comp = w_exact
+    err = jnp.zeros(4)
+    grad = jax.grad(lambda w: jnp.sum(w ** 2))
+    for _ in range(60):
+        w_exact = w_exact - 0.05 * grad(w_exact)
+        c, err = compress.compress(grad(w_comp), err)
+        w_comp = w_comp - 0.05 * compress.decompress(c)
+    np.testing.assert_allclose(np.asarray(w_comp), np.asarray(w_exact),
+                               atol=5e-2)
+
+
+def test_compress_tree_roundtrip():
+    grads = {"a": jnp.asarray([1.0, -2.0]), "b": jnp.asarray([0.5])}
+    errs = compress.init_error(grads)
+    comp, errs = compress.compress_tree(grads, errs)
+    back = compress.decompress_tree(comp, grads)
+    np.testing.assert_allclose(np.asarray(back["a"]),
+                               np.asarray(grads["a"]), atol=0.05)
+
+
+# ---------------------------------------------------------------------------
+# elastic
+# ---------------------------------------------------------------------------
+
+def test_remesh_plan_divisibility():
+    from repro.configs import lm_archs
+    cfg = lm_archs.get("qwen2-72b")
+    ok = elastic.plan_remesh(cfg, (16, 16), (8, 16))
+    assert ok.ok
+    bad = elastic.plan_remesh(cfg, (16, 16), (16, 13))
+    assert not bad.ok and "divisible" in bad.reason
+
+
+def test_remesh_plan_memory_gate():
+    from repro.configs import lm_archs
+    cfg = lm_archs.get("qwen2-72b")
+    tiny = elastic.plan_remesh(cfg, (16, 16), (2, 8))  # 16 devices
+    assert not tiny.ok and "exceeds" in tiny.reason
