@@ -100,6 +100,8 @@ def split_computations(hlo: str) -> Dict[str, Computation]:
 _DEF_RE = re.compile(r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\(?[\w\[\],\s\{\}]*?)\s+[\w\-]+\(")
 _DOT_RE = re.compile(
     r"^(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*(\w+)\[([\d,]*)\]\S*\s+dot\(([^)]*)\)")
+# first dot operand: optionally an inlined type, then the instruction name
+_DOT_LHS_RE = re.compile(r"dot\((?:(\w+)\[([\d,]*)\]\S*\s+)?%?([\w\.\-]+)")
 
 
 def shape_table(comp: "Computation") -> Dict[str, str]:
@@ -115,8 +117,9 @@ def shape_table(comp: "Computation") -> Dict[str, str]:
 def dot_flops(line: str, table: Dict[str, str]) -> float:
     """FLOPs of one dot op: 2 * prod(output dims) * contracted size.
 
-    Operand shapes come from the computation's symbol table (optimized CPU
-    HLO does not inline operand types)."""
+    The lhs shape is read from the inlined operand type when present
+    (newer XLA text) and from the computation's symbol table otherwise
+    (older optimized CPU HLO)."""
     m = _DOT_RE.match(line)
     if not m:
         return 0.0
@@ -124,11 +127,14 @@ def dot_flops(line: str, table: Dict[str, str]) -> float:
     for d in m.group(2).split(","):
         if d:
             out_elems *= int(d)
-    operands = [o.strip().lstrip("%") for o in m.group(3).split(",")]
     lhs_dims: List[int] = []
-    if operands:
-        lhs_type = table.get(operands[0], "")
-        _, lhs_dims = _parse_shape(lhs_type.replace("(", ""))
+    lm = _DOT_LHS_RE.search(line)
+    if lm:
+        if lm.group(1):  # inlined "f32[128,128]{1,0} %name" operand type
+            lhs_dims = [int(d) for d in lm.group(2).split(",") if d]
+        else:
+            lhs_type = table.get(lm.group(3), "")
+            _, lhs_dims = _parse_shape(lhs_type.replace("(", ""))
     cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
     contracted = 1
     if cm and lhs_dims:

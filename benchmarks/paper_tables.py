@@ -15,14 +15,13 @@
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Dict, List
 
-import jax
 import numpy as np
 
+from repro import pipeline
 from repro.configs import paper_tasks
-from repro.core import assemble, folding, hwcost, pruning
+from repro.core import hwcost
 from repro.core.assemble import AssembleConfig, LayerSpec
 from repro.data import synthetic
 from repro.train import lut_trainer
@@ -42,23 +41,24 @@ def _tasks():
     }
 
 
-def _train_with_learned_mappings(cfg, data, steps=STEPS, seed=0):
-    """The paper's full flow: dense+lasso pre-train -> structured pruning
-    -> sparse retrain (random mappings are the PRIOR-work behavior)."""
-    dense = lut_trainer.train(cfg, data, dense=True, lasso=1e-4,
-                              steps=max(60, steps // 3), seed=seed)
-    mappings = pruning.select_mappings(dense.params, cfg)
-    return lut_trainer.train(cfg, data, mappings=mappings, steps=steps,
-                             sgdr_t0=80, seed=seed)
+def _train_with_learned_mappings(cfg, data, steps=STEPS, seed=0
+                                 ) -> pipeline.Toolflow:
+    """The paper's full flow via the unified driver: dense+lasso pre-train
+    -> structured pruning -> sparse retrain (random mappings are the
+    PRIOR-work behavior)."""
+    flow = pipeline.Toolflow(cfg, pretrain_steps=max(60, steps // 3),
+                             retrain_steps=steps, lasso=1e-4, sgdr_t0=80,
+                             seed=seed)
+    return flow.pretrain(data).prune().retrain()
 
 
 def table2() -> List[dict]:
     rows = []
     for name, (cfg, data, fc_widths) in _tasks().items():
         fp_fc = lut_trainer.dense_mlp_reference(data, fc_widths, steps=250)
-        res = _train_with_learned_mappings(cfg, data)
-        acc = lut_trainer.accuracy(cfg, res.params, data)
-        acc_folded = lut_trainer.accuracy(cfg, res.params, data, folded=True)
+        flow = _train_with_learned_mappings(cfg, data)
+        acc = flow.accuracy()
+        acc_folded = flow.accuracy(folded=True)
         rows.append({
             "task": name, "fp_fc_acc": round(fp_fc, 4),
             "ours_acc": round(acc, 4), "folded_acc": round(acc_folded, 4),
@@ -120,10 +120,10 @@ def table4() -> List[dict]:
     rows = []
     for name, cfg in _baseline_configs("nid").items():
         if name == "neuralut_assemble":
-            res = _train_with_learned_mappings(cfg, data)
+            params = _train_with_learned_mappings(cfg, data).params
         else:  # prior works use random fan-in selection (their behavior)
-            res = lut_trainer.train(cfg, data, steps=STEPS)
-        acc = lut_trainer.accuracy(cfg, res.params, data)
+            params = lut_trainer.train(cfg, data, steps=STEPS).params
+        acc = lut_trainer.accuracy(cfg, params, data)
         rep = hwcost.report(cfg, pipeline_every=3)
         rows.append({
             "model": name, "acc": round(acc, 4), "luts": rep.luts,
@@ -210,15 +210,14 @@ def fig5(seeds=(0, 1, 2)) -> List[dict]:
             accs = []
             for seed in seeds:
                 cfg = v["cfg"]
-                mappings = None
+                flow = pipeline.Toolflow(cfg, pretrain_steps=80,
+                                         retrain_steps=STEPS, lasso=1e-4,
+                                         sgdr_t0=0, seed=seed)
                 if v["learned"]:
-                    dense = lut_trainer.train(cfg, data, dense=True,
-                                              lasso=1e-4, steps=80,
-                                              seed=seed)
-                    mappings = pruning.select_mappings(dense.params, cfg)
-                res = lut_trainer.train(cfg, data, mappings=mappings,
-                                        steps=STEPS, seed=seed)
-                accs.append(lut_trainer.accuracy(cfg, res.params, data))
+                    flow.pretrain(data).prune().retrain()
+                else:  # skip prune -> random mappings (the ablation)
+                    flow.retrain(data)
+                accs.append(flow.accuracy())
             rows.append({
                 "option": option, "variant": vname, "luts": area,
                 "acc_mean": round(float(np.mean(accs)), 4),

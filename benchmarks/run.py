@@ -41,19 +41,27 @@ def bench_kernels(rows: list) -> None:
         rows.append((f"lut_lookup_{impl}", us,
                      "batch=4096 units=256 entries=64"))
 
+    from repro import pipeline
     from repro.configs import paper_tasks
-    from repro.core import assemble, folding
+    from repro.core import assemble
     from repro.data import synthetic
+    from repro.serve.lut_engine import LUTEngine
     cfg = paper_tasks.reduced("nid")
     data = synthetic.load("nid", n_train=64, n_test=2048)
     params = assemble.init(jax.random.PRNGKey(0), cfg)
     x = jnp.asarray(data.x_test[:1024])
-    net = folding.fold_network(params, cfg)
+    compiled = pipeline.compile_network(params, cfg)
     q_fwd = jax.jit(lambda xx: assemble.apply_codes(params, cfg, xx))
-    f_fwd = jax.jit(lambda xx: folding.folded_apply_codes(net, params, xx))
     rows.append(("nid_quantized_forward", _time_call(q_fwd, x), "batch=1024"))
-    rows.append(("nid_folded_forward", _time_call(f_fwd, x),
-                 "batch=1024 (pure table lookups)"))
+    for impl in ("take", "onehot", "pallas"):
+        us = _time_call(lambda xx, i=impl: compiled.predict_codes(
+            xx, backend=i), x)
+        rows.append((f"nid_folded_forward_{impl}", us,
+                     "batch=1024 (pure table lookups)"))
+    eng = LUTEngine(compiled, block=256)
+    us = _time_call(lambda xx: eng.run(np.asarray(xx)), x)
+    rows.append(("nid_lut_engine", us,
+                 "batch=1024 via 256-row micro-batching engine"))
 
 
 def bench_tables(rows: list, fast: bool) -> dict:

@@ -25,11 +25,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import lm_archs
-from repro.core import assemble, folding, hwcost, pruning
 from repro.core.assemble import AssembleConfig, LayerSpec
 from repro.data import synthetic, tokens
 from repro.models import layers, lm, moe
-from repro.train import losses, lut_trainer, optim
+from repro.pipeline import Toolflow
+from repro.train import losses, optim
 
 
 def router_tree_config(d_model: int, n_experts: int) -> AssembleConfig:
@@ -81,19 +81,17 @@ def main() -> None:
 
     print("== 3. distill into a NeuraLUT-Assemble tree (paper toolflow)")
     rcfg = router_tree_config(cfg.d_model, cfg.n_experts)
-    dense = lut_trainer.train(rcfg, ds, dense=True, lasso=1e-4, steps=100)
-    mappings = pruning.select_mappings(dense.params, rcfg)
-    res = lut_trainer.train(rcfg, ds, mappings=mappings, steps=300,
-                            lr=1e-2)
-    agree = lut_trainer.accuracy(rcfg, res.params, ds)
+    flow = Toolflow(rcfg, pretrain_steps=100, retrain_steps=300, lr=1e-2,
+                    pretrain_lr=5e-3, lasso=1e-4, sgdr_t0=0)
+    flow.pretrain(ds).prune().retrain()
+    agree = flow.accuracy()
     print(f"   top-1 routing agreement: {agree * 100:.1f}%")
 
-    print("== 4. fold + plug into the live MoE layer")
-    net = folding.fold_network(res.params, rcfg)
+    print("== 4. compile + plug into the live MoE layer")
+    compiled = flow.compile()
 
     def lut_router_fn(xf):
-        return folding.folded_logits(net, res.params,
-                                     xf.astype(jnp.float32))
+        return compiled.predict(xf.astype(jnp.float32))
 
     xin = h.astype(jnp.float32)
     y_dense, _ = moe.apply_moe(layer0["moe"], mspec, xin)
@@ -104,7 +102,7 @@ def main() -> None:
     print(f"   MoE output relative diff (dense vs LUT router): {rel:.3f}")
 
     print("== 5. hardware cost of the folded router")
-    rep = hwcost.report(rcfg, pipeline_every=3)
+    rep = compiled.hw_report(pipeline_every=3)
     dense_macs = cfg.d_model * cfg.n_experts
     print(f"   LUT router: {rep.luts} LUTs, {rep.latency_ns:.2f} ns "
           f"latency, 0 multipliers (vs {dense_macs} MACs for the dense "

@@ -1,8 +1,11 @@
 """Quickstart: the full NeuraLUT-Assemble toolflow in one script.
 
-Train (dense + hardware-aware pruning -> sparse retrain) a reduced NID
-model on the surrogate dataset, fold it into L-LUTs, verify bit-exactness,
-report the FPGA cost model, and emit synthesizable Verilog.
+One ``Toolflow`` drives the paper's phases end-to-end (dense pre-train with
+the hardware-aware regularizer -> structured pruning -> sparse retrain ->
+exhaustive fold), producing a ``CompiledLUTNetwork`` — a self-contained
+deployment artifact that is saved, re-loaded, verified bit-exact, costed
+with the FPGA model, and emitted as synthesizable Verilog.  No training
+params cross the deployment boundary.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,10 +14,13 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+import numpy as np
+
 from repro.configs import paper_tasks
-from repro.core import dontcare, folding, hwcost, pruning, rtl
+from repro.core import dontcare
 from repro.data import synthetic
-from repro.train import lut_trainer
+from repro.pipeline import CompiledLUTNetwork, Toolflow
+from repro.serve.lut_engine import LUTEngine
 
 
 def main() -> None:
@@ -23,39 +29,54 @@ def main() -> None:
     print(f"== NID surrogate: {data.x_train.shape[1]} one-bit inputs, "
           f"{len(data.x_train)} train rows")
 
+    flow = Toolflow(cfg, pretrain_steps=120, retrain_steps=250, lasso=1e-4,
+                    sgdr_t0=100)
+
     print("== phase 1: dense pre-training with group-lasso (hardware-aware)")
-    dense = lut_trainer.train(cfg, data, dense=True, lasso=1e-4, steps=120)
-    mappings = pruning.select_mappings(dense.params, cfg)
-    cov = pruning.mapping_coverage(mappings, cfg)
+    flow.pretrain(data).prune()
+    cov = flow.stages["prune"].metrics["coverage"]
     print(f"   learned mappings cover {cov[0] * 100:.0f}% of inputs at L0")
 
     print("== phase 2: sparse retraining with learned mappings")
-    res = lut_trainer.train(cfg, data, mappings=mappings, steps=250,
-                            sgdr_t0=100)
-    acc = lut_trainer.accuracy(cfg, res.params, data)
+    flow.retrain()
+    acc = flow.accuracy()
     print(f"   quantized accuracy: {acc * 100:.2f}%")
 
-    print("== phase 3: folding into L-LUTs")
-    net = folding.fold_network(res.params, cfg)
-    acc_f = lut_trainer.accuracy(cfg, res.params, data, folded=True)
+    print("== phase 3: compiling into the L-LUT artifact")
+    compiled = flow.compile()
+    acc_f = flow.accuracy(folded=True)
     print(f"   folded accuracy:    {acc_f * 100:.2f}%  "
           f"(bit-exact: {abs(acc - acc_f) < 1e-12})")
-    print(f"   total L-LUT entries: {net.num_entries()}")
+    print(f"   total L-LUT entries: {compiled.num_entries()}")
+
+    path = os.path.join(os.path.dirname(__file__), "nid_assemble.npz")
+    compiled.save(path)
+    reloaded = CompiledLUTNetwork.load(path)
+    x = np.asarray(data.x_test[:256], np.float32)
+    same = bool(np.array_equal(np.asarray(compiled.predict_codes(x)),
+                               np.asarray(reloaded.predict_codes(x))))
+    print(f"   saved + reloaded {path} (round-trip bit-exact: {same})")
+    eng = LUTEngine(reloaded, block=64)
+    served = eng.run(x[:100])
+    direct = np.asarray(reloaded.predict(x[:100]))
+    print(f"   micro-batching engine: {eng.stats.ticks} ticks, "
+          f"{eng.stats.rows_padded} padded rows, serve==predict: "
+          f"{bool(np.allclose(served, direct))}")
 
     print("== phase 4: hardware report (xcvu9p model) + RTL")
     for pe in (1, 3):
-        r = hwcost.report(cfg, pipeline_every=pe)
+        r = compiled.hw_report(pipeline_every=pe)
         print(f"   pipeline_every={pe}: {r.luts} LUTs, {r.ffs} FFs, "
               f"Fmax {r.fmax_mhz:.0f} MHz, latency {r.latency_ns:.2f} ns, "
               f"area-delay {r.area_delay:.0f} LUTxns")
-    dc = dontcare.analyze(net, res.params, data.x_train[:2048])
+    dc = dontcare.analyze(compiled.folded(), data.x_train[:2048])
     print(f"   don't-care pass: {dc.structural_luts} -> "
           f"{dc.optimized_luts} LUTs ({dc.lut_reduction:.2f}x; the paper's "
           f"ref [20] direction — explains Vivado's measured-vs-structural "
           f"gap)")
     out = os.path.join(os.path.dirname(__file__), "nid_assemble.v")
     with open(out, "w") as f:
-        f.write(rtl.emit_verilog(net, res.params, pipeline_every=3))
+        f.write(compiled.to_verilog(pipeline_every=3))
     print(f"   wrote {out}")
 
 

@@ -44,11 +44,16 @@ class DontCareReport:
         return self.structural_luts / max(self.optimized_luts, 1)
 
 
-def analyze(net: FoldedNetwork, params: dict, x: np.ndarray
-            ) -> DontCareReport:
-    """x: [n, in_features] representative inputs (training set)."""
+def analyze(net: FoldedNetwork, x, _legacy_x=None) -> DontCareReport:
+    """x: [n, in_features] representative inputs (training set).
+
+    The deprecated ``analyze(net, params, x)`` signature still works for
+    one release; mappings/quantizers now live on the FoldedNetwork.
+    """
+    from repro.core.folding import _resolve_legacy_args
+    mappings, in_q, x = _resolve_legacy_args(net, x, _legacy_x, "analyze")
     cfg = net.cfg
-    codes = quant.quantize_codes(params["in_q"], cfg.input_quant_spec(),
+    codes = quant.quantize_codes(in_q, cfg.input_quant_spec(),
                                  jnp.asarray(x))
     observed_frac: List[float] = []
     possible: List[int] = []
@@ -57,11 +62,10 @@ def analyze(net: FoldedNetwork, params: dict, x: np.ndarray
     from repro.kernels import ops as lut_ops
 
     for l, spec in enumerate(cfg.layers):
-        pl = params["layers"][l]
         if spec.assemble:
             ci = codes.reshape(codes.shape[0], spec.units, spec.fan_in)
         else:
-            ci = codes[:, pl["mapping"]]
+            ci = codes[:, jnp.asarray(mappings[l])]
         addr = np.asarray(quant.pack_address(ci, cfg.in_bits(l),
                                              spec.fan_in))
         n_possible = 2 ** (cfg.in_bits(l) * spec.fan_in)

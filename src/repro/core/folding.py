@@ -8,19 +8,26 @@ the paper).  Folded inference then touches no arithmetic: pack codes into an
 address, look up, repeat.  ``tests/test_folding.py`` asserts bit-exact
 equivalence with the quantized model for every input.
 
+``FoldedNetwork`` is self-contained: it owns the tables, the learned
+mappings, and the boundary quantizers, so folded inference needs *no*
+training params (``folded_apply_codes(net, x)``).  The deployable artifact
+with save/load and backend selection is ``repro.pipeline.
+CompiledLUTNetwork``; this module is the mechanism underneath it.
+
 On TPU the lookup is executed by ``repro.kernels.lut_gather`` — either a
 vectorized take-gather or a one-hot matmul on the MXU (see DESIGN.md §2).
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import assemble, quant, subnet
+from repro.core import quant, subnet
 from repro.core.assemble import AssembleConfig
 
 Array = jax.Array
@@ -34,6 +41,9 @@ class FoldedNetwork:
     tables: List[Array]            # per layer: int32 [units, 2^(b_in*F)]
     in_q: dict                     # input quantizer params
     out_q: dict                    # final-layer quantizer params (for logits)
+    # per layer: int32 [units, fan_in] for mapping layers, None for assemble
+    # layers.  Optional only for nets built by pre-PR-1 callers.
+    mappings: Optional[List[Optional[Array]]] = None
 
     def num_entries(self) -> int:
         return int(sum(t.shape[0] * t.shape[1] for t in self.tables))
@@ -72,36 +82,68 @@ def fold_layer(params: dict, cfg: AssembleConfig, l: int) -> Array:
 
 def fold_network(params: dict, cfg: AssembleConfig) -> FoldedNetwork:
     tables = [fold_layer(params, cfg, l) for l in range(len(cfg.layers))]
+    mappings = [None if spec.assemble
+                else jnp.asarray(params["layers"][l]["mapping"], jnp.int32)
+                for l, spec in enumerate(cfg.layers)]
     return FoldedNetwork(cfg=cfg, tables=tables, in_q=params["in_q"],
-                         out_q=params["layers"][-1]["out_q"])
+                         out_q=params["layers"][-1]["out_q"],
+                         mappings=mappings)
 
 
-def folded_apply_codes(net: FoldedNetwork, params: dict, x: Array,
+def _resolve_legacy_args(net: FoldedNetwork, x, legacy_x, fn_name: str):
+    """Support the deprecated ``(net, params, x)`` calling convention.
+
+    Returns (mappings, in_q, x): when the old signature is used, mappings
+    and the input quantizer come from ``params`` (matching pre-PR-1
+    behavior); otherwise from the self-contained net.
+    """
+    if isinstance(x, dict) or legacy_x is not None:
+        if legacy_x is None:
+            raise TypeError(f"{fn_name}: got params dict but no input array")
+        warnings.warn(
+            f"{fn_name}(net, params, x) is deprecated; FoldedNetwork is "
+            f"self-contained — call {fn_name}(net, x)",
+            DeprecationWarning, stacklevel=3)
+        params, x = x, legacy_x
+        mappings = [None if spec.assemble
+                    else params["layers"][l]["mapping"]
+                    for l, spec in enumerate(net.cfg.layers)]
+        return mappings, params["in_q"], x
+    if net.mappings is None and any(not s.assemble for s in net.cfg.layers):
+        raise ValueError(
+            f"{fn_name}: FoldedNetwork has no mappings; re-fold with "
+            "fold_network(params, cfg)")
+    return net.mappings, net.in_q, x
+
+
+def folded_apply_codes(net: FoldedNetwork, x: Array, _legacy_x=None,
                        *, lut_impl: str = "take") -> Array:
     """Folded inference. x: [batch, in_features] floats -> final codes.
 
-    ``lut_impl``: 'take' (pure-jnp oracle) or 'onehot' (MXU-style matmul) —
-    both live in kernels/lut_gather; the Pallas kernel is exercised by the
-    kernel tests.
+    ``lut_impl``: 'take' (pure-jnp oracle), 'onehot' (MXU-style matmul) or
+    'pallas' (the VMEM-tiled kernel) — see DESIGN.md §2 for the decision
+    table.  The deprecated ``(net, params, x)`` signature still works for
+    one release and reads mappings/quantizers from ``params``.
     """
     from repro.kernels import ops as lut_ops
 
+    mappings, in_q, x = _resolve_legacy_args(net, x, _legacy_x,
+                                             "folded_apply_codes")
     cfg = net.cfg
-    codes = quant.quantize_codes(params["in_q"], cfg.input_quant_spec(), x)
+    codes = quant.quantize_codes(in_q, cfg.input_quant_spec(), x)
     for l, spec in enumerate(cfg.layers):
-        pl = params["layers"][l]
         if spec.assemble:
             ci = codes.reshape(codes.shape[0], spec.units, spec.fan_in)
         else:
-            ci = codes[:, pl["mapping"]]
+            ci = codes[:, mappings[l]]
         addr = quant.pack_address(ci, cfg.in_bits(l), spec.fan_in)
         codes = lut_ops.lut_lookup(net.tables[l], addr, impl=lut_impl)
     return codes
 
 
-def folded_logits(net: FoldedNetwork, params: dict, x: Array,
+def folded_logits(net: FoldedNetwork, x: Array, _legacy_x=None,
                   *, lut_impl: str = "take") -> Array:
-    codes = folded_apply_codes(net, params, x, lut_impl=lut_impl)
+    codes = folded_apply_codes(net, x, _legacy_x, lut_impl=lut_impl)
     cfg = net.cfg
     return quant.dequantize_codes(net.out_q, cfg.quant_spec(len(cfg.layers) - 1),
                                   codes)

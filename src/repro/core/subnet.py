@@ -155,11 +155,8 @@ def apply_subnet(
             hidden_inputs.append(h)
         else:
             h = z
-    # batch-norm per unit on the scalar output (out_dim folded into units)
+    # batch-norm per unit (BN stats are per unit, not per out_dim element)
     out = h
-    bshape = out.shape
-    flat = out.reshape(bshape[0], -1)  # [batch, units*out_dim]
-    # BN stats are per unit (not per out_dim element) — reshape accordingly.
     if spec.out_dim == 1:
         y, new_bn = quant.batchnorm_apply(params["bn"], out[..., 0],
                                           training=training)
@@ -169,7 +166,6 @@ def apply_subnet(
         y, new_bn = quant.batchnorm_apply(params["bn"], mean_in,
                                           training=training)
         out = out + (y - mean_in)[..., None]
-    del flat
     new_params = dict(params)
     new_params["bn"] = new_bn
     if activation:

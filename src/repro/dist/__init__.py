@@ -1,0 +1,7 @@
+"""Distribution substrate: sharding rules, activation constraints, gradient
+compression, straggler handling, elastic remesh planning, pipeline stages.
+
+Modules are imported individually (``from repro.dist import sharding``) so
+that importing the package never touches jax device state — the dry-run and
+the smoke tests depend on controlling device initialization order.
+"""

@@ -1,0 +1,65 @@
+"""Activation-sharding constraints over *logical* axis names.
+
+Model code annotates activations with logical names ("batch", "heads",
+"embed", "act_seq") instead of mesh axes; the mapping to physical mesh axes
+is resolved here, against whatever mesh is active.  Outside an
+``activation_rules`` context every ``constrain`` call is the identity, so
+the same model code runs unsharded on one CPU device and sharded under the
+production mesh without modification (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Array = jax.Array
+
+# The active mesh for constraint resolution (None => constraints are no-ops).
+_ACTIVE_MESH: Optional[Mesh] = None
+
+# Data-parallel-ish axes in priority order; "model" is the tensor axis.
+_DP_AXES = ("pod", "data")
+
+
+@contextlib.contextmanager
+def activation_rules(mesh: Mesh):
+    """Enable activation-sharding constraints for ``mesh`` (trace-time)."""
+    global _ACTIVE_MESH
+    prev = _ACTIVE_MESH
+    _ACTIVE_MESH = mesh
+    try:
+        yield mesh
+    finally:
+        _ACTIVE_MESH = prev
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """The data-parallel mesh axes present in ``mesh`` (ordered)."""
+    return tuple(a for a in _DP_AXES if a in mesh.axis_names)
+
+
+def _resolve(name, mesh: Mesh):
+    """Logical axis name -> mesh axis (or axes tuple) for PartitionSpec."""
+    if name is None:
+        return None
+    if name in ("batch", "act_batch"):
+        axes = dp_axes(mesh)
+        return axes if axes else None
+    if name in ("heads", "embed", "model"):
+        return "model" if "model" in mesh.axis_names else None
+    if name == "act_seq":
+        return None  # sequence stays unsharded (no sequence parallelism yet)
+    return name if name in mesh.axis_names else None
+
+
+def constrain(x: Array, *axes) -> Array:
+    """``with_sharding_constraint`` with logical axis names; identity when
+    no ``activation_rules`` context is active."""
+    mesh = _ACTIVE_MESH
+    if mesh is None:
+        return x
+    spec = P(*(_resolve(a, mesh) for a in axes))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

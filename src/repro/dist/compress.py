@@ -1,0 +1,81 @@
+"""Gradient compression with error feedback (int8, per-tensor scale).
+
+``compress`` quantizes ``g + err`` to int8 with a per-tensor scale and
+carries the rounding residual forward — the standard error-feedback scheme
+that keeps compressed SGD on the exact trajectory to first order.  The
+invariant ``|err| <= scale / 2`` holds by construction (round-to-nearest).
+
+``compressed_psum`` is the collective form: compress locally, all-reduce the
+dequantized values, return the mean — 4x less wire traffic than f32 grads
+when the transport quantizes (here the psum itself runs on dequantized
+values; the compression models the wire format).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class Compressed:
+    """int8 payload + per-tensor scale (an opaque leaf, not a pytree)."""
+    q: Array       # int8, same shape as the source tensor
+    scale: Array   # f32 scalar
+
+
+def compress(g: Array, err: Array) -> Tuple[Compressed, Array]:
+    """Quantize ``g + err`` to int8; returns (compressed, new error)."""
+    v = g + err
+    scale = jnp.maximum(jnp.max(jnp.abs(v)) / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(v / scale), -127, 127).astype(jnp.int8)
+    new_err = v - q.astype(jnp.float32) * scale
+    return Compressed(q=q, scale=scale), new_err
+
+
+def decompress(c: Compressed) -> Array:
+    return c.q.astype(jnp.float32) * c.scale
+
+
+def init_error(grads: Any) -> Any:
+    """Zero error-feedback state shaped like ``grads``."""
+    return jax.tree.map(jnp.zeros_like, grads)
+
+
+def compress_tree(grads: Any, errs: Any) -> Tuple[Any, Any]:
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(errs)
+    comp, new_e = [], []
+    for g, e in zip(flat_g, flat_e):
+        c, ne = compress(g, e)
+        comp.append(c)
+        new_e.append(ne)
+    return (jax.tree.unflatten(treedef, comp),
+            jax.tree.unflatten(treedef, new_e))
+
+
+def decompress_tree(comp: Any, like: Any) -> Any:
+    del like  # structure already carried by ``comp``
+    return jax.tree.map(decompress, comp,
+                        is_leaf=lambda x: isinstance(x, Compressed))
+
+
+def compressed_psum(grads: Any, errs: Any, axis_name: str
+                    ) -> Tuple[Any, Any]:
+    """Mean-reduce compressed gradients across ``axis_name`` shards.
+
+    Returns (mean tree on every shard, new error-feedback tree).
+    """
+    comp, new_errs = compress_tree(grads, errs)
+    n = jax.lax.psum(1, axis_name)
+
+    def reduce_leaf(c):
+        return jax.lax.psum(decompress(c), axis_name) / n
+
+    out = jax.tree.map(reduce_leaf, comp,
+                       is_leaf=lambda x: isinstance(x, Compressed))
+    return out, new_errs

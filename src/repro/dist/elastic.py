@@ -1,0 +1,65 @@
+"""Elastic remesh planning: can a checkpoint trained on mesh A resume on
+mesh B?
+
+Checks are structural, not empirical: the new tensor axis must divide the
+sharded dimensions (d_model, padded vocab), and the fp32 master + AdamW
+state must fit the per-device HBM budget on the shrunken device count.
+``ckpt/checkpoint.py`` does the actual respacing (save unsharded, restore
+with explicit shardings); this module only answers go / no-go with a
+reason.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+# fp32 params + AdamW m/v: 12 bytes per parameter of optimizer+master state.
+STATE_BYTES_PER_PARAM = 12
+# usable HBM per device for persistent state (half of a 64 GiB part; the
+# rest is activations/temp — the dry-run proves those separately).
+HBM_STATE_BUDGET = 32 * 2 ** 30
+
+
+@dataclasses.dataclass(frozen=True)
+class RemeshPlan:
+    ok: bool
+    reason: str = ""
+    old_devices: int = 0
+    new_devices: int = 0
+    per_device_state_bytes: int = 0
+
+
+def _devices(shape: Tuple[int, ...]) -> int:
+    n = 1
+    for s in shape:
+        n *= s
+    return n
+
+
+def plan_remesh(cfg, old_shape: Tuple[int, ...], new_shape: Tuple[int, ...],
+                *, hbm_budget: int = HBM_STATE_BUDGET) -> RemeshPlan:
+    """Validate resuming ``cfg`` from mesh ``old_shape`` on ``new_shape``.
+
+    Mesh shapes follow the (pod,) data, model axis convention — the last
+    axis is the tensor-parallel one.
+    """
+    old_n, new_n = _devices(old_shape), _devices(new_shape)
+    model = new_shape[-1]
+    for dim_name, dim in (("d_model", cfg.d_model),
+                          ("padded vocab", cfg.padded_vocab)):
+        if dim % model:
+            return RemeshPlan(
+                ok=False, old_devices=old_n, new_devices=new_n,
+                reason=(f"{dim_name}={dim} not divisible by model axis "
+                        f"{model} of new mesh {new_shape}"))
+    state = cfg.n_params() * STATE_BYTES_PER_PARAM
+    per_device = state // new_n
+    if per_device > hbm_budget:
+        return RemeshPlan(
+            ok=False, old_devices=old_n, new_devices=new_n,
+            per_device_state_bytes=per_device,
+            reason=(f"per-device optimizer state {per_device / 2**30:.1f} "
+                    f"GiB exceeds HBM budget {hbm_budget / 2**30:.0f} GiB "
+                    f"on {new_n} devices"))
+    return RemeshPlan(ok=True, old_devices=old_n, new_devices=new_n,
+                      per_device_state_bytes=per_device)

@@ -1,0 +1,94 @@
+"""Sharding rules: PartitionSpec trees for params, optimizer state, caches.
+
+Axis convention (DESIGN.md §7): ``pod``/``data`` are data-parallel axes,
+``model`` is the tensor-parallel axis.  The rules are structural — specs are
+derived from the abstract (eval_shape) parameter/cache trees, so every
+architecture gets a spec tree whose treedef matches its params exactly:
+
+  * 2D+ parameter leaves with a large trailing dimension (embeddings,
+    projection matrices, FFN weights) shard that dimension over ``model``;
+  * small leaves (biases, norms, scalar state) are replicated;
+  * cache leaves shard their batch axis (axis 1, layout [L, B, ...]) over
+    the data-parallel axes when the batch divides evenly, else replicate.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.dist.act_sharding import dp_axes as _dp_axes
+
+# Trailing dims at least this wide are worth tensor-sharding; smaller ones
+# (head_dim tables, gate vectors) stay replicated.
+_MIN_MODEL_DIM = 512
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Data-parallel axes of ``mesh`` (for batch PartitionSpecs)."""
+    return _dp_axes(mesh)
+
+
+def to_shardings(mesh: Mesh, specs: Any) -> Any:
+    """PartitionSpec tree -> NamedSharding tree on ``mesh``."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s, specs,
+        is_leaf=lambda s: isinstance(s, P))
+
+
+def _param_leaf_spec(leaf) -> P:
+    if leaf.ndim >= 2 and leaf.shape[-1] >= _MIN_MODEL_DIM:
+        return P(*([None] * (leaf.ndim - 1) + ["model"]))
+    return P()
+
+
+def _abstract_params(init_fn, cfg) -> Any:
+    return jax.eval_shape(lambda k: init_fn(k, cfg=cfg),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def param_specs(cfg) -> Any:
+    """PartitionSpec tree matching ``lm.init_params(cfg)``."""
+    from repro.models import lm
+    tree = _abstract_params(lm.init_params, cfg)
+    return jax.tree.map(_param_leaf_spec, tree)
+
+
+def whisper_param_specs(cfg) -> Any:
+    """PartitionSpec tree matching ``whisper.init_params(cfg)``."""
+    from repro.models import whisper
+    tree = _abstract_params(whisper.init_params, cfg)
+    return jax.tree.map(_param_leaf_spec, tree)
+
+
+def _cache_specs_from_tree(tree: Any, mesh: Mesh, batch: int) -> Any:
+    dp = _dp_axes(mesh)
+    dp_count = 1
+    for a in dp:
+        dp_count *= mesh.shape[a]
+    shard_batch = dp and batch % dp_count == 0 and batch >= dp_count
+
+    def leaf_spec(leaf):
+        # cache layout is [L, B, ...]; scalars/vectors stay replicated
+        if shard_batch and leaf.ndim >= 2 and leaf.shape[1] == batch:
+            return P(None, dp)
+        return P()
+
+    return jax.tree.map(leaf_spec, tree)
+
+
+def cache_specs(cfg, mesh: Mesh, batch: int) -> Any:
+    """PartitionSpec tree matching ``lm.init_decode_cache``."""
+    from repro.models import lm
+    tree = jax.eval_shape(lambda: lm.init_decode_cache(None, cfg, batch, 8))
+    return _cache_specs_from_tree(tree, mesh, batch)
+
+
+def whisper_cache_specs(cfg, mesh: Mesh, batch: int) -> Any:
+    """PartitionSpec tree matching ``whisper.init_decode_cache``."""
+    from repro.models import whisper
+    tree = jax.eval_shape(
+        lambda: whisper.init_decode_cache(None, cfg, batch, 8))
+    return _cache_specs_from_tree(tree, mesh, batch)

@@ -7,13 +7,18 @@ Dispatch policy (see DESIGN.md §2):
   * ``unit_affine``: einsum fallback vs the batched Pallas stage.
   * ``flash_attention``: jnp scan fallback (models/attention.py) vs Pallas.
 
+Pallas interpret mode is resolved in ONE place — :func:`pallas_interpret`,
+controlled by ``REPRO_PALLAS_INTERPRET`` ("1" force interpret, "0" force
+compiled, unset/"auto" = interpret unless running on TPU) — so TPU runs
+flip to compiled kernels without editing call sites.
+
 The LM substrate lowers through the jnp paths by default so the multi-pod
 dry-run exercises plain XLA collectives; kernels are enabled per-config for
 real TPU runs.
 """
 from __future__ import annotations
 
-import functools
+import os
 from typing import Optional
 
 import jax
@@ -27,6 +32,7 @@ from repro.kernels.subnet_mlp import unit_affine_pallas
 Array = jax.Array
 
 _ON_TPU = None
+_INTERPRET_OVERRIDE: Optional[bool] = None
 
 
 def on_tpu() -> bool:
@@ -36,15 +42,44 @@ def on_tpu() -> bool:
     return _ON_TPU
 
 
-@functools.partial(jax.jit, static_argnames=("impl",))
+def pallas_interpret() -> bool:
+    """The single source of truth for Pallas interpret mode.
+
+    Priority: :func:`set_pallas_interpret` override, then the
+    ``REPRO_PALLAS_INTERPRET`` env var ("1"/"0"), then auto (interpret
+    everywhere except on a real TPU backend).
+    """
+    if _INTERPRET_OVERRIDE is not None:
+        return _INTERPRET_OVERRIDE
+    env = os.environ.get("REPRO_PALLAS_INTERPRET", "auto").lower()
+    if env in ("1", "true", "yes"):
+        return True
+    if env in ("0", "false", "no"):
+        return False
+    return not on_tpu()
+
+
+def set_pallas_interpret(value: Optional[bool]) -> None:
+    """Force interpret mode on/off for this process (None = back to auto)."""
+    global _INTERPRET_OVERRIDE
+    _INTERPRET_OVERRIDE = value
+
+
+# jitted per impl; the pallas path resolves interpret mode per call so a
+# pallas_interpret() flip retraces (static arg of lut_lookup_pallas) instead
+# of silently reusing a stale executable.
+_lut_lookup_take = jax.jit(ref.lut_lookup_ref)
+_lut_lookup_onehot = jax.jit(ref.lut_lookup_onehot_ref)
+
+
 def lut_lookup(table: Array, addr: Array, *, impl: str = "take") -> Array:
     """Batched L-LUT lookup. table: [U, T], addr: [B, U] -> [B, U]."""
     if impl == "take":
-        return ref.lut_lookup_ref(table, addr)
+        return _lut_lookup_take(table, addr)
     if impl == "onehot":
-        return ref.lut_lookup_onehot_ref(table, addr)
+        return _lut_lookup_onehot(table, addr)
     if impl == "pallas":
-        return lut_lookup_pallas(table, addr, interpret=not on_tpu())
+        return lut_lookup_pallas(table, addr, interpret=pallas_interpret())
     raise ValueError(f"unknown lut_lookup impl {impl!r}")
 
 
@@ -54,7 +89,7 @@ def unit_affine(x: Array, w: Array, b: Array, *, activate: bool = False,
         return ref.unit_affine_ref(x, w, b, activate=activate)
     if impl == "pallas":
         return unit_affine_pallas(x, w, b, activate=activate,
-                                  interpret=not on_tpu())
+                                  interpret=pallas_interpret())
     raise ValueError(f"unknown unit_affine impl {impl!r}")
 
 
@@ -67,5 +102,5 @@ def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
     if impl == "pallas":
         return flash_attention_pallas(q, k, v, causal=causal, window=window,
                                       q_offset=q_offset,
-                                      interpret=not on_tpu())
+                                      interpret=pallas_interpret())
     raise ValueError(f"unknown flash_attention impl {impl!r}")

@@ -71,12 +71,8 @@ def init_params(rng: Array, cfg: ArchConfig) -> dict:
 
 
 def _scan(cfg: ArchConfig, body, x, xs):
-    inner = body
-
-    def barriered(x, xs):  # see lm._scan_blocks
-        return inner(jax.lax.optimization_barrier(x), xs)
-
-    body = barriered
+    # mirrors lm._scan_blocks (no optimization_barrier: it has no AD rule
+    # on this jax version and the checkpoint policy already pins the carry)
     if cfg.remat:
         body = jax.checkpoint(body,
                               policy=jax.checkpoint_policies.nothing_saveable)

@@ -1,0 +1,392 @@
+"""Unified toolflow API: train -> prune -> retrain -> compile -> deploy.
+
+The paper's contribution is a *toolflow* (§III): dense pre-training with a
+hardware-aware group regularizer, structured pruning to learned mappings,
+sparse re-training, exhaustive folding to L-LUTs, then deployment.  This
+module is that flow as one coherent API:
+
+  * ``Toolflow`` — stage driver with per-stage results and resumability::
+
+        compiled = (Toolflow(cfg)
+                    .pretrain(data).prune().retrain().compile())
+
+    or just ``Toolflow(cfg).run(data)``.  Stage outputs (dense params,
+    mappings, sparse params) are attributes; ``save_state``/``load_state``
+    round-trip them so a flow can be resumed in a fresh process.
+
+  * ``CompiledLUTNetwork`` — the self-contained deployment artifact.  It
+    owns everything inference needs (tables, mappings, boundary quantizers,
+    config): ``predict`` / ``predict_codes`` (jitted, batched, backend-
+    selectable), ``save``/``load`` (single ``.npz`` with an embedded JSON
+    config), ``hw_report`` / ``to_verilog`` delegating to ``core.hwcost`` /
+    ``core.rtl``.  No training params ever cross the deployment boundary.
+
+See DESIGN.md §1 for the API contract and migration notes from the old
+per-module calls (``lut_trainer.train`` x2 + ``pruning.select_mappings`` +
+``fold_network`` + params threading).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import assemble, folding, hwcost, pruning
+from repro.core.assemble import AssembleConfig, LayerSpec
+from repro.core.folding import FoldedNetwork
+
+Array = jax.Array
+
+ARTIFACT_VERSION = 1
+
+# Default lookup backend for compiled networks; override per call or with
+# REPRO_LUT_BACKEND (see DESIGN.md §2 for the decision table).
+def default_backend() -> str:
+    return os.environ.get("REPRO_LUT_BACKEND", "take")
+
+
+# ---------------------------------------------------------------------------
+# config (de)serialization
+# ---------------------------------------------------------------------------
+
+def config_to_dict(cfg: AssembleConfig) -> dict:
+    d = dataclasses.asdict(cfg)
+    d["layers"] = [dataclasses.asdict(l) for l in cfg.layers]
+    return d
+
+
+def config_from_dict(d: dict) -> AssembleConfig:
+    d = dict(d)
+    d["layers"] = tuple(LayerSpec(**l) for l in d["layers"])
+    return AssembleConfig(**d)
+
+
+def _tree_to_arrays(prefix: str, tree: Any) -> Dict[str, np.ndarray]:
+    return {f"{prefix}{i}": np.asarray(leaf)
+            for i, leaf in enumerate(jax.tree.leaves(tree))}
+
+
+def _tree_from_arrays(prefix: str, like: Any, data) -> Any:
+    leaves, treedef = jax.tree.flatten(like)
+    return jax.tree.unflatten(
+        treedef, [jnp.asarray(data[f"{prefix}{i}"])
+                  for i in range(len(leaves))])
+
+
+def _save_npz(path: str, arrays: Dict[str, np.ndarray], meta_key: str,
+              meta: dict) -> str:
+    """One ``.npz`` with a JSON document embedded under ``meta_key``."""
+    arrays = dict(arrays)
+    meta = dict(meta, format_version=ARTIFACT_VERSION)
+    arrays[meta_key] = np.frombuffer(
+        json.dumps(meta).encode("utf-8"), dtype=np.uint8)
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    np.savez_compressed(path, **arrays)
+    return path
+
+
+def _open_npz(path: str, meta_key: str):
+    """Returns (npz handle, decoded meta dict); caller closes the handle."""
+    if not path.endswith(".npz") and not os.path.exists(path):
+        path = path + ".npz"
+    data = np.load(path)
+    meta = json.loads(bytes(data[meta_key]).decode("utf-8"))
+    if meta.get("format_version", 0) > ARTIFACT_VERSION:
+        data.close()
+        raise ValueError(
+            f"{path}: format {meta.get('format_version')} is newer than "
+            f"this code ({ARTIFACT_VERSION})")
+    return data, meta
+
+
+# ---------------------------------------------------------------------------
+# the deployment artifact
+# ---------------------------------------------------------------------------
+
+class CompiledLUTNetwork:
+    """A folded NeuraLUT-Assemble network, self-contained for deployment.
+
+    Holds the per-layer L-LUT tables, the learned mappings, and the two
+    boundary quantizers — everything ``predict`` needs.  Construct with
+    :func:`compile_network` (from training params) or :meth:`load`.
+    """
+
+    def __init__(self, cfg: AssembleConfig, tables: List[np.ndarray],
+                 mappings: List[Optional[np.ndarray]],
+                 in_log_scale: float, out_log_scale: float,
+                 *, backend: Optional[str] = None):
+        self.cfg = cfg
+        self.tables = [np.asarray(t, np.int32) for t in tables]
+        self.mappings = [None if m is None else np.asarray(m, np.int32)
+                         for m in mappings]
+        self.in_log_scale = float(in_log_scale)
+        self.out_log_scale = float(out_log_scale)
+        self.backend = backend or default_backend()
+        self._folded: Optional[FoldedNetwork] = None
+        self._jitted: Dict[str, Any] = {}
+
+    # -- construction --------------------------------------------------------
+    @classmethod
+    def from_folded(cls, net: FoldedNetwork, **kw) -> "CompiledLUTNetwork":
+        if net.mappings is None:
+            raise ValueError("FoldedNetwork has no mappings; fold with "
+                             "fold_network(params, cfg)")
+        return cls(net.cfg, [np.asarray(t) for t in net.tables],
+                   [None if m is None else np.asarray(m)
+                    for m in net.mappings],
+                   float(net.in_q["log_scale"]),
+                   float(net.out_q["log_scale"]), **kw)
+
+    # -- inference -----------------------------------------------------------
+    def folded(self) -> FoldedNetwork:
+        """The on-device view (jnp tables) used by the jitted paths."""
+        if self._folded is None:
+            self._folded = FoldedNetwork(
+                cfg=self.cfg,
+                tables=[jnp.asarray(t) for t in self.tables],
+                in_q={"log_scale": jnp.asarray(self.in_log_scale)},
+                out_q={"log_scale": jnp.asarray(self.out_log_scale)},
+                mappings=[None if m is None else jnp.asarray(m)
+                          for m in self.mappings])
+        return self._folded
+
+    def _fn(self, backend: Optional[str], kind: str = "codes"):
+        impl = backend or self.backend
+        key = (kind, impl)
+        if key not in self._jitted:
+            net = self.folded()
+            fold_fn = (folding.folded_apply_codes if kind == "codes"
+                       else folding.folded_logits)
+            self._jitted[key] = jax.jit(
+                lambda x: fold_fn(net, x, lut_impl=impl))
+        return self._jitted[key]
+
+    def predict_codes(self, x, *, backend: Optional[str] = None) -> Array:
+        """[batch, in_features] floats -> final-layer integer codes."""
+        return self._fn(backend, "codes")(jnp.asarray(x))
+
+    def predict(self, x, *, backend: Optional[str] = None) -> Array:
+        """[batch, in_features] floats -> dequantized logits."""
+        return self._fn(backend, "logits")(jnp.asarray(x))
+
+    # -- introspection / hardware --------------------------------------------
+    def num_entries(self) -> int:
+        return int(sum(t.shape[0] * t.shape[1] for t in self.tables))
+
+    def hw_report(self, pipeline_every: int = 3) -> hwcost.HwReport:
+        return hwcost.report(self.cfg, pipeline_every=pipeline_every)
+
+    def to_verilog(self, **kw) -> str:
+        from repro.core import rtl
+        return rtl.emit_verilog(self.folded(), **kw)
+
+    # -- persistence ---------------------------------------------------------
+    def save(self, path: str) -> str:
+        """Write a single ``.npz``: tables/mappings + embedded JSON config."""
+        arrays: Dict[str, np.ndarray] = {}
+        for l, t in enumerate(self.tables):
+            arrays[f"table_{l}"] = t
+        for l, m in enumerate(self.mappings):
+            if m is not None:
+                arrays[f"mapping_{l}"] = m
+        meta = {
+            "config": config_to_dict(self.cfg),
+            "in_log_scale": self.in_log_scale,
+            "out_log_scale": self.out_log_scale,
+            "backend": self.backend,
+        }
+        return _save_npz(path, arrays, "meta_json", meta)
+
+    @classmethod
+    def load(cls, path: str) -> "CompiledLUTNetwork":
+        data, meta = _open_npz(path, "meta_json")
+        with data:
+            cfg = config_from_dict(meta["config"])
+            tables = [data[f"table_{l}"] for l in range(len(cfg.layers))]
+            mappings = [data[f"mapping_{l}"] if f"mapping_{l}" in data
+                        else None for l in range(len(cfg.layers))]
+        return cls(cfg, tables, mappings, meta["in_log_scale"],
+                   meta["out_log_scale"], backend=meta.get("backend"))
+
+
+def compile_network(params: dict, cfg: AssembleConfig,
+                    *, backend: Optional[str] = None) -> CompiledLUTNetwork:
+    """Fold trained ``params`` into a self-contained deployment artifact."""
+    net = folding.fold_network(params, cfg)
+    return CompiledLUTNetwork.from_folded(net, backend=backend)
+
+
+# ---------------------------------------------------------------------------
+# the stage driver
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StageResult:
+    name: str
+    seconds: float
+    metrics: Dict[str, Any]
+
+
+class Toolflow:
+    """Driver for the paper's three training phases plus compilation.
+
+    Stages must run in order (``pretrain`` -> ``prune`` -> ``retrain`` ->
+    ``compile``); each returns ``self`` so the flow chains.  ``retrain``
+    without ``prune`` falls back to random mappings (the paper's
+    "w/o Learned Mappings" ablation).  ``stages`` records what ran;
+    ``save_state``/``load_state`` resume a flow across processes.
+    """
+
+    def __init__(self, cfg: AssembleConfig, *, pretrain_steps: int = 120,
+                 retrain_steps: int = 250, lr: float = 5e-3,
+                 pretrain_lr: Optional[float] = None,
+                 batch_size: int = 256, lasso: float = 1e-4,
+                 weight_decay: float = 1e-4, sgdr_t0: int = 100,
+                 seed: int = 0, max_train: int = 4096):
+        self.cfg = cfg
+        self.hyper = dict(pretrain_steps=pretrain_steps,
+                          retrain_steps=retrain_steps, lr=lr,
+                          pretrain_lr=pretrain_lr,
+                          batch_size=batch_size, lasso=lasso,
+                          weight_decay=weight_decay, sgdr_t0=sgdr_t0,
+                          seed=seed, max_train=max_train)
+        self.data = None
+        self.dense_params: Optional[dict] = None
+        self.mappings = None
+        self.params: Optional[dict] = None        # sparse (deployable)
+        self.compiled: Optional[CompiledLUTNetwork] = None
+        self.stages: Dict[str, StageResult] = {}
+
+    # -- helpers -------------------------------------------------------------
+    def _record(self, name: str, t0: float, **metrics) -> None:
+        self.stages[name] = StageResult(name=name,
+                                        seconds=time.time() - t0,
+                                        metrics=metrics)
+
+    def _require(self, attr: str, stage: str, needed_by: str) -> Any:
+        val = getattr(self, attr)
+        if val is None:
+            raise RuntimeError(
+                f"Toolflow.{needed_by}() needs {attr!r} — run "
+                f".{stage}() first (or load_state a saved flow)")
+        return val
+
+    # -- stages --------------------------------------------------------------
+    def pretrain(self, data) -> "Toolflow":
+        """Phase 1: dense pre-training with the hardware-aware group-lasso
+        regularizer (mapping layers see the whole previous layer)."""
+        from repro.train import lut_trainer
+        h = self.hyper
+        t0 = time.time()
+        res = lut_trainer.train(
+            self.cfg, data, dense=True, lasso=h["lasso"],
+            steps=h["pretrain_steps"],
+            lr=h["pretrain_lr"] if h["pretrain_lr"] is not None else h["lr"],
+            batch_size=h["batch_size"], weight_decay=h["weight_decay"],
+            seed=h["seed"], max_train=h["max_train"])
+        self.data = data
+        self.dense_params = res.params
+        self._record("pretrain", t0, final_loss=res.losses[-1],
+                     steps=h["pretrain_steps"])
+        return self
+
+    def prune(self) -> "Toolflow":
+        """Phase 2: structured pruning — keep the top-F inputs per unit by
+        group norm; these are the learned mappings."""
+        dense = self._require("dense_params", "pretrain", "prune")
+        t0 = time.time()
+        self.mappings = pruning.select_mappings(dense, self.cfg)
+        cov = pruning.mapping_coverage(self.mappings, self.cfg)
+        self._record("prune", t0, coverage=cov)
+        return self
+
+    def retrain(self, data=None) -> "Toolflow":
+        """Phase 3: sparse re-training from scratch with the learned
+        mappings (random mappings if ``prune`` was skipped)."""
+        from repro.train import lut_trainer
+        data = data if data is not None else self._require(
+            "data", "pretrain", "retrain")
+        h = self.hyper
+        t0 = time.time()
+        res = lut_trainer.train(
+            self.cfg, data, mappings=self.mappings,
+            steps=h["retrain_steps"], lr=h["lr"],
+            batch_size=h["batch_size"], weight_decay=h["weight_decay"],
+            sgdr_t0=h["sgdr_t0"], seed=h["seed"], max_train=h["max_train"])
+        self.data = data
+        self.params = res.params
+        self._record("retrain", t0, final_loss=res.losses[-1],
+                     steps=h["retrain_steps"],
+                     learned_mappings=self.mappings is not None)
+        return self
+
+    def compile(self, *, backend: Optional[str] = None
+                ) -> CompiledLUTNetwork:
+        """Phase 4: exhaustive fold into the deployment artifact."""
+        params = self._require("params", "retrain", "compile")
+        t0 = time.time()
+        self.compiled = compile_network(params, self.cfg, backend=backend)
+        self._record("compile", t0, entries=self.compiled.num_entries())
+        return self.compiled
+
+    def run(self, data) -> CompiledLUTNetwork:
+        """All four phases end-to-end."""
+        return self.pretrain(data).prune().retrain().compile()
+
+    # -- evaluation ----------------------------------------------------------
+    def accuracy(self, data=None, *, folded: bool = False,
+                 max_eval: int = 2048) -> float:
+        from repro.train import lut_trainer
+        data = data if data is not None else self._require(
+            "data", "pretrain", "accuracy")
+        params = self._require("params", "retrain", "accuracy")
+        return lut_trainer.accuracy(self.cfg, params, data, folded=folded,
+                                    max_eval=max_eval)
+
+    # -- resumability --------------------------------------------------------
+    def save_state(self, path: str) -> str:
+        """Persist completed stage outputs to one ``.npz`` (+JSON manifest
+        inside); ``data`` is not saved — pass it again on resume."""
+        arrays: Dict[str, np.ndarray] = {}
+        done = []
+        if self.dense_params is not None:
+            arrays.update(_tree_to_arrays("dense_", self.dense_params))
+            done.append("pretrain")
+        if self.mappings is not None:
+            for l, m in enumerate(self.mappings):
+                if m is not None:
+                    arrays[f"mapping_{l}"] = np.asarray(m)
+            done.append("prune")
+        if self.params is not None:
+            arrays.update(_tree_to_arrays("sparse_", self.params))
+            done.append("retrain")
+        manifest = {"config": config_to_dict(self.cfg),
+                    "hyper": self.hyper, "done": done}
+        return _save_npz(path, arrays, "manifest_json", manifest)
+
+    @classmethod
+    def load_state(cls, path: str) -> "Toolflow":
+        data, manifest = _open_npz(path, "manifest_json")
+        with data:
+            cfg = config_from_dict(manifest["config"])
+            flow = cls(cfg, **manifest["hyper"])
+            rng = jax.random.PRNGKey(flow.hyper["seed"])
+            if "prune" in manifest["done"]:
+                flow.mappings = [
+                    None if spec.assemble
+                    else jnp.asarray(data[f"mapping_{l}"], jnp.int32)
+                    for l, spec in enumerate(cfg.layers)]
+            if "pretrain" in manifest["done"]:
+                like = assemble.init(rng, cfg, dense=True)
+                flow.dense_params = _tree_from_arrays("dense_", like, data)
+            if "retrain" in manifest["done"]:
+                like = assemble.init(rng, cfg, mappings=flow.mappings)
+                flow.params = _tree_from_arrays("sparse_", like, data)
+        return flow

@@ -1,0 +1,108 @@
+"""Micro-batching inference engine for compiled LUT networks.
+
+The LUT-side analogue of ``serve/engine.py``: requests queue up, every
+engine tick drains up to ``block`` of them, pads to the fixed block shape,
+and runs ONE jitted lookup cascade for the whole block.  A folded network
+has no KV cache and no sequential decode — each request is a single
+feed-forward row — so the continuous-batching problem reduces to classic
+micro-batching: fixed block shape (one XLA compilation, ever), pad the
+tail, amortize dispatch overhead across the block.
+
+The cascade itself is ``CompiledLUTNetwork.predict_codes`` — backend-
+selectable (take / onehot / pallas, DESIGN.md §2) and fully self-contained,
+so an engine can be stood up from a ``.npz`` artifact with no training
+state anywhere in the process.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Deque, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.pipeline import CompiledLUTNetwork
+
+
+@dataclasses.dataclass
+class LUTRequest:
+    rid: int
+    x: np.ndarray                       # [in_features] float input row
+    codes: Optional[np.ndarray] = None  # [n_out] int32 result
+    logits: Optional[np.ndarray] = None
+    done: bool = False
+
+
+@dataclasses.dataclass
+class LUTEngineStats:
+    ticks: int = 0
+    requests: int = 0
+    rows_padded: int = 0
+
+
+class LUTEngine:
+    """``block`` and ``backend`` are fixed at construction: the jitted
+    block function is compiled once for that (shape, backend) and reused
+    for the life of the engine — build a new engine to change either."""
+
+    def __init__(self, net: CompiledLUTNetwork, *, block: int = 256,
+                 backend: Optional[str] = None):
+        self.net = net
+        self.block = block
+        self.backend = backend or net.backend
+        self.queue: Deque[LUTRequest] = collections.deque()
+        self.stats = LUTEngineStats()
+        self._next_rid = 0
+        folded = net.folded()
+        out_q = folded.out_q
+        out_spec = net.cfg.quant_spec(len(net.cfg.layers) - 1)
+        impl = self.backend  # bound now; mutating self.backend later is a no-op
+
+        def block_fwd(xb):
+            from repro.core import folding, quant
+            codes = folding.folded_apply_codes(folded, xb, lut_impl=impl)
+            return codes, quant.dequantize_codes(out_q, out_spec, codes)
+
+        self._fwd = jax.jit(block_fwd)
+
+    # -- queueing ------------------------------------------------------------
+    def submit(self, x: np.ndarray) -> LUTRequest:
+        """Enqueue one input row; returns the request handle."""
+        req = LUTRequest(rid=self._next_rid, x=np.asarray(x, np.float32))
+        self._next_rid += 1
+        self.queue.append(req)
+        self.stats.requests += 1
+        return req
+
+    def tick(self) -> int:
+        """Drain up to ``block`` queued requests with one jitted cascade.
+
+        Returns the number of requests completed this tick."""
+        if not self.queue:
+            return 0
+        batch: List[LUTRequest] = []
+        while self.queue and len(batch) < self.block:
+            batch.append(self.queue.popleft())
+        xb = np.zeros((self.block, self.net.cfg.in_features), np.float32)
+        for i, req in enumerate(batch):
+            xb[i] = req.x
+        self.stats.rows_padded += self.block - len(batch)
+        codes, logits = self._fwd(jnp.asarray(xb))
+        codes_np, logits_np = np.asarray(codes), np.asarray(logits)
+        for i, req in enumerate(batch):
+            req.codes = codes_np[i]
+            req.logits = logits_np[i]
+            req.done = True
+        self.stats.ticks += 1
+        return len(batch)
+
+    def run(self, xs: np.ndarray) -> np.ndarray:
+        """Convenience: submit every row of ``xs`` and tick until drained.
+
+        Returns logits [len(xs), n_out] in submission order."""
+        reqs = [self.submit(x) for x in np.asarray(xs)]
+        while self.queue:
+            self.tick()
+        return np.stack([r.logits for r in reqs])

@@ -6,6 +6,10 @@ Implements the paper's three-phase flow as library calls:
   2. ``pruning.select_mappings``       — structured pruning to fan-in F;
   3. ``train``  (mappings=...)         — sparse re-training from scratch.
 
+``repro.pipeline.Toolflow`` drives these phases end-to-end and produces the
+deployable ``CompiledLUTNetwork`` — prefer it over hand-threading phases
+(DESIGN.md §1).  This module remains the per-phase engine.
+
 AdamW + SGDR (the paper's optimizers).  Used by tests, benchmarks, and
 examples; scales from the reduced surrogate configs (seconds on CPU) to the
 full Table II configs.
@@ -79,7 +83,7 @@ def accuracy(cfg: AssembleConfig, params: dict, data: Dataset, *,
     y = np.asarray(data.y_test[:max_eval])
     if folded:
         net = folding.fold_network(params, cfg)
-        logits = folding.folded_logits(net, params, x)
+        logits = folding.folded_logits(net, x)
     else:
         logits, _ = assemble.apply(params, cfg, x, training=False)
     logits = np.asarray(logits)

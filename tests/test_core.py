@@ -1,6 +1,8 @@
-"""Unit + property tests for the core NeuraLUT-Assemble building blocks."""
-import hypothesis
-import hypothesis.strategies as st
+"""Unit tests for the core NeuraLUT-Assemble building blocks.
+
+Property-based (hypothesis) variants live in test_properties.py, guarded by
+``pytest.importorskip`` — hypothesis is a dev dependency.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -15,33 +17,33 @@ from repro.core.quant import QuantSpec
 # quant
 # ---------------------------------------------------------------------------
 
-@hypothesis.settings(max_examples=30, deadline=None)
-@hypothesis.given(bits=st.integers(1, 8), signed=st.booleans(),
-                  seed=st.integers(0, 999))
-def test_pack_unpack_roundtrip(bits, signed, seed):
-    spec = QuantSpec(bits, signed)
-    fan_in = 3
-    rng = jax.random.PRNGKey(seed)
-    codes = jax.random.randint(rng, (17, fan_in), 0, spec.levels)
-    addr = quant.pack_address(codes, bits, fan_in)
-    back = quant.unpack_address(addr, bits, fan_in)
-    np.testing.assert_array_equal(np.asarray(back), np.asarray(codes))
-    assert int(addr.max()) < 2 ** (bits * fan_in)
+def test_pack_unpack_roundtrip_fixed():
+    """Deterministic spot-check; the bit-width sweep is in
+    test_properties.py."""
+    for bits, signed in ((1, False), (3, True), (8, False)):
+        spec = QuantSpec(bits, signed)
+        fan_in = 3
+        rng = jax.random.PRNGKey(bits)
+        codes = jax.random.randint(rng, (17, fan_in), 0, spec.levels)
+        addr = quant.pack_address(codes, bits, fan_in)
+        back = quant.unpack_address(addr, bits, fan_in)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(codes))
+        assert int(addr.max()) < 2 ** (bits * fan_in)
 
 
-@hypothesis.settings(max_examples=30, deadline=None)
-@hypothesis.given(bits=st.integers(1, 6), signed=st.booleans(),
-                  scale=st.floats(0.05, 4.0), seed=st.integers(0, 999))
-def test_quant_dequant_consistency(bits, signed, scale, seed):
+def test_quant_dequant_consistency_fixed():
     """fake_quant(x) == dequantize(quantize_codes(x)) exactly."""
-    spec = QuantSpec(bits, signed)
-    params = {"log_scale": jnp.log(jnp.asarray(scale))}
-    x = jax.random.normal(jax.random.PRNGKey(seed), (64,)) * 2
-    fq = quant.fake_quant(params, spec, x)
-    codes = quant.quantize_codes(params, spec, x)
-    dq = quant.dequantize_codes(params, spec, codes)
-    np.testing.assert_allclose(np.asarray(fq), np.asarray(dq), rtol=1e-6)
-    assert int(codes.min()) >= 0 and int(codes.max()) < spec.levels
+    for bits, signed, scale in ((1, False, 0.05), (4, True, 0.7),
+                                (6, False, 4.0)):
+        spec = QuantSpec(bits, signed)
+        params = {"log_scale": jnp.log(jnp.asarray(scale))}
+        x = jax.random.normal(jax.random.PRNGKey(bits), (64,)) * 2
+        fq = quant.fake_quant(params, spec, x)
+        codes = quant.quantize_codes(params, spec, x)
+        dq = quant.dequantize_codes(params, spec, codes)
+        np.testing.assert_allclose(np.asarray(fq), np.asarray(dq),
+                                   rtol=1e-6)
+        assert int(codes.min()) >= 0 and int(codes.max()) < spec.levels
 
 
 def test_fake_quant_gradient_is_ste():
@@ -212,7 +214,10 @@ def test_verilog_emission():
         subnet_width=4, subnet_depth=1)
     params = assemble.init(jax.random.PRNGKey(0), cfg)
     net = folding.fold_network(params, cfg)
-    v = rtl.emit_verilog(net, params, pipeline_every=1)
+    v = rtl.emit_verilog(net, pipeline_every=1)
+    # deprecated params-passing signature still emits identical RTL
+    with pytest.warns(DeprecationWarning):
+        assert rtl.emit_verilog(net, params, pipeline_every=1) == v
     assert "module neuralut_assemble" in v
     assert v.count("case (") == 4  # one ROM per L-LUT unit
     assert "always @(posedge clk)" in v

@@ -20,7 +20,7 @@ def folded_nid():
 
 def test_dontcare_bounds(folded_nid):
     cfg, data, params, net = folded_nid
-    rep = dontcare.analyze(net, params, data.x_train[:1024])
+    rep = dontcare.analyze(net, data.x_train[:1024])
     assert rep.optimized_luts <= rep.structural_luts
     assert rep.lut_reduction >= 1.0
     assert rep.structural_luts == hwcost.network_luts(cfg)
@@ -31,10 +31,14 @@ def test_dontcare_bounds(folded_nid):
 def test_dontcare_monotone_in_data(folded_nid):
     """More inputs can only reach more addresses (reachability grows)."""
     cfg, data, params, net = folded_nid
-    small = dontcare.analyze(net, params, data.x_train[:64])
-    large = dontcare.analyze(net, params, data.x_train[:1024])
+    small = dontcare.analyze(net, data.x_train[:64])
+    large = dontcare.analyze(net, data.x_train[:1024])
     for a, b in zip(small.per_layer_observed, large.per_layer_observed):
         assert b >= a - 1e-12
+    # deprecated (net, params, x) signature: warns, same result
+    with pytest.warns(DeprecationWarning):
+        legacy = dontcare.analyze(net, params, data.x_train[:64])
+    assert legacy.optimized_luts == small.optimized_luts
 
 
 def test_dontcare_explains_paper_gap(folded_nid):
@@ -42,5 +46,5 @@ def test_dontcare_explains_paper_gap(folded_nid):
     don't-cares must recover a nontrivial part of that gap on the
     surrogate too (binary inputs -> sparse reachable address sets)."""
     cfg, data, params, net = folded_nid
-    rep = dontcare.analyze(net, params, data.x_train[:2048])
+    rep = dontcare.analyze(net, data.x_train[:2048])
     assert rep.lut_reduction > 1.05, rep

@@ -73,8 +73,11 @@ print("WALKER-OK")
 
 def test_roofline_builds_from_records():
     """If dry-run records exist, the roofline table builds cleanly."""
+    import glob
     results = os.path.join(ROOT, "experiments", "dryrun")
-    if not os.path.isdir(results):
+    if not glob.glob(os.path.join(results, "*.json")):
+        # the dry-run tests create the directory (cached HLO) without any
+        # cell records; only *.json records make this test meaningful
         pytest.skip("no dry-run records present")
     out = run_sub("""
 from benchmarks import roofline

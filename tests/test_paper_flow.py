@@ -71,7 +71,7 @@ def test_rtl_emission_for_trained_model(nid_setup, tmp_path):
     cfg, data = nid_setup
     params = train_assemble(cfg, data, steps=30)
     net = folding.fold_network(params, cfg)
-    v = rtl.emit_verilog(net, params, pipeline_every=3)
+    v = rtl.emit_verilog(net, pipeline_every=3)
     path = tmp_path / "nid.v"
     path.write_text(v)
     assert "endmodule" in v

@@ -1,0 +1,210 @@
+"""Property-based tests (all hypothesis usage lives here).
+
+``hypothesis`` is a *dev* dependency (pyproject ``[project.optional-
+dependencies] dev``); this module is skipped wholesale when it is not
+installed so the tier-1 suite runs clean either way.  Deterministic
+counterparts of the critical properties (fold bit-exactness, artifact
+round-trips) live in test_folding.py / test_pipeline.py and always run.
+"""
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the 'hypothesis' dev extra")
+import hypothesis.strategies as st  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import assemble, folding, quant  # noqa: E402
+from repro.core.assemble import AssembleConfig, LayerSpec  # noqa: E402
+from repro.core.quant import QuantSpec  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# quant (from test_core)
+# ---------------------------------------------------------------------------
+
+@hypothesis.settings(max_examples=30, deadline=None)
+@hypothesis.given(bits=st.integers(1, 8), signed=st.booleans(),
+                  seed=st.integers(0, 999))
+def test_pack_unpack_roundtrip(bits, signed, seed):
+    spec = QuantSpec(bits, signed)
+    fan_in = 3
+    rng = jax.random.PRNGKey(seed)
+    codes = jax.random.randint(rng, (17, fan_in), 0, spec.levels)
+    addr = quant.pack_address(codes, bits, fan_in)
+    back = quant.unpack_address(addr, bits, fan_in)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(codes))
+    assert int(addr.max()) < 2 ** (bits * fan_in)
+
+
+@hypothesis.settings(max_examples=30, deadline=None)
+@hypothesis.given(bits=st.integers(1, 6), signed=st.booleans(),
+                  scale=st.floats(0.05, 4.0), seed=st.integers(0, 999))
+def test_quant_dequant_consistency(bits, signed, scale, seed):
+    """fake_quant(x) == dequantize(quantize_codes(x)) exactly."""
+    spec = QuantSpec(bits, signed)
+    params = {"log_scale": jnp.log(jnp.asarray(scale))}
+    x = jax.random.normal(jax.random.PRNGKey(seed), (64,)) * 2
+    fq = quant.fake_quant(params, spec, x)
+    codes = quant.quantize_codes(params, spec, x)
+    dq = quant.dequantize_codes(params, spec, codes)
+    np.testing.assert_allclose(np.asarray(fq), np.asarray(dq), rtol=1e-6)
+    assert int(codes.min()) >= 0 and int(codes.max()) < spec.levels
+
+
+# ---------------------------------------------------------------------------
+# folding bit-exactness (from test_folding)
+# ---------------------------------------------------------------------------
+
+def _rand_config(rng_seed, in_features, bits_in, layers, width, depth, skip,
+                 tree_skips=True, poly=1):
+    return AssembleConfig(
+        in_features=in_features, input_bits=bits_in, input_signed=False,
+        layers=tuple(layers), subnet_width=width, subnet_depth=depth,
+        skip_step=skip, tree_skips=tree_skips, poly_degree=poly)
+
+
+def _assert_fold_exact(cfg, seed=0, n=64):
+    rng = jax.random.PRNGKey(seed)
+    params = assemble.init(rng, cfg)
+    x = jax.random.uniform(jax.random.PRNGKey(seed + 1),
+                           (n, cfg.in_features), minval=-1.0, maxval=1.0)
+    ref_codes = assemble.apply_codes(params, cfg, x)
+    net = folding.fold_network(params, cfg)
+    folded = folding.folded_apply_codes(net, x)
+    np.testing.assert_array_equal(np.asarray(folded), np.asarray(ref_codes))
+
+
+@hypothesis.settings(max_examples=12, deadline=None)
+@hypothesis.given(
+    bits=st.integers(1, 3),
+    fan_in=st.integers(2, 4),
+    width=st.sampled_from([4, 8]),
+    depth=st.integers(0, 3),
+    skip=st.integers(0, 2),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_fold_exact_single_tree(bits, fan_in, width, depth, skip, seed):
+    """One mapping layer + one assemble layer (a 2-level tree)."""
+    hypothesis.assume(bits * fan_in <= 8)
+    units0 = fan_in * 2
+    cfg = _rand_config(seed, in_features=8, bits_in=bits,
+                       layers=[LayerSpec(units0, fan_in, bits, False),
+                               LayerSpec(2, fan_in, bits, True)],
+                       width=width, depth=depth, skip=skip)
+    _assert_fold_exact(cfg, seed=seed % 7)
+
+
+@hypothesis.settings(max_examples=8, deadline=None)
+@hypothesis.given(
+    tree_skips=st.booleans(),
+    poly=st.integers(1, 2),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_fold_exact_deep_tree(tree_skips, poly, seed):
+    """Deeper trees, with/without tree-level skips, PolyLUT-style units."""
+    cfg = _rand_config(seed, in_features=16, bits_in=2,
+                       layers=[LayerSpec(8, 2, 2, False),
+                               LayerSpec(4, 2, 2, True),
+                               LayerSpec(2, 2, 2, True),
+                               LayerSpec(1, 2, 3, True)],
+                       width=6, depth=2, skip=2, tree_skips=tree_skips,
+                       poly=poly)
+    _assert_fold_exact(cfg, seed=seed % 5)
+
+
+# ---------------------------------------------------------------------------
+# kernels (from test_kernels)
+# ---------------------------------------------------------------------------
+
+@hypothesis.settings(max_examples=10, deadline=None)
+@hypothesis.given(batch=st.integers(1, 50), units=st.integers(1, 12),
+                  log_entries=st.integers(1, 8), seed=st.integers(0, 99))
+def test_lut_lookup_impls_agree(batch, units, log_entries, seed):
+    from repro.kernels import ops
+    entries = 2 ** log_entries
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    table = jax.random.randint(k1, (units, entries), 0, 2 ** 8,
+                               dtype=jnp.int32)
+    addr = jax.random.randint(k2, (batch, units), 0, entries,
+                              dtype=jnp.int32)
+    a = ops.lut_lookup(table, addr, impl="take")
+    b = ops.lut_lookup(table, addr, impl="onehot")
+    c = ops.lut_lookup(table, addr, impl="pallas")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+
+
+# ---------------------------------------------------------------------------
+# sampling (from test_sampling_and_cells)
+# ---------------------------------------------------------------------------
+
+@hypothesis.settings(max_examples=15, deadline=None)
+@hypothesis.given(seed=st.integers(0, 999), k=st.integers(1, 10))
+def test_top_k_restricts_support(seed, k):
+    from repro.serve.sampling import SamplingParams, sample_np
+    g = np.random.default_rng(seed)
+    logits = g.normal(size=40).astype(np.float32)
+    p = SamplingParams(temperature=0.7, top_k=k)
+    allowed = set(np.argsort(-logits)[:k].tolist())
+    for _ in range(12):
+        assert sample_np(logits, p, g) in allowed
+
+
+@hypothesis.settings(max_examples=10, deadline=None)
+@hypothesis.given(seed=st.integers(0, 999),
+                  top_p=st.floats(0.2, 0.95))
+def test_top_p_restricts_support(seed, top_p):
+    from repro.serve.sampling import SamplingParams, sample_np
+    g = np.random.default_rng(seed)
+    logits = g.normal(size=40).astype(np.float32) * 2
+    p = SamplingParams(temperature=1.0, top_p=top_p)
+    probs = np.exp(logits - logits.max())
+    probs /= probs.sum()
+    order = np.argsort(-probs)
+    csum = np.cumsum(probs[order])
+    allowed = set(order[: int(np.searchsorted(csum, top_p)) + 1].tolist())
+    for _ in range(12):
+        assert sample_np(logits, p, g) in allowed
+
+
+# ---------------------------------------------------------------------------
+# losses / compression (from test_substrates)
+# ---------------------------------------------------------------------------
+
+@hypothesis.settings(max_examples=10, deadline=None)
+@hypothesis.given(b=st.integers(1, 4), s=st.integers(2, 33),
+                  v=st.integers(3, 40), chunk=st.sampled_from([4, 8, 512]),
+                  seed=st.integers(0, 99))
+def test_chunked_ce_matches_dense(b, s, v, chunk, seed):
+    from repro.train import losses
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    d = 16
+    vp = v + (-v) % 8  # padded vocab
+    hidden = jax.random.normal(ks[0], (b, s, d))
+    head = jax.random.normal(ks[1], (d, vp))
+    labels = jax.random.randint(ks[2], (b, s), 0, v, dtype=jnp.int32)
+    loss, count = losses.chunked_cross_entropy(hidden, head, labels,
+                                               vocab=v, chunk=chunk)
+    # dense reference
+    logits = (hidden @ head)[..., :v]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ref = -jnp.mean(jnp.take_along_axis(logp, labels[..., None],
+                                        axis=-1))
+    assert float(count) == b * s
+    np.testing.assert_allclose(float(loss), float(ref), rtol=2e-4)
+
+
+@hypothesis.settings(max_examples=20, deadline=None)
+@hypothesis.given(seed=st.integers(0, 999), scale=st.floats(0.01, 100.0))
+def test_compress_error_feedback_bounded(seed, scale):
+    """|accumulated error| <= quantization step (error feedback invariant)."""
+    from repro.dist import compress
+    g = jax.random.normal(jax.random.PRNGKey(seed), (64,)) * scale
+    err = jnp.zeros(64)
+    for _ in range(5):
+        c, err = compress.compress(g, err)
+        step = float(c.scale)
+        assert float(jnp.abs(err).max()) <= step * 0.5 + 1e-6

@@ -1,10 +1,12 @@
 """Substrate tests: optimizer, schedules, losses, data, checkpointing,
-straggler detection, gradient compression, elastic planning."""
+straggler detection, gradient compression, elastic planning.
+
+Property-based (hypothesis) variants live in test_properties.py, guarded by
+``pytest.importorskip`` — hypothesis is a dev dependency.
+"""
 import math
 import os
 
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -73,20 +75,16 @@ def test_sgdr_restarts():
 # losses
 # ---------------------------------------------------------------------------
 
-@hypothesis.settings(max_examples=10, deadline=None)
-@hypothesis.given(b=st.integers(1, 4), s=st.integers(2, 33),
-                  v=st.integers(3, 40), chunk=st.sampled_from([4, 8, 512]),
-                  seed=st.integers(0, 99))
-def test_chunked_ce_matches_dense(b, s, v, chunk, seed):
-    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
-    d = 16
+def test_chunked_ce_matches_dense_fixed():
+    """Deterministic spot-check; the shape sweep is in test_properties.py."""
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    b, s, v, chunk, d = 2, 9, 13, 4, 16
     vp = v + (-v) % 8  # padded vocab
     hidden = jax.random.normal(ks[0], (b, s, d))
     head = jax.random.normal(ks[1], (d, vp))
     labels = jax.random.randint(ks[2], (b, s), 0, v, dtype=jnp.int32)
     loss, count = losses.chunked_cross_entropy(hidden, head, labels,
                                                vocab=v, chunk=chunk)
-    # dense reference
     logits = (hidden @ head)[..., :v]
     logp = jax.nn.log_softmax(logits, axis=-1)
     ref = -jnp.mean(jnp.take_along_axis(logp, labels[..., None],
@@ -239,16 +237,16 @@ def test_train_loop_survives_injected_failures(tmp_path):
 # gradient compression
 # ---------------------------------------------------------------------------
 
-@hypothesis.settings(max_examples=20, deadline=None)
-@hypothesis.given(seed=st.integers(0, 999), scale=st.floats(0.01, 100.0))
-def test_compress_error_feedback_bounded(seed, scale):
-    """|accumulated error| <= quantization step (error feedback invariant)."""
-    g = jax.random.normal(jax.random.PRNGKey(seed), (64,)) * scale
-    err = jnp.zeros(64)
-    for _ in range(5):
-        c, err = compress.compress(g, err)
-        step = float(c.scale)
-        assert float(jnp.abs(err).max()) <= step * 0.5 + 1e-6
+def test_compress_error_feedback_bounded_fixed():
+    """|accumulated error| <= quantization step (error feedback invariant);
+    the seed/scale sweep is in test_properties.py."""
+    for scale in (0.01, 1.0, 100.0):
+        g = jax.random.normal(jax.random.PRNGKey(3), (64,)) * scale
+        err = jnp.zeros(64)
+        for _ in range(5):
+            c, err = compress.compress(g, err)
+            step = float(c.scale)
+            assert float(jnp.abs(err).max()) <= step * 0.5 + 1e-6
 
 
 def test_compressed_sgd_tracks_uncompressed():
