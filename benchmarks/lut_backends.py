@@ -1,0 +1,110 @@
+"""Backend-sweep benchmark: every registered lookup backend x every paper
+task config -> ``experiments/BENCH_lut_backends.json``.
+
+For each (task, batch) cell the sweep plans each backend once via
+``CompiledLUTNetwork.compile_backend``, verifies its ``predict_codes`` is
+bit-identical to the per-layer 'take' oracle, times the planned executor,
+and reports the speedup vs 'take' (the fused single-launch cascade's
+headline number).  ``--fast`` shrinks batches/reps for the CI smoke job.
+
+    PYTHONPATH=src python -m benchmarks.lut_backends [--fast] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                           "BENCH_lut_backends.json")
+# the one definition of "smoke-sized" (CI job and run.py --fast share it)
+FAST_KW = dict(batches=(64,), reps=3)
+
+
+def write_results(results: dict, out: str = DEFAULT_OUT) -> str:
+    out = os.path.abspath(out)
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(results, f, indent=2)
+    return out
+
+
+def _time_call(fn, x, reps: int, warmup: int = 2) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(x))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(x))
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def sweep(tasks=("mnist", "jsc", "nid"), batches=(256, 1024),
+          reps: int = 10, seed: int = 0) -> dict:
+    from repro import backends, pipeline
+    from repro.configs import paper_tasks
+    from repro.core import assemble
+
+    results = {"tasks": {}, "backends": {
+        name: vars(backends.get(name).capabilities())
+        for name in backends.available()}}
+    for task in tasks:
+        cfg = paper_tasks.reduced(task)
+        params = assemble.init(jax.random.PRNGKey(seed), cfg)
+        compiled = pipeline.compile_network(params, cfg)
+        cells = []
+        for batch in batches:
+            x = jax.random.uniform(jax.random.PRNGKey(seed + 1),
+                                   (batch, cfg.in_features),
+                                   minval=-1.0, maxval=1.0)
+            ref = np.asarray(compiled.predict_codes(x, backend="take"))
+            row = {"batch": batch, "us": {}, "speedup_vs_take": {},
+                   "bit_identical": {}}
+            for name in backends.available():
+                ex = compiled.compile_backend(name)
+                row["bit_identical"][name] = bool(np.array_equal(
+                    np.asarray(ex.predict_codes(x)), ref))
+                row["us"][name] = round(
+                    _time_call(ex.predict_codes, x, reps), 1)
+            for name, us in row["us"].items():
+                row["speedup_vs_take"][name] = round(
+                    row["us"]["take"] / us, 3) if us else None
+            cells.append(row)
+        results["tasks"][task] = {
+            "config": {"in_features": cfg.in_features,
+                       "layers": [vars(l) for l in cfg.layers]},
+            "cells": cells,
+        }
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="tiny batches/reps (CI smoke)")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args()
+
+    results = sweep(**(FAST_KW if args.fast else {}))
+    out = write_results(results, args.out)
+
+    print("task,batch,backend,us_per_call,speedup_vs_take,bit_identical")
+    for task, t in results["tasks"].items():
+        for cell in t["cells"]:
+            for name, us in cell["us"].items():
+                print(f"{task},{cell['batch']},{name},{us},"
+                      f"{cell['speedup_vs_take'][name]},"
+                      f"{cell['bit_identical'][name]}")
+    bad = [(task, c["batch"], n)
+           for task, t in results["tasks"].items() for c in t["cells"]
+           for n, ok in c["bit_identical"].items() if not ok]
+    if bad:
+        raise SystemExit(f"backends NOT bit-identical: {bad}")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

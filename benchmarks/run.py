@@ -53,7 +53,8 @@ def bench_kernels(rows: list) -> None:
     compiled = pipeline.compile_network(params, cfg)
     q_fwd = jax.jit(lambda xx: assemble.apply_codes(params, cfg, xx))
     rows.append(("nid_quantized_forward", _time_call(q_fwd, x), "batch=1024"))
-    for impl in ("take", "onehot", "pallas"):
+    from repro import backends as lut_backends_reg
+    for impl in lut_backends_reg.available():
         us = _time_call(lambda xx, i=impl: compiled.predict_codes(
             xx, backend=i), x)
         rows.append((f"nid_folded_forward_{impl}", us,
@@ -62,6 +63,18 @@ def bench_kernels(rows: list) -> None:
     us = _time_call(lambda xx: eng.run(np.asarray(xx)), x)
     rows.append(("nid_lut_engine", us,
                  "batch=1024 via 256-row micro-batching engine"))
+
+
+def bench_backends(rows: list, fast: bool) -> None:
+    """Registered-backend sweep (writes BENCH_lut_backends.json)."""
+    from benchmarks import lut_backends
+    t0 = time.time()
+    res = lut_backends.sweep(**(lut_backends.FAST_KW if fast else {}))
+    lut_backends.write_results(res)
+    cell = res["tasks"]["nid"]["cells"][-1]
+    rows.append(("lut_backend_sweep", (time.time() - t0) * 1e6,
+                 "fused speedup vs take (nid) "
+                 f"{cell['speedup_vs_take'].get('fused')}x"))
 
 
 def bench_tables(rows: list, fast: bool) -> dict:
@@ -103,13 +116,15 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--only", default=None,
-                    choices=["kernels", "tables", "roofline"])
+                    choices=["kernels", "backends", "tables", "roofline"])
     args = ap.parse_args()
 
     rows: list = []
     outputs = {}
     if args.only in (None, "kernels"):
         bench_kernels(rows)
+    if args.only in (None, "backends"):
+        bench_backends(rows, args.fast)
     if args.only in (None, "tables"):
         outputs.update(bench_tables(rows, args.fast))
     if args.only in (None, "roofline"):

@@ -3,9 +3,11 @@
 One ``Toolflow`` drives the paper's phases end-to-end (dense pre-train with
 the hardware-aware regularizer -> structured pruning -> sparse retrain ->
 exhaustive fold), producing a ``CompiledLUTNetwork`` — a self-contained
-deployment artifact that is saved, re-loaded, verified bit-exact, costed
-with the FPGA model, and emitted as synthesizable Verilog.  No training
-params cross the deployment boundary.
+deployment artifact that is planned onto every registered lookup backend
+(``compile_backend``; incl. the single-launch fused Pallas cascade), saved
+with its plans, re-loaded, verified bit-exact, costed with the FPGA model,
+and emitted as synthesizable Verilog.  No training params cross the
+deployment boundary.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -16,6 +18,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
+from repro import backends
 from repro.configs import paper_tasks
 from repro.core import dontcare
 from repro.data import synthetic
@@ -49,14 +52,27 @@ def main() -> None:
           f"(bit-exact: {abs(acc - acc_f) < 1e-12})")
     print(f"   total L-LUT entries: {compiled.num_entries()}")
 
-    path = os.path.join(os.path.dirname(__file__), "nid_assemble.npz")
-    compiled.save(path)
-    reloaded = CompiledLUTNetwork.load(path)
     x = np.asarray(data.x_test[:256], np.float32)
+    print("== phase 3b: planning lookup backends (repro.backends registry)")
+    ref = np.asarray(compiled.predict_codes(x))
+    for name in backends.available():
+        ex = compiled.compile_backend(name)   # reusable planned executor
+        same = bool(np.array_equal(np.asarray(ex.predict_codes(x)), ref))
+        print(f"   backend {name:>7}: fused={ex.capabilities.fused!s:>5}  "
+              f"bit-identical: {same}")
+    fused_plan = compiled.compile_backend("fused").plan
+    print(f"   fused plan: tables packed to {fused_plan.meta['table_dtype']}"
+          f", {fused_plan.meta['vmem_bytes']} B resident, single "
+          f"pallas_call for {len(fused_plan.meta['layers'])} layers")
+
+    path = os.path.join(os.path.dirname(__file__), "nid_assemble.npz")
+    compiled.save(path)                       # plans ride along in the .npz
+    reloaded = CompiledLUTNetwork.load(path)
     same = bool(np.array_equal(np.asarray(compiled.predict_codes(x)),
                                np.asarray(reloaded.predict_codes(x))))
-    print(f"   saved + reloaded {path} (round-trip bit-exact: {same})")
-    eng = LUTEngine(reloaded, block=64)
+    print(f"   saved + reloaded {path} (round-trip bit-exact: {same}; "
+          f"pre-planned: {sorted(reloaded._plans)})")
+    eng = LUTEngine(reloaded, block=64, backend="fused")
     served = eng.run(x[:100])
     direct = np.asarray(reloaded.predict(x[:100]))
     print(f"   micro-batching engine: {eng.stats.ticks} ticks, "

@@ -1,0 +1,63 @@
+"""Pluggable lookup-execution backends for folded L-LUT networks.
+
+The deployment story of the paper is a cascade of L-LUT lookups; *how* the
+cascade is wired dominates cost (PolyLUT-Add's point, in software).  This
+package is the execution layer behind ``CompiledLUTNetwork.predict*``,
+``folding.folded_apply_codes`` and the serving engine:
+
+    from repro import backends
+    be = backends.resolve()              # $REPRO_LUT_BACKEND or 'take'
+    plan = backends.plan_for(net, be)    # cached per FoldedNetwork
+    out = be.run(plan, codes)
+
+Built-ins: ``take`` / ``onehot`` / ``pallas`` (per-layer adapters over the
+pre-PR-2 impl strings) and ``fused`` (whole-network single-launch Pallas
+cascade).  See DESIGN.md §2 for the contract and decision table.
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING
+
+from repro.backends.base import (BackendCapabilities, ExecutionPlan,
+                                 LookupBackend)
+from repro.backends.registry import (available, default_backend, get,
+                                     register, resolve, unregister)
+
+# importing the builtin modules registers them (entry-point style);
+# layered first so available() leads with the 'take' oracle
+from repro.backends import layered as _layered  # noqa: F401  (registers)
+from repro.backends import fused as _fused      # noqa: F401  (registers)
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.core.folding import FoldedNetwork
+
+__all__ = [
+    "BackendCapabilities", "ExecutionPlan", "LookupBackend",
+    "available", "default_backend", "get", "register", "resolve",
+    "unregister", "make_plan", "plan_for",
+]
+
+
+def make_plan(net: "FoldedNetwork", backend: LookupBackend) -> ExecutionPlan:
+    """``backend.plan(net)``, stamped with the backend's plan_format so a
+    persisted plan can later be matched against the implementation that is
+    actually registered under the name."""
+    plan = backend.plan(net)
+    plan.meta.setdefault("plan_format", backend.plan_format)
+    return plan
+
+
+def plan_for(net: "FoldedNetwork", backend: LookupBackend) -> ExecutionPlan:
+    """Plan ``backend`` over ``net``, memoized on the network instance.
+
+    A cached plan whose ``plan_format`` no longer matches the backend
+    registered under the name (a plugin shadowed it) is re-planned rather
+    than handing foreign buffers to ``run()`` — same staleness rule as
+    ``CompiledLUTNetwork.compile_backend``."""
+    cache = getattr(net, "_plan_cache", None)
+    if cache is None:
+        cache = net._plan_cache = {}
+    plan = cache.get(backend.name)
+    if plan is None or plan.meta.get("plan_format") != backend.plan_format:
+        plan = cache[backend.name] = make_plan(net, backend)
+    return plan

@@ -1,0 +1,98 @@
+"""The lookup-backend contract (DESIGN.md §2).
+
+Folded inference is a cascade of L-LUT lookups.  A *backend* is one way of
+executing that cascade; the contract splits execution into an offline
+``plan`` step (layout decisions, buffer packing — runs once per folded
+network, in numpy) and a hot ``run`` step (pure JAX, safe to trace/jit,
+treats the plan's buffers as constants):
+
+    backend = registry.get("fused")
+    plan = backend.plan(folded_net)          # offline, cached
+    codes_out = backend.run(plan, codes_in)  # hot path, jit-friendly
+
+``ExecutionPlan`` is deliberately dumb — JSON-serializable ``meta`` plus a
+dict of numpy buffers — so ``CompiledLUTNetwork.save``/``load`` can
+round-trip plans inside the ``.npz`` artifact without the backend present
+at save time.
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import TYPE_CHECKING, Any, Dict
+
+import numpy as np
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    import jax
+
+    from repro.core.folding import FoldedNetwork
+
+    Array = jax.Array
+else:
+    Array = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendCapabilities:
+    """Static description of a backend, surfaced by the benchmark sweep."""
+
+    name: str
+    fused: bool             # whole cascade in a single kernel launch?
+    needs_pallas: bool      # lowers through a Pallas kernel?
+    description: str = ""
+
+
+@dataclasses.dataclass
+class ExecutionPlan:
+    """A planned cascade: static metadata + packed constant buffers.
+
+    ``meta`` must stay JSON-serializable and ``buffers`` numpy-only — the
+    artifact serializer persists them verbatim (``plan__<backend>__<key>``
+    arrays + a ``plans`` entry in the embedded JSON).
+    """
+
+    backend: str
+    meta: Dict[str, Any]
+    buffers: Dict[str, np.ndarray]
+
+
+class LookupBackend(abc.ABC):
+    """One way of executing a folded L-LUT cascade."""
+
+    name: str = "?"
+    # Buffer-layout identity, stamped into plan.meta["plan_format"] and
+    # checked when a persisted plan is reused: a plugin shadowing a builtin
+    # name with a different layout forces a re-plan instead of being handed
+    # another implementation's buffers.  Bump on layout changes.
+    plan_format: str = "v1"
+    # Whether save() should persist this backend's plans in the artifact.
+    # False when planning is a trivial re-extraction of the base arrays
+    # (persisting would only duplicate the tables).
+    persist_plan: bool = True
+
+    @abc.abstractmethod
+    def capabilities(self) -> BackendCapabilities:
+        ...
+
+    @abc.abstractmethod
+    def plan(self, net: "FoldedNetwork") -> ExecutionPlan:
+        """Offline planning: folded network -> reusable ExecutionPlan.
+
+        Runs in numpy on concrete arrays; may raise ``ValueError`` when the
+        network violates the backend's constraints.
+        """
+
+    @abc.abstractmethod
+    def run(self, plan: ExecutionPlan, codes: Array) -> Array:
+        """Execute the cascade: input codes [batch, in_features] int32 ->
+        final-layer codes [batch, units_last] int32.  Must be jit-traceable
+        (plan buffers are closed-over constants)."""
+
+
+def require_mappings(net: "FoldedNetwork", who: str) -> None:
+    """Planning needs the learned mappings on the net (PR-1 layering)."""
+    if net.mappings is None and any(not s.assemble for s in net.cfg.layers):
+        raise ValueError(
+            f"{who}: FoldedNetwork has no mappings; re-fold with "
+            "fold_network(params, cfg)")

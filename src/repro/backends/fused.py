@@ -1,0 +1,109 @@
+"""The fused Pallas cascade backend: whole network, one kernel launch.
+
+Planning packs the folded network into the two constant buffers the
+``kernels.lut_cascade`` kernel wants:
+
+  * ``amat [max_prev, total_units] f32`` — per-layer address-formation
+    matrices (mapping gather + bit-packing folded into one matmul each;
+    assemble layers become the contiguous mapping).
+  * ``tables [total_units, max_entries]`` — every layer's table, packed
+    row-wise at the same unit offsets, narrowed to int8/int16 when the
+    largest output bit-width allows (codes are unsigned, < 2^beta).
+
+Exactness constraint: addresses are formed in f32 on the MXU, so every
+layer needs ``in_bits * fan_in <= 24`` (integers below 2^24 are exact in
+f32).  The paper's configs max out at 12; planning raises otherwise.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.backends.base import (BackendCapabilities, ExecutionPlan,
+                                 LookupBackend, require_mappings)
+from repro.backends.registry import register
+
+MAX_ADDR_BITS = 24
+
+
+def _table_dtype(max_bits: int) -> np.dtype:
+    if max_bits <= 7:
+        return np.dtype(np.int8)
+    if max_bits <= 15:
+        return np.dtype(np.int16)
+    return np.dtype(np.int32)
+
+
+@register("fused")
+class FusedCascadeBackend(LookupBackend):
+    name = "fused"
+    plan_format = "fused-packed-v1"
+
+    def capabilities(self) -> BackendCapabilities:
+        return BackendCapabilities(
+            name=self.name, fused=True, needs_pallas=True,
+            description="single-pallas_call whole-network cascade; "
+                        "bit-packed VMEM-resident tables, matmul "
+                        "address formation, grid over batch only")
+
+    def plan(self, net) -> ExecutionPlan:
+        require_mappings(net, "fused.plan")
+        cfg = net.cfg
+        # validate BEFORE allocating: one over-wide layer would otherwise
+        # size the packed buffers at 2^addr_bits columns (GiBs) first
+        for l, spec in enumerate(cfg.layers):
+            if cfg.in_bits(l) * spec.fan_in > MAX_ADDR_BITS:
+                raise ValueError(
+                    f"fused.plan: layer {l} address width "
+                    f"{cfg.in_bits(l) * spec.fan_in}b exceeds the f32-exact "
+                    f"limit ({MAX_ADDR_BITS}b); use a per-layer backend")
+        offs: List[int] = []
+        off = 0
+        for spec in cfg.layers:
+            offs.append(off)
+            off += spec.units
+        total_units = off
+        max_prev = max(cfg.prev_width(l) for l in range(len(cfg.layers)))
+        max_entries = max(int(t.shape[1]) for t in net.tables)
+        max_bits = max(spec.bits for spec in cfg.layers)
+
+        amat = np.zeros((max_prev, total_units), np.float32)
+        tables = np.zeros((total_units, max_entries),
+                          _table_dtype(max_bits))
+        layers: List[List[int]] = []
+        for l, spec in enumerate(cfg.layers):
+            bits, fan_in = cfg.in_bits(l), spec.fan_in
+            prev = cfg.prev_width(l)
+            if spec.assemble:
+                mapping = np.arange(prev, dtype=np.int64).reshape(
+                    spec.units, fan_in)
+            else:
+                mapping = np.asarray(net.mappings[l], np.int64)
+            # addr = codes @ A with A[p, u] = sum_f 2^{bits(F-1-f)}[map=p];
+            # add.at accumulates duplicate fan-in indices correctly.
+            weights = 2.0 ** (bits * np.arange(fan_in - 1, -1, -1))
+            for f in range(fan_in):
+                np.add.at(amat, (mapping[:, f],
+                                 offs[l] + np.arange(spec.units)),
+                          weights[f])
+            table = np.asarray(net.tables[l])
+            tables[offs[l]:offs[l] + spec.units, :table.shape[1]] = table
+            layers.append([prev, spec.units, int(table.shape[1]), offs[l]])
+
+        meta: Dict[str, Any] = {
+            "layers": layers,
+            "table_dtype": tables.dtype.name,
+            "vmem_bytes": int(amat.nbytes + tables.nbytes),
+        }
+        return ExecutionPlan(backend=self.name, meta=meta,
+                             buffers={"amat": amat, "tables": tables})
+
+    def run(self, plan: ExecutionPlan, codes: Any):
+        from repro.kernels import ops
+        layers = tuple(tuple(l) for l in plan.meta["layers"])
+        return ops.lut_cascade(jnp.asarray(codes, jnp.int32),
+                               jnp.asarray(plan.buffers["amat"]),
+                               jnp.asarray(plan.buffers["tables"]),
+                               layers=layers)

@@ -1,0 +1,75 @@
+"""Per-layer backends: N dispatches, one ``ops.lut_lookup`` per layer.
+
+These adapt the pre-PR-2 execution strategy ('take' / 'onehot' / 'pallas'
+impl strings) to the :class:`LookupBackend` contract, so the strings keep
+working everywhere through the registry.  The plan is a straight extraction
+of the folded network's per-layer tables + mappings; ``run`` replays the
+cascade exactly as ``folding.folded_apply_codes`` always has, so these
+remain the bit-exactness oracles for the fused backend.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.backends.base import (BackendCapabilities, ExecutionPlan,
+                                 LookupBackend, require_mappings)
+from repro.backends.registry import register
+
+
+class LayeredBackend(LookupBackend):
+    """Cascade executed layer-by-layer via ``kernels.ops.lut_lookup``."""
+
+    plan_format = "layered-v1"
+    persist_plan = False  # plan is a verbatim copy of the base arrays
+
+    def __init__(self, impl: str):
+        self._impl = impl
+        self.name = impl
+
+    def capabilities(self) -> BackendCapabilities:
+        desc = {
+            "take": "vectorized table[u, addr] gather (pure jnp oracle)",
+            "onehot": "one-hot x table MXU matmul in pure jnp",
+            "pallas": "VMEM-tiled one-hot matmul kernel, one launch/layer",
+        }[self._impl]
+        return BackendCapabilities(name=self.name, fused=False,
+                                   needs_pallas=self._impl == "pallas",
+                                   description=desc)
+
+    def plan(self, net) -> ExecutionPlan:
+        require_mappings(net, f"{self.name}.plan")
+        cfg = net.cfg
+        layers = []
+        buffers: Dict[str, np.ndarray] = {}
+        for l, spec in enumerate(cfg.layers):
+            layers.append({"units": spec.units, "fan_in": spec.fan_in,
+                           "bits": cfg.in_bits(l), "assemble": spec.assemble})
+            buffers[f"table_{l}"] = np.asarray(net.tables[l], np.int32)
+            if not spec.assemble:
+                buffers[f"mapping_{l}"] = np.asarray(net.mappings[l],
+                                                     np.int32)
+        return ExecutionPlan(backend=self.name,
+                             meta={"impl": self._impl, "layers": layers},
+                             buffers=buffers)
+
+    def run(self, plan: ExecutionPlan, codes: Any):
+        from repro.core import quant
+        from repro.kernels import ops
+        codes = jnp.asarray(codes)
+        for l, lm in enumerate(plan.meta["layers"]):
+            if lm["assemble"]:
+                ci = codes.reshape(codes.shape[0], lm["units"], lm["fan_in"])
+            else:
+                ci = codes[:, jnp.asarray(plan.buffers[f"mapping_{l}"])]
+            addr = quant.pack_address(ci, lm["bits"], lm["fan_in"])
+            codes = ops.lut_lookup(jnp.asarray(plan.buffers[f"table_{l}"]),
+                                   addr, impl=plan.meta["impl"])
+        return codes
+
+
+register("take", lambda: LayeredBackend("take"))
+register("onehot", lambda: LayeredBackend("onehot"))
+register("pallas", lambda: LayeredBackend("pallas"))

@@ -1,0 +1,104 @@
+"""Backend registry: name -> LookupBackend factory.
+
+Built-in backends self-register at ``repro.backends`` import time via the
+:func:`register` decorator; third-party code uses the same decorator
+(entry-point style — importing the module is the registration).  The
+``REPRO_LUT_BACKEND_PLUGINS`` env var (comma-separated module paths) lets a
+deployment pull in external backend modules without code changes, and
+``REPRO_LUT_BACKEND`` names the default backend picked by
+:func:`resolve`.
+"""
+from __future__ import annotations
+
+import importlib
+import os
+from typing import Callable, Dict, Optional, Tuple
+
+from repro.backends.base import LookupBackend
+
+DEFAULT_BACKEND = "take"
+ENV_BACKEND = "REPRO_LUT_BACKEND"
+ENV_PLUGINS = "REPRO_LUT_BACKEND_PLUGINS"
+
+_FACTORIES: Dict[str, Callable[[], LookupBackend]] = {}
+_INSTANCES: Dict[str, LookupBackend] = {}
+_PLUGINS_LOADED = False
+
+
+def register(name: str,
+             factory: Optional[Callable[[], LookupBackend]] = None):
+    """Register a backend factory under ``name``.
+
+    Usable directly (``register("take", lambda: TakeBackend())``) or as a
+    class decorator::
+
+        @register("mine")
+        class MyBackend(LookupBackend): ...
+
+    Re-registering a name replaces it (latest wins) so plugins can shadow
+    builtins deliberately.
+    """
+    def _do(f: Callable[[], LookupBackend]):
+        _FACTORIES[name] = f
+        _INSTANCES.pop(name, None)
+        return f
+    return _do(factory) if factory is not None else _do
+
+
+def unregister(name: str) -> None:
+    _FACTORIES.pop(name, None)
+    _INSTANCES.pop(name, None)
+
+
+def load_plugins() -> None:
+    """Import modules named in ``REPRO_LUT_BACKEND_PLUGINS`` (once).
+
+    Every module is attempted even when an earlier one fails — one typo'd
+    entry must not silently disable the rest — then a single ImportError
+    names all failures.  A failed load is NOT latched: the next registry
+    call retries, so a caller that swallows the first error still cannot
+    silently run without the plugins."""
+    global _PLUGINS_LOADED
+    if _PLUGINS_LOADED:
+        return
+    failures = []
+    for mod in filter(None, os.environ.get(ENV_PLUGINS, "").split(",")):
+        try:
+            importlib.import_module(mod.strip())
+        except Exception as e:  # noqa: BLE001 - report, don't mask others
+            failures.append(f"{mod.strip()} ({e})")
+    if failures:
+        raise ImportError(
+            "failed to import lookup-backend plugin module(s): "
+            + "; ".join(failures))
+    _PLUGINS_LOADED = True
+
+
+def available() -> Tuple[str, ...]:
+    """Registered backend names, registration order."""
+    load_plugins()
+    return tuple(_FACTORIES)
+
+
+def get(name: str) -> LookupBackend:
+    """Instantiate (and memoize) the backend registered under ``name``."""
+    load_plugins()
+    if name not in _FACTORIES:
+        raise ValueError(
+            f"unknown lookup backend {name!r}; registered: "
+            f"{', '.join(_FACTORIES) or '(none)'}")
+    if name not in _INSTANCES:
+        inst = _FACTORIES[name]()
+        inst.name = name
+        _INSTANCES[name] = inst
+    return _INSTANCES[name]
+
+
+def default_backend() -> str:
+    """The ambient default backend name (env override or 'take')."""
+    return os.environ.get(ENV_BACKEND, DEFAULT_BACKEND)
+
+
+def resolve(name: Optional[str] = None) -> LookupBackend:
+    """``name`` if given, else ``$REPRO_LUT_BACKEND``, else 'take'."""
+    return get(name or default_backend())

@@ -137,7 +137,9 @@ def init(rng: Array, cfg: AssembleConfig, *, dense: bool = False,
                 idx = jnp.asarray(mappings[l], jnp.int32)
                 assert idx.shape == (spec.units, spec.fan_in), idx.shape
             else:  # random fallback (the "w/o Learned Mappings" ablation)
-                idx = random_mapping(keys[-1], cfg, l)
+                # per-layer key: distinct layers with equal (units, fan_in,
+                # prev) must not get identical mappings
+                idx = random_mapping(jax.random.fold_in(keys[-1], l), cfg, l)
             layer["mapping"] = idx
         params["layers"].append(layer)
     return params

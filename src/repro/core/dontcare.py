@@ -44,16 +44,17 @@ class DontCareReport:
         return self.structural_luts / max(self.optimized_luts, 1)
 
 
-def analyze(net: FoldedNetwork, x, _legacy_x=None) -> DontCareReport:
+def analyze(net: FoldedNetwork, x) -> DontCareReport:
     """x: [n, in_features] representative inputs (training set).
 
-    The deprecated ``analyze(net, params, x)`` signature still works for
-    one release; mappings/quantizers now live on the FoldedNetwork.
+    Mappings/quantizers come from the self-contained FoldedNetwork (the
+    pre-PR-1 ``analyze(net, params, x)`` signature was removed in PR 2).
     """
-    from repro.core.folding import _resolve_legacy_args
-    mappings, in_q, x = _resolve_legacy_args(net, x, _legacy_x, "analyze")
+    from repro.backends.base import require_mappings
+    require_mappings(net, "analyze")
     cfg = net.cfg
-    codes = quant.quantize_codes(in_q, cfg.input_quant_spec(),
+    mappings = net.mappings
+    codes = quant.quantize_codes(net.in_q, cfg.input_quant_spec(),
                                  jnp.asarray(x))
     observed_frac: List[float] = []
     possible: List[int] = []

@@ -14,13 +14,13 @@ training params (``folded_apply_codes(net, x)``).  The deployable artifact
 with save/load and backend selection is ``repro.pipeline.
 CompiledLUTNetwork``; this module is the mechanism underneath it.
 
-On TPU the lookup is executed by ``repro.kernels.lut_gather`` — either a
-vectorized take-gather or a one-hot matmul on the MXU (see DESIGN.md §2).
+Cascade execution is delegated to the pluggable ``repro.backends``
+registry — per-layer take/onehot/pallas adapters or the fused single-launch
+Pallas cascade (see DESIGN.md §2 for the decision table).
 """
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import List, Optional
 
 import jax
@@ -90,60 +90,26 @@ def fold_network(params: dict, cfg: AssembleConfig) -> FoldedNetwork:
                          mappings=mappings)
 
 
-def _resolve_legacy_args(net: FoldedNetwork, x, legacy_x, fn_name: str):
-    """Support the deprecated ``(net, params, x)`` calling convention.
-
-    Returns (mappings, in_q, x): when the old signature is used, mappings
-    and the input quantizer come from ``params`` (matching pre-PR-1
-    behavior); otherwise from the self-contained net.
-    """
-    if isinstance(x, dict) or legacy_x is not None:
-        if legacy_x is None:
-            raise TypeError(f"{fn_name}: got params dict but no input array")
-        warnings.warn(
-            f"{fn_name}(net, params, x) is deprecated; FoldedNetwork is "
-            f"self-contained — call {fn_name}(net, x)",
-            DeprecationWarning, stacklevel=3)
-        params, x = x, legacy_x
-        mappings = [None if spec.assemble
-                    else params["layers"][l]["mapping"]
-                    for l, spec in enumerate(net.cfg.layers)]
-        return mappings, params["in_q"], x
-    if net.mappings is None and any(not s.assemble for s in net.cfg.layers):
-        raise ValueError(
-            f"{fn_name}: FoldedNetwork has no mappings; re-fold with "
-            "fold_network(params, cfg)")
-    return net.mappings, net.in_q, x
-
-
-def folded_apply_codes(net: FoldedNetwork, x: Array, _legacy_x=None,
-                       *, lut_impl: str = "take") -> Array:
+def folded_apply_codes(net: FoldedNetwork, x: Array,
+                       *, lut_impl: Optional[str] = None) -> Array:
     """Folded inference. x: [batch, in_features] floats -> final codes.
 
-    ``lut_impl``: 'take' (pure-jnp oracle), 'onehot' (MXU-style matmul) or
-    'pallas' (the VMEM-tiled kernel) — see DESIGN.md §2 for the decision
-    table.  The deprecated ``(net, params, x)`` signature still works for
-    one release and reads mappings/quantizers from ``params``.
+    ``lut_impl`` names any registered lookup backend ('take' oracle,
+    'onehot', 'pallas', the single-launch 'fused' cascade, or a plugin);
+    ``None`` resolves ``$REPRO_LUT_BACKEND`` / 'take'.  See DESIGN.md §2.
+    The plan is memoized on ``net``, so repeated (and traced) calls reuse
+    the packed buffers.
     """
-    from repro.kernels import ops as lut_ops
+    from repro import backends
 
-    mappings, in_q, x = _resolve_legacy_args(net, x, _legacy_x,
-                                             "folded_apply_codes")
-    cfg = net.cfg
-    codes = quant.quantize_codes(in_q, cfg.input_quant_spec(), x)
-    for l, spec in enumerate(cfg.layers):
-        if spec.assemble:
-            ci = codes.reshape(codes.shape[0], spec.units, spec.fan_in)
-        else:
-            ci = codes[:, mappings[l]]
-        addr = quant.pack_address(ci, cfg.in_bits(l), spec.fan_in)
-        codes = lut_ops.lut_lookup(net.tables[l], addr, impl=lut_impl)
-    return codes
+    be = backends.resolve(lut_impl)
+    codes = quant.quantize_codes(net.in_q, net.cfg.input_quant_spec(), x)
+    return be.run(backends.plan_for(net, be), codes)
 
 
-def folded_logits(net: FoldedNetwork, x: Array, _legacy_x=None,
-                  *, lut_impl: str = "take") -> Array:
-    codes = folded_apply_codes(net, x, _legacy_x, lut_impl=lut_impl)
+def folded_logits(net: FoldedNetwork, x: Array,
+                  *, lut_impl: Optional[str] = None) -> Array:
+    codes = folded_apply_codes(net, x, lut_impl=lut_impl)
     cfg = net.cfg
     return quant.dequantize_codes(net.out_q, cfg.quant_spec(len(cfg.layers) - 1),
                                   codes)

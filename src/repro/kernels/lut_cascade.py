@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: the ENTIRE folded L-LUT cascade in one launch.
+
+The per-layer path (`lut_gather`) pays one kernel dispatch per layer and
+re-reads the activations from HBM between layers.  The folded networks the
+paper deploys are tiny (all tables together are a few hundred KiB), so the
+whole network fits in VMEM at once; this kernel executes every layer inside
+a single ``pallas_call`` with the grid tiled over batch only:
+
+  * **Tables** for all layers are bit-packed into ONE buffer
+    ``[total_units, max_entries]`` (int8/int16 when the largest beta
+    allows, e.g. the 1-bit MNIST layers pack 4x denser than int32), each
+    layer a static row-slice — resident in VMEM across the cascade.
+  * **Mapping gathers + address formation** collapse into one MXU matmul
+    per layer: with ``A_l[p, u] = sum_f 2^{bits*(F-1-f)} [map_l[u,f] = p]``
+    the packed address is ``addr = codes @ A_l`` (assemble layers are the
+    contiguous mapping, duplicate fan-in indices just sum their weights).
+    All values are integers below 2^24, so f32 MXU arithmetic is exact —
+    planning enforces ``bits*F <= 24`` (paper configs max out at 12).
+  * **Lookup** is the one-hot x table contraction of `lut_gather`, per
+    layer, on the VMEM-resident table slice.
+
+Intermediate activations never leave VMEM.  Validated bit-exact against the
+per-layer 'take' oracle over every paper task config by tests/test_backends.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.lut_gather import fit_block_b
+
+Array = jax.Array
+
+# static per-layer plan entry: (prev_width, units, entries, row_offset)
+LayerMeta = Tuple[int, int, int, int]
+
+
+def _cascade_kernel(codes_ref, amat_ref, tables_ref, out_ref, *,
+                    layers: Tuple[LayerMeta, ...]):
+    h = codes_ref[...].astype(jnp.float32)               # [BB, W0]
+    for prev, units, entries, off in layers:
+        a = amat_ref[0:prev, off:off + units]            # [prev, U] f32
+        # gather + address packing as ONE matmul.  Exact only as full-f32
+        # multiplies (ints < 2^24): HIGHEST forbids the MXU's default bf16
+        # input precision, which is exact merely to 2^8.
+        addr = jnp.dot(h, a, preferred_element_type=jnp.float32,
+                       precision=jax.lax.Precision.HIGHEST)
+        addr_i = jnp.round(addr).astype(jnp.int32)       # [BB, U]
+        tab = tables_ref[off:off + units, 0:entries].astype(jnp.float32)
+        iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, entries), 2)
+        onehot = (addr_i[..., None] == iota).astype(jnp.float32)
+        out = jax.lax.dot_general(                       # [U, BB, 1]
+            onehot.transpose(1, 0, 2), tab[..., None],
+            dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32,
+            precision=jax.lax.Precision.HIGHEST)
+        h = jnp.round(out[..., 0].T)                     # [BB, U] codes
+    out_ref[...] = h.astype(jnp.int32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("layers", "block_b", "interpret"))
+def lut_cascade_pallas(codes: Array, amat: Array, tables: Array, *,
+                       layers: Tuple[LayerMeta, ...], block_b: int = 256,
+                       interpret: bool = True) -> Array:
+    """Run the whole folded cascade in a single ``pallas_call``.
+
+    codes:  [batch, in_features] int32 input codes.
+    amat:   [max_prev, total_units] f32 — per-layer address-formation
+            matrices packed block-wise (layer l occupies rows [0:prev_l],
+            cols [off_l : off_l+units_l]).
+    tables: [total_units, max_entries] int — per-layer tables packed along
+            rows at the same offsets.
+    layers: static ``(prev, units, entries, off)`` per layer.
+    """
+    batch = codes.shape[0]
+    # the one-hot tile is the VMEM high-water mark; shrink block_b to fit
+    worst = max(u * t for _, u, t, _ in layers)
+    block_b = fit_block_b(block_b, worst * 4)
+
+    pb = (-batch) % block_b
+    codes_p = jnp.pad(codes, ((0, pb), (0, 0)))  # zero rows: valid addresses
+    bb = codes_p.shape[0]
+    n_out = layers[-1][1]
+
+    out = pl.pallas_call(
+        functools.partial(_cascade_kernel, layers=layers),
+        grid=(bb // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, codes.shape[1]), lambda i: (i, 0)),
+            pl.BlockSpec(amat.shape, lambda i: (0, 0)),
+            pl.BlockSpec(tables.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, n_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bb, n_out), jnp.int32),
+        interpret=interpret,
+    )(codes_p, amat, tables)
+    return out[:batch]

@@ -25,6 +25,17 @@ from jax.experimental import pallas as pl
 
 Array = jax.Array
 
+VMEM_TILE_BUDGET = 4 * 2 ** 20  # ~4 MiB: the one-hot tile high-water mark
+
+
+def fit_block_b(block_b: int, per_row_bytes: int,
+                budget: int = VMEM_TILE_BUDGET, floor: int = 8) -> int:
+    """Halve ``block_b`` until the dominant per-step tile fits the VMEM
+    budget (shared by this kernel and the fused cascade in lut_cascade)."""
+    while block_b * per_row_bytes > budget and block_b > floor:
+        block_b //= 2
+    return block_b
+
 
 def _lut_kernel(addr_ref, table_ref, out_ref):
     addr = addr_ref[...]                       # [BB, BU] int32
@@ -55,9 +66,8 @@ def lut_lookup_pallas(table: Array, addr: Array, *, block_b: int = 256,
     batch, units = addr.shape
     entries = table.shape[-1]
     # keep the one-hot tile <= ~4 MiB of VMEM
-    while block_b * block_u * entries * 4 > 4 * 2 ** 20 and block_b > 8:
-        block_b //= 2
-    while block_b * block_u * entries * 4 > 4 * 2 ** 20 and block_u > 1:
+    block_b = fit_block_b(block_b, block_u * entries * 4)
+    while block_b * block_u * entries * 4 > VMEM_TILE_BUDGET and block_u > 1:
         block_u //= 2
 
     pb = (-batch) % block_b

@@ -1,9 +1,13 @@
 """Jit'd public wrappers over the Pallas kernels with jnp fallbacks.
 
-Dispatch policy (see DESIGN.md §2):
+Dispatch policy (see DESIGN.md §2 — the *public* execution surface is the
+``repro.backends`` registry; these wrappers are the per-kernel layer it
+builds on):
   * ``lut_lookup``: 'take' = vectorized gather (oracle semantics, CPU
     default); 'onehot' = MXU matmul formulation in pure jnp; 'pallas' = the
     VMEM-tiled Pallas kernel (interpret mode on CPU, compiled on TPU).
+  * ``lut_cascade``: the fused whole-network cascade kernel behind the
+    'fused' backend (one launch for all layers).
   * ``unit_affine``: einsum fallback vs the batched Pallas stage.
   * ``flash_attention``: jnp scan fallback (models/attention.py) vs Pallas.
 
@@ -22,10 +26,10 @@ import os
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.lut_cascade import lut_cascade_pallas
 from repro.kernels.lut_gather import lut_lookup_pallas
 from repro.kernels.subnet_mlp import unit_affine_pallas
 
@@ -81,6 +85,15 @@ def lut_lookup(table: Array, addr: Array, *, impl: str = "take") -> Array:
     if impl == "pallas":
         return lut_lookup_pallas(table, addr, interpret=pallas_interpret())
     raise ValueError(f"unknown lut_lookup impl {impl!r}")
+
+
+def lut_cascade(codes: Array, amat: Array, tables: Array, *,
+                layers, block_b: int = 256) -> Array:
+    """Whole-network fused L-LUT cascade (single ``pallas_call``); see
+    ``kernels.lut_cascade``.  Interpret mode resolved here, like the rest
+    of the Pallas wrappers."""
+    return lut_cascade_pallas(codes, amat, tables, layers=layers,
+                              block_b=block_b, interpret=pallas_interpret())
 
 
 def unit_affine(x: Array, w: Array, b: Array, *, activate: bool = False,

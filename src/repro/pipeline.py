@@ -16,10 +16,13 @@ module is that flow as one coherent API:
 
   * ``CompiledLUTNetwork`` — the self-contained deployment artifact.  It
     owns everything inference needs (tables, mappings, boundary quantizers,
-    config): ``predict`` / ``predict_codes`` (jitted, batched, backend-
-    selectable), ``save``/``load`` (single ``.npz`` with an embedded JSON
-    config), ``hw_report`` / ``to_verilog`` delegating to ``core.hwcost`` /
-    ``core.rtl``.  No training params ever cross the deployment boundary.
+    config): ``compile_backend(name)`` plans any registered lookup backend
+    (``repro.backends``: take/onehot/pallas/fused/plugins) into a reusable
+    jitted executor, ``predict`` / ``predict_codes`` ride on it,
+    ``save``/``load`` (single ``.npz`` with an embedded JSON config)
+    round-trip the plans too, ``hw_report`` / ``to_verilog`` delegate to
+    ``core.hwcost`` / ``core.rtl``.  No training params ever cross the
+    deployment boundary.
 
 See DESIGN.md §1 for the API contract and migration notes from the old
 per-module calls (``lut_trainer.train`` x2 + ``pruning.select_mappings`` +
@@ -37,7 +40,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import assemble, folding, hwcost, pruning
+from repro import backends
+from repro.core import assemble, folding, hwcost, pruning, quant
 from repro.core.assemble import AssembleConfig, LayerSpec
 from repro.core.folding import FoldedNetwork
 
@@ -45,10 +49,9 @@ Array = jax.Array
 
 ARTIFACT_VERSION = 1
 
-# Default lookup backend for compiled networks; override per call or with
-# REPRO_LUT_BACKEND (see DESIGN.md §2 for the decision table).
-def default_backend() -> str:
-    return os.environ.get("REPRO_LUT_BACKEND", "take")
+# Default lookup backend name; override per call or with REPRO_LUT_BACKEND
+# (see DESIGN.md §2 for the registry and decision table).
+default_backend = backends.default_backend
 
 
 # ---------------------------------------------------------------------------
@@ -93,16 +96,24 @@ def _save_npz(path: str, arrays: Dict[str, np.ndarray], meta_key: str,
 
 
 def _open_npz(path: str, meta_key: str):
-    """Returns (npz handle, decoded meta dict); caller closes the handle."""
+    """Returns (npz handle, decoded meta dict); caller closes the handle.
+
+    The handle is closed here on EVERY error path (missing/corrupt meta,
+    JSON decode failure, version check) — only a successful return hands
+    ownership to the caller.
+    """
     if not path.endswith(".npz") and not os.path.exists(path):
         path = path + ".npz"
     data = np.load(path)
-    meta = json.loads(bytes(data[meta_key]).decode("utf-8"))
-    if meta.get("format_version", 0) > ARTIFACT_VERSION:
+    try:
+        meta = json.loads(bytes(data[meta_key]).decode("utf-8"))
+        if meta.get("format_version", 0) > ARTIFACT_VERSION:
+            raise ValueError(
+                f"{path}: format {meta.get('format_version')} is newer than "
+                f"this code ({ARTIFACT_VERSION})")
+    except BaseException:
         data.close()
-        raise ValueError(
-            f"{path}: format {meta.get('format_version')} is newer than "
-            f"this code ({ARTIFACT_VERSION})")
+        raise
     return data, meta
 
 
@@ -110,12 +121,59 @@ def _open_npz(path: str, meta_key: str):
 # the deployment artifact
 # ---------------------------------------------------------------------------
 
+class PlannedExecutor:
+    """One lookup backend planned over one compiled network.
+
+    The reusable product of :meth:`CompiledLUTNetwork.compile_backend`: the
+    backend's :class:`~repro.backends.ExecutionPlan` plus ONE jitted
+    cascade (quantize -> backend.run -> dequantize) compiled for it.
+    Calling it returns logits; ``predict_codes`` the raw integer codes.
+    """
+
+    def __init__(self, net: "CompiledLUTNetwork",
+                 backend: backends.LookupBackend,
+                 plan: backends.ExecutionPlan):
+        self.backend = backend.name
+        self.plan = plan
+        self.capabilities = backend.capabilities()
+        cfg = net.cfg
+        in_q = {"log_scale": jnp.asarray(net.in_log_scale)}
+        out_q = {"log_scale": jnp.asarray(net.out_log_scale)}
+        in_spec = cfg.input_quant_spec()
+        out_spec = cfg.quant_spec(len(cfg.layers) - 1)
+
+        def both(x):
+            codes = quant.quantize_codes(in_q, in_spec, x)
+            codes = backend.run(plan, codes)
+            return codes, quant.dequantize_codes(out_q, out_spec, codes)
+
+        self._both = jax.jit(both)
+
+    def predict_codes(self, x) -> Array:
+        return self._both(jnp.asarray(x))[0]
+
+    def predict(self, x) -> Array:
+        return self._both(jnp.asarray(x))[1]
+
+    def codes_and_logits(self, x) -> tuple:
+        """Both outputs from the single jitted cascade (serving hot path)."""
+        return self._both(jnp.asarray(x))
+
+    __call__ = predict
+
+
 class CompiledLUTNetwork:
     """A folded NeuraLUT-Assemble network, self-contained for deployment.
 
     Holds the per-layer L-LUT tables, the learned mappings, and the two
     boundary quantizers — everything ``predict`` needs.  Construct with
     :func:`compile_network` (from training params) or :meth:`load`.
+
+    Execution goes through the ``repro.backends`` registry:
+    :meth:`compile_backend` plans a named backend once and returns the
+    reusable :class:`PlannedExecutor`; ``predict``/``predict_codes`` are
+    sugar over it.  Plans are persisted by :meth:`save` and restored by
+    :meth:`load`, so a serving process never re-plans.
     """
 
     def __init__(self, cfg: AssembleConfig, tables: List[np.ndarray],
@@ -130,7 +188,8 @@ class CompiledLUTNetwork:
         self.out_log_scale = float(out_log_scale)
         self.backend = backend or default_backend()
         self._folded: Optional[FoldedNetwork] = None
-        self._jitted: Dict[str, Any] = {}
+        self._plans: Dict[str, backends.ExecutionPlan] = {}
+        self._executors: Dict[str, PlannedExecutor] = {}
 
     # -- construction --------------------------------------------------------
     @classmethod
@@ -157,24 +216,32 @@ class CompiledLUTNetwork:
                           for m in self.mappings])
         return self._folded
 
-    def _fn(self, backend: Optional[str], kind: str = "codes"):
-        impl = backend or self.backend
-        key = (kind, impl)
-        if key not in self._jitted:
-            net = self.folded()
-            fold_fn = (folding.folded_apply_codes if kind == "codes"
-                       else folding.folded_logits)
-            self._jitted[key] = jax.jit(
-                lambda x: fold_fn(net, x, lut_impl=impl))
-        return self._jitted[key]
+    def compile_backend(self, name: Optional[str] = None) -> PlannedExecutor:
+        """Plan the named lookup backend (default: ``self.backend``) over
+        this network and return the reusable jitted executor.
+
+        Planning runs once per backend per artifact; the plan is kept in
+        ``_plans`` and round-trips through :meth:`save`/:meth:`load`."""
+        be = backends.resolve(name or self.backend)
+        if be.name not in self._executors:
+            plan = self._plans.get(be.name)
+            if plan is None or plan.meta.get("plan_format") != be.plan_format:
+                # no plan yet, or a restored plan whose buffer layout was
+                # produced by a different implementation now shadowing this
+                # name (plugins can do that) — re-plan rather than handing
+                # foreign buffers to run()
+                plan = self._plans[be.name] = backends.make_plan(
+                    self.folded(), be)
+            self._executors[be.name] = PlannedExecutor(self, be, plan)
+        return self._executors[be.name]
 
     def predict_codes(self, x, *, backend: Optional[str] = None) -> Array:
         """[batch, in_features] floats -> final-layer integer codes."""
-        return self._fn(backend, "codes")(jnp.asarray(x))
+        return self.compile_backend(backend).predict_codes(x)
 
     def predict(self, x, *, backend: Optional[str] = None) -> Array:
         """[batch, in_features] floats -> dequantized logits."""
-        return self._fn(backend, "logits")(jnp.asarray(x))
+        return self.compile_backend(backend).predict(x)
 
     # -- introspection / hardware --------------------------------------------
     def num_entries(self) -> int:
@@ -189,18 +256,36 @@ class CompiledLUTNetwork:
 
     # -- persistence ---------------------------------------------------------
     def save(self, path: str) -> str:
-        """Write a single ``.npz``: tables/mappings + embedded JSON config."""
+        """Write a single ``.npz``: tables/mappings + embedded JSON config.
+
+        Backend plans computed so far (via :meth:`compile_backend`) ride
+        along (``plan__<backend>__<buffer>`` arrays + meta in the JSON), so
+        ``load`` restores a pre-planned artifact.  Plans that are verbatim
+        re-extractions of the base arrays (``persist_plan=False``, i.e. the
+        layered backends) are skipped — they re-plan instantly on load."""
         arrays: Dict[str, np.ndarray] = {}
         for l, t in enumerate(self.tables):
             arrays[f"table_{l}"] = t
         for l, m in enumerate(self.mappings):
             if m is not None:
                 arrays[f"mapping_{l}"] = m
+        plans_meta: Dict[str, Any] = {}
+        for name, plan in self._plans.items():
+            try:
+                persist = backends.get(name).persist_plan
+            except ValueError:  # backend no longer registered: keep plan
+                persist = True
+            if not persist:
+                continue  # trivially re-derived on load; don't duplicate
+            plans_meta[name] = plan.meta
+            for k, buf in plan.buffers.items():
+                arrays[f"plan__{name}__{k}"] = buf
         meta = {
             "config": config_to_dict(self.cfg),
             "in_log_scale": self.in_log_scale,
             "out_log_scale": self.out_log_scale,
             "backend": self.backend,
+            "plans": plans_meta,
         }
         return _save_npz(path, arrays, "meta_json", meta)
 
@@ -212,8 +297,15 @@ class CompiledLUTNetwork:
             tables = [data[f"table_{l}"] for l in range(len(cfg.layers))]
             mappings = [data[f"mapping_{l}"] if f"mapping_{l}" in data
                         else None for l in range(len(cfg.layers))]
-        return cls(cfg, tables, mappings, meta["in_log_scale"],
-                   meta["out_log_scale"], backend=meta.get("backend"))
+            net = cls(cfg, tables, mappings, meta["in_log_scale"],
+                      meta["out_log_scale"], backend=meta.get("backend"))
+            for name, pmeta in meta.get("plans", {}).items():
+                prefix = f"plan__{name}__"
+                bufs = {k[len(prefix):]: data[k]
+                        for k in data.files if k.startswith(prefix)}
+                net._plans[name] = backends.ExecutionPlan(
+                    backend=name, meta=pmeta, buffers=bufs)
+        return net
 
 
 def compile_network(params: dict, cfg: AssembleConfig,

@@ -8,10 +8,12 @@ feed-forward row — so the continuous-batching problem reduces to classic
 micro-batching: fixed block shape (one XLA compilation, ever), pad the
 tail, amortize dispatch overhead across the block.
 
-The cascade itself is ``CompiledLUTNetwork.predict_codes`` — backend-
-selectable (take / onehot / pallas, DESIGN.md §2) and fully self-contained,
-so an engine can be stood up from a ``.npz`` artifact with no training
-state anywhere in the process.
+The cascade itself is a ``CompiledLUTNetwork.compile_backend`` executor —
+any registered lookup backend (take / onehot / pallas / fused, DESIGN.md
+§2) planned once at engine construction — and fully self-contained, so an
+engine can be stood up from a ``.npz`` artifact with no training state
+anywhere in the process.  Artifacts saved with their plans skip planning
+entirely.
 """
 from __future__ import annotations
 
@@ -19,7 +21,6 @@ import collections
 import dataclasses
 from typing import Deque, List, Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -55,17 +56,9 @@ class LUTEngine:
         self.queue: Deque[LUTRequest] = collections.deque()
         self.stats = LUTEngineStats()
         self._next_rid = 0
-        folded = net.folded()
-        out_q = folded.out_q
-        out_spec = net.cfg.quant_spec(len(net.cfg.layers) - 1)
-        impl = self.backend  # bound now; mutating self.backend later is a no-op
-
-        def block_fwd(xb):
-            from repro.core import folding, quant
-            codes = folding.folded_apply_codes(folded, xb, lut_impl=impl)
-            return codes, quant.dequantize_codes(out_q, out_spec, codes)
-
-        self._fwd = jax.jit(block_fwd)
+        # plan the backend now; mutating self.backend later is a no-op
+        self._executor = net.compile_backend(self.backend)
+        self._fwd = self._executor.codes_and_logits
 
     # -- queueing ------------------------------------------------------------
     def submit(self, x: np.ndarray) -> LUTRequest:

@@ -1,0 +1,244 @@
+"""The PR-2 acceptance contract: every registered lookup backend produces
+bit-identical ``predict_codes`` on every paper task config, including
+adversarial shapes (batches/units off the kernel block sizes, the
+``fan_in=1`` first jsc layer, the 1-bit MNIST layers), plus the registry
+and plan-persistence contracts.
+
+Networks are random-init (folding needs no training); the 'take' gather is
+the semantic oracle.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro import backends, pipeline
+from repro.backends.base import (BackendCapabilities, ExecutionPlan,
+                                 LookupBackend)
+from repro.configs import paper_tasks
+from repro.core import assemble, folding
+from repro.pipeline import CompiledLUTNetwork
+
+# every Table-II architecture verbatim + the reduced CPU-sized variants
+CONFIGS = {
+    "mnist_full": paper_tasks.mnist,        # 1-bit layers, F=6, 2160 units
+    "jsc_cernbox_full": paper_tasks.jsc_cernbox,   # fan_in=1 first layer
+    "jsc_openml_full": paper_tasks.jsc_openml,
+    "nid_full": paper_tasks.nid,
+    "mnist_reduced": lambda: paper_tasks.reduced("mnist"),
+    "jsc_reduced": lambda: paper_tasks.reduced("jsc"),
+    "nid_reduced": lambda: paper_tasks.reduced("nid"),
+}
+
+
+def _compiled(cfg, seed=0):
+    params = assemble.init(jax.random.PRNGKey(seed), cfg)
+    return pipeline.compile_network(params, cfg)
+
+
+def _x(cfg, n, seed=1):
+    return jax.random.uniform(jax.random.PRNGKey(seed),
+                              (n, cfg.in_features), minval=-1.0, maxval=1.0)
+
+
+# ---------------------------------------------------------------------------
+# cross-backend exact integer equality
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(CONFIGS))
+def test_all_backends_bit_identical_on_paper_tasks(name):
+    """Acceptance: take == onehot == pallas == fused on every paper config,
+    with a batch (33) off every block size."""
+    cfg = CONFIGS[name]()
+    compiled = _compiled(cfg)
+    x = _x(cfg, 33)
+    ref = np.asarray(compiled.predict_codes(x, backend="take"))
+    assert set(backends.available()) >= {"take", "onehot", "pallas", "fused"}
+    for be in backends.available():
+        got = np.asarray(compiled.predict_codes(x, backend=be))
+        np.testing.assert_array_equal(got, ref, err_msg=f"{name}/{be}")
+
+
+@pytest.mark.parametrize("batch", [1, 8, 33, 257])
+def test_backends_adversarial_batch_shapes(batch):
+    """Batches below/off/above the Pallas block sizes (incl. 257 > the
+    default 256 batch tile, forcing a multi-step grid + padded tail)."""
+    cfg = paper_tasks.reduced("nid")
+    compiled = _compiled(cfg, seed=2)
+    x = _x(cfg, batch, seed=3)
+    ref = np.asarray(compiled.predict_codes(x, backend="take"))
+    assert ref.shape[0] == batch
+    for be in backends.available():
+        np.testing.assert_array_equal(
+            np.asarray(compiled.predict_codes(x, backend=be)), ref,
+            err_msg=f"batch={batch}/{be}")
+
+
+def test_fused_matches_quantized_model_bit_exact():
+    """fused folded inference == assemble.apply_codes (the paper's core
+    bit-exactness property survives the single-kernel rewrite)."""
+    cfg = paper_tasks.reduced("jsc")
+    params = assemble.init(jax.random.PRNGKey(4), cfg)
+    compiled = pipeline.compile_network(params, cfg)
+    x = _x(cfg, 65, seed=5)
+    ref = np.asarray(assemble.apply_codes(params, cfg, x))
+    np.testing.assert_array_equal(
+        np.asarray(compiled.predict_codes(x, backend="fused")), ref)
+
+
+def test_folded_apply_codes_accepts_backend_names():
+    """folding.folded_apply_codes routes lut_impl through the registry."""
+    cfg = paper_tasks.reduced("nid")
+    params = assemble.init(jax.random.PRNGKey(6), cfg)
+    net = folding.fold_network(params, cfg)
+    x = _x(cfg, 17, seed=7)
+    ref = np.asarray(folding.folded_apply_codes(net, x, lut_impl="take"))
+    for be in backends.available():
+        np.testing.assert_array_equal(
+            np.asarray(folding.folded_apply_codes(net, x, lut_impl=be)),
+            ref, err_msg=be)
+    with pytest.raises(ValueError, match="unknown lookup backend"):
+        folding.folded_apply_codes(net, x, lut_impl="nope")
+
+
+# ---------------------------------------------------------------------------
+# planning / executor / persistence
+# ---------------------------------------------------------------------------
+
+def test_compile_backend_returns_reusable_executor():
+    cfg = paper_tasks.reduced("nid")
+    compiled = _compiled(cfg, seed=8)
+    ex = compiled.compile_backend("fused")
+    assert ex is compiled.compile_backend("fused")  # planned once
+    assert ex.capabilities.fused
+    x = _x(cfg, 9, seed=9)
+    codes, logits = ex.codes_and_logits(x)
+    np.testing.assert_array_equal(np.asarray(codes),
+                                  np.asarray(ex.predict_codes(x)))
+    np.testing.assert_allclose(np.asarray(logits),
+                               np.asarray(compiled.predict(x)),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_plans_round_trip_through_artifact(tmp_path):
+    """save() persists computed plans worth keeping; load() restores them
+    pre-planned and the restored fused plan predicts bit-identically.
+    Layered plans (verbatim copies of the base arrays) are NOT duplicated
+    into the artifact — they re-plan instantly on load."""
+    cfg = paper_tasks.reduced("jsc")
+    compiled = _compiled(cfg, seed=10)
+    compiled.compile_backend("fused")
+    compiled.compile_backend("take")
+    path = compiled.save(str(tmp_path / "art.npz"))
+
+    loaded = CompiledLUTNetwork.load(path)
+    assert set(loaded._plans) == {"fused"}  # take: persist_plan=False
+    fused_plan = loaded._plans["fused"]
+    assert fused_plan.meta["table_dtype"] in ("int8", "int16", "int32")
+    assert fused_plan.meta["plan_format"] == "fused-packed-v1"
+    x = _x(cfg, 21, seed=11)
+    np.testing.assert_array_equal(
+        np.asarray(loaded.predict_codes(x, backend="fused")),
+        np.asarray(compiled.predict_codes(x, backend="take")))
+    # ...and the executor reused the restored plan (no re-planning)
+    assert loaded.compile_backend("fused").plan is fused_plan
+
+
+def test_restored_plan_replanned_when_backend_shadowed(tmp_path):
+    """A plugin shadowing a builtin name with a different buffer layout
+    must NOT be handed the persisted plan's foreign buffers."""
+    from repro.backends.fused import FusedCascadeBackend
+
+    cfg = paper_tasks.reduced("nid")
+    compiled = _compiled(cfg, seed=20)
+    compiled.compile_backend("fused")
+    path = compiled.save(str(tmp_path / "art.npz"))
+
+    class ShadowFused(FusedCascadeBackend):
+        plan_format = "shadow-v1"
+
+    backends.register("fused", ShadowFused)
+    try:
+        loaded = CompiledLUTNetwork.load(path)
+        assert loaded._plans["fused"].meta["plan_format"] == "fused-packed-v1"
+        ex = loaded.compile_backend("fused")   # format mismatch -> re-plan
+        assert ex.plan.meta["plan_format"] == "shadow-v1"
+        x = _x(cfg, 13, seed=21)
+        np.testing.assert_array_equal(
+            np.asarray(loaded.predict_codes(x, backend="fused")),
+            np.asarray(compiled.predict_codes(x, backend="take")))
+    finally:
+        backends.register("fused", FusedCascadeBackend)
+
+
+def test_fused_plan_packs_narrow_tables():
+    """1-bit layers (mnist) pack int8; 8-bit logits (jsc_cernbox) int16."""
+    mnist = _compiled(paper_tasks.reduced("mnist"), seed=12)
+    plan = mnist.compile_backend("fused").plan
+    assert plan.buffers["tables"].dtype == np.int8
+    jsc = _compiled(paper_tasks.jsc_cernbox(), seed=13)
+    plan = jsc.compile_backend("fused").plan
+    assert plan.buffers["tables"].dtype == np.int16
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_register_and_env_resolution(monkeypatch):
+    class EchoBackend(LookupBackend):
+        name = "echo"
+
+        def capabilities(self):
+            return BackendCapabilities(name="echo", fused=False,
+                                       needs_pallas=False)
+
+        def plan(self, net):
+            return ExecutionPlan(backend="echo", meta={}, buffers={})
+
+        def run(self, plan, codes):
+            return codes
+
+    backends.register("echo", EchoBackend)
+    try:
+        assert "echo" in backends.available()
+        assert isinstance(backends.get("echo"), EchoBackend)
+        monkeypatch.setenv("REPRO_LUT_BACKEND", "echo")
+        assert backends.resolve().name == "echo"
+        assert backends.resolve("take").name == "take"  # explicit wins
+    finally:
+        backends.unregister("echo")
+    assert "echo" not in backends.available()
+    with pytest.raises(ValueError, match="unknown lookup backend"):
+        backends.get("echo")
+
+
+def test_default_backend_env(monkeypatch):
+    monkeypatch.delenv("REPRO_LUT_BACKEND", raising=False)
+    assert pipeline.default_backend() == "take"
+    monkeypatch.setenv("REPRO_LUT_BACKEND", "fused")
+    assert pipeline.default_backend() == "fused"
+    cfg = paper_tasks.reduced("nid")
+    compiled = _compiled(cfg, seed=14)
+    assert compiled.backend == "fused"  # picked up at construction
+
+
+# ---------------------------------------------------------------------------
+# removed deprecation shims stay removed
+# ---------------------------------------------------------------------------
+
+def test_legacy_params_signatures_are_gone():
+    """PR-1 scheduled the (net, params, x) shims for one release; PR 2
+    removes them — passing params now fails loudly instead of warning."""
+    from repro.core import dontcare, rtl
+    cfg = paper_tasks.reduced("nid")
+    params = assemble.init(jax.random.PRNGKey(15), cfg)
+    net = folding.fold_network(params, cfg)
+    x = _x(cfg, 4, seed=16)
+    with pytest.raises(TypeError):
+        folding.folded_apply_codes(net, params, x)
+    with pytest.raises(TypeError):
+        folding.folded_logits(net, params, x)
+    with pytest.raises(TypeError):
+        rtl.emit_verilog(net, params)
+    with pytest.raises(TypeError):
+        dontcare.analyze(net, params, np.asarray(x))

@@ -215,9 +215,6 @@ def test_verilog_emission():
     params = assemble.init(jax.random.PRNGKey(0), cfg)
     net = folding.fold_network(params, cfg)
     v = rtl.emit_verilog(net, pipeline_every=1)
-    # deprecated params-passing signature still emits identical RTL
-    with pytest.warns(DeprecationWarning):
-        assert rtl.emit_verilog(net, params, pipeline_every=1) == v
     assert "module neuralut_assemble" in v
     assert v.count("case (") == 4  # one ROM per L-LUT unit
     assert "always @(posedge clk)" in v

@@ -1,7 +1,6 @@
 """Don't-care analysis: reachability is sound and the optimized LUT count
 is bounded by the structural one."""
 import jax
-import numpy as np
 import pytest
 
 from repro.configs import paper_tasks
@@ -35,10 +34,6 @@ def test_dontcare_monotone_in_data(folded_nid):
     large = dontcare.analyze(net, data.x_train[:1024])
     for a, b in zip(small.per_layer_observed, large.per_layer_observed):
         assert b >= a - 1e-12
-    # deprecated (net, params, x) signature: warns, same result
-    with pytest.warns(DeprecationWarning):
-        legacy = dontcare.analyze(net, params, data.x_train[:64])
-    assert legacy.optimized_luts == small.optimized_luts
 
 
 def test_dontcare_explains_paper_gap(folded_nid):

@@ -3,17 +3,15 @@ L-LUTs is *bit-exact* — for every possible input, the folded table cascade
 produces the same integer codes as the quantized network.
 
 Randomized (hypothesis) config sweeps live in test_properties.py; this
-module keeps the deterministic cases and the self-contained-FoldedNetwork /
-deprecation-shim contracts.
+module keeps the deterministic cases and the self-contained-FoldedNetwork
+contract.  (Cross-backend equality sweeps live in test_backends.py.)
 """
-import warnings
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import assemble, folding, quant
+from repro.core import assemble, folding
 from repro.core.assemble import AssembleConfig, LayerSpec
 
 
@@ -92,25 +90,6 @@ def test_folded_network_is_self_contained():
     del params  # nothing below may touch training params
     folded = folding.folded_apply_codes(net, x)
     np.testing.assert_array_equal(np.asarray(folded), np.asarray(ref_codes))
-
-
-def test_deprecated_params_signature_still_works():
-    """folded_apply_codes(net, params, x) warns but matches the new API."""
-    cfg = _rand_config(0, in_features=8, bits_in=2,
-                       layers=[LayerSpec(4, 2, 2, False),
-                               LayerSpec(2, 2, 2, True)],
-                       width=4, depth=1, skip=0)
-    params = assemble.init(jax.random.PRNGKey(0), cfg)
-    x = jax.random.uniform(jax.random.PRNGKey(1), (16, cfg.in_features))
-    net = folding.fold_network(params, cfg)
-    new = folding.folded_apply_codes(net, x)
-    with pytest.warns(DeprecationWarning):
-        old = folding.folded_apply_codes(net, params, x)
-    np.testing.assert_array_equal(np.asarray(old), np.asarray(new))
-    with pytest.warns(DeprecationWarning):
-        old_logits = folding.folded_logits(net, params, x)
-    np.testing.assert_allclose(np.asarray(old_logits),
-                               np.asarray(folding.folded_logits(net, x)))
 
 
 def test_folded_logits_match_quantized_forward():
