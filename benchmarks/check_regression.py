@@ -1,0 +1,181 @@
+"""Perf-regression gate over the committed ``BENCH_*.json`` sweeps.
+
+Flattens the throughput (``BENCH_lut_throughput.json``) and backend
+(``BENCH_lut_backends.json``) sweeps into named scalar metrics, compares
+them against the committed ``experiments/BENCH_baseline.json`` with a
+relative tolerance (default +-30%), and exits non-zero on regression —
+the CI ``perf-gate`` job runs this on every PR after regenerating the
+sweeps with ``--fast``.
+
+  * higher-is-better metrics (rows/s, speedups) regress when they fall
+    below ``baseline * (1 - tol)``; lower-is-better (us timings) when they
+    rise above ``baseline * (1 + tol)``.
+  * boolean invariants (``bit_identical``) are hard failures regardless of
+    tolerance.
+  * a metric present in the baseline but missing from the current sweeps
+    is a failure (a silently shrunk sweep must not pass the gate); new
+    metrics are reported and ignored until the baseline is refreshed.
+
+``--refresh`` rewrites the baseline from the current sweep outputs — the
+CI workflow does this on pushes to main so the baseline tracks the tip of
+the default branch (and the runner generation CI actually uses).
+
+    PYTHONPATH=src python -m benchmarks.check_regression [--refresh]
+        [--tolerance 0.3] [--baseline PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+EXPERIMENTS = os.path.join(os.path.dirname(__file__), "..", "experiments")
+BASELINE = os.path.join(EXPERIMENTS, "BENCH_baseline.json")
+SCHEMA_VERSION = 1
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def extract_metrics(experiments: str = EXPERIMENTS):
+    """Flatten the sweep JSONs -> (metrics, invariant_failures).
+
+    Raises FileNotFoundError when a sweep output is missing — the gate
+    must not silently pass because a benchmark did not run.
+    """
+    metrics: dict = {}
+    violations: list = []
+
+    tp = _load(os.path.join(experiments, "BENCH_lut_throughput.json"))
+    for c in tp["engine"]:
+        stem = f"engine/{c['backend']}/block{c['block']}"
+        for mode in ("sync", "async"):
+            metrics[f"{stem}/{mode}_rows_per_s"] = (
+                c[mode]["rows_per_s"], True)
+    # per-cell speedup ratios amplify run-to-run noise (a 30% wobble in
+    # each operand is a 70% wobble in the ratio) — gate the aggregate the
+    # async upgrade exists for: best double-buffering win at block >= 256
+    big = [c["async_speedup"] for c in tp["engine"] if c["block"] >= 256]
+    if big:
+        metrics["engine/best_async_speedup_block_ge_256"] = (max(big), True)
+    for c in tp["mesh"]:
+        stem = f"mesh/{c['backend']}/x{c['mesh']}"
+        metrics[f"{stem}/rows_per_s"] = (c["rows_per_s"], True)
+        if not c["bit_identical"]:
+            violations.append(f"{stem}: mesh-sharded codes not bit-identical")
+
+    bk = _load(os.path.join(experiments, "BENCH_lut_backends.json"))
+    for task, t in bk["tasks"].items():
+        for cell in t["cells"]:
+            for name, us in cell["us"].items():
+                metrics[f"backends/{task}/batch{cell['batch']}/{name}_us"] = (
+                    us, False)
+            for name, ok in cell["bit_identical"].items():
+                if not ok:
+                    violations.append(
+                        f"backends/{task}/batch{cell['batch']}/{name}: "
+                        "not bit-identical")
+    return metrics, violations
+
+
+def compare(baseline: dict, metrics, tolerance: float):
+    """Returns (regressions, missing, improved) vs ``baseline['metrics']``."""
+    regressions, missing, improved = [], [], []
+    base = baseline["metrics"]
+    for name, entry in base.items():
+        if name not in metrics:
+            missing.append(name)
+            continue
+        ref = entry["value"]
+        cur, hib = metrics[name]
+        if ref == 0:
+            continue
+        ratio = cur / ref
+        if hib and ratio < 1.0 - tolerance:
+            regressions.append((name, ref, cur, ratio))
+        elif not hib and ratio > 1.0 + tolerance:
+            regressions.append((name, ref, cur, ratio))
+        elif (ratio > 1.0 + tolerance) if hib else (ratio < 1.0 - tolerance):
+            improved.append((name, ref, cur, ratio))
+    return regressions, missing, improved
+
+
+def refresh(path: str = BASELINE) -> str:
+    metrics, violations = extract_metrics()
+    if violations:
+        raise SystemExit(
+            "refusing to bake invariant violations into the baseline:\n  "
+            + "\n  ".join(violations))
+    doc = {
+        "schema_version": SCHEMA_VERSION,
+        "metrics": {name: {"value": v, "higher_is_better": hib}
+                    for name, (v, hib) in sorted(metrics.items())},
+    }
+    path = os.path.abspath(path)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    return path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--refresh", action="store_true",
+                    help="rewrite the baseline from the current sweeps")
+    ap.add_argument("--tolerance", type=float, default=0.30,
+                    help="relative tolerance before a drift is a regression")
+    ap.add_argument("--baseline", default=BASELINE)
+    args = ap.parse_args()
+
+    if args.refresh:
+        print(f"baseline refreshed: {refresh(args.baseline)}")
+        return
+
+    if not os.path.exists(args.baseline):
+        raise SystemExit(
+            f"no baseline at {args.baseline}; run with --refresh after the "
+            "sweeps to create one")
+    baseline = _load(args.baseline)
+    if baseline.get("schema_version") != SCHEMA_VERSION:
+        raise SystemExit(
+            f"baseline schema {baseline.get('schema_version')} != expected "
+            f"{SCHEMA_VERSION}; refresh the baseline on main")
+
+    metrics, violations = extract_metrics()
+    regressions, missing, improved = compare(baseline, metrics,
+                                             args.tolerance)
+    for name, ref, cur, ratio in improved:
+        print(f"IMPROVED   {name}: {ref:g} -> {cur:g} ({ratio:.2f}x)")
+    new = sorted(set(metrics) - set(baseline["metrics"]))
+    for name in new:
+        print(f"NEW        {name}: {metrics[name][0]:g} "
+              "(ignored until baseline refresh)")
+
+    failed = False
+    for v in violations:
+        print(f"VIOLATION  {v}")
+        failed = True
+    for name in missing:
+        print(f"MISSING    {name}: in baseline but not produced by sweeps")
+        failed = True
+    for name, ref, cur, ratio in regressions:
+        direction = "down" if ratio < 1 else "up"
+        print(f"REGRESSION {name}: {ref:g} -> {cur:g} "
+              f"({ratio:.2f}x, {direction}, tol +-{args.tolerance:.0%})")
+        failed = True
+
+    checked = len(baseline["metrics"]) - len(missing)
+    print(f"checked {checked} metrics vs {os.path.relpath(args.baseline)} "
+          f"(+-{args.tolerance:.0%}): "
+          f"{len(regressions)} regressions, {len(violations)} violations, "
+          f"{len(missing)} missing, {len(improved)} improved, {len(new)} new")
+    if failed:
+        sys.exit(1)
+    print("perf gate: OK")
+
+
+if __name__ == "__main__":
+    main()

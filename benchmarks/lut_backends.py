@@ -21,6 +21,9 @@ import numpy as np
 
 DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "..", "experiments",
                            "BENCH_lut_backends.json")
+# every BENCH_*.json carries a schema_version so the perf-gate
+# (benchmarks/check_regression.py) can evolve its metric extraction safely
+SCHEMA_VERSION = 1
 # the one definition of "smoke-sized" (CI job and run.py --fast share it)
 FAST_KW = dict(batches=(64,), reps=3)
 
@@ -48,7 +51,7 @@ def sweep(tasks=("mnist", "jsc", "nid"), batches=(256, 1024),
     from repro.configs import paper_tasks
     from repro.core import assemble
 
-    results = {"tasks": {}, "backends": {
+    results = {"schema_version": SCHEMA_VERSION, "tasks": {}, "backends": {
         name: vars(backends.get(name).capabilities())
         for name in backends.available()}}
     for task in tasks:

@@ -9,7 +9,18 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import sys
 import time
+
+# the throughput sweep's mesh axis needs multiple host devices, which must
+# be requested before jax initializes — hence before the import below.
+# The sweep runs by default (no --only) and for any --only spelling that
+# names it (`--only throughput`, `--only=throughput`).
+_argv = sys.argv[1:]
+if (not any(a.startswith("--only") for a in _argv)
+        or any("throughput" in a for a in _argv)):
+    from benchmarks.lut_throughput import ensure_host_devices
+    ensure_host_devices()
 
 import jax
 import jax.numpy as jnp
@@ -77,6 +88,20 @@ def bench_backends(rows: list, fast: bool) -> None:
                  f"{cell['speedup_vs_take'].get('fused')}x"))
 
 
+def bench_throughput(rows: list, fast: bool) -> None:
+    """Serving-throughput sweep (writes BENCH_lut_throughput.json)."""
+    from benchmarks import lut_throughput
+    t0 = time.time()
+    res = lut_throughput.sweep(
+        **(lut_throughput.FAST_KW if fast else {}))
+    lut_throughput.write_results(res)
+    big = [c for c in res["engine"] if c["block"] >= 256]
+    best = max(big, key=lambda c: c["async_speedup"]) if big else None
+    derived = (f"async speedup {best['async_speedup']}x "
+               f"({best['backend']}@{best['block']})" if best else "")
+    rows.append(("lut_throughput_sweep", (time.time() - t0) * 1e6, derived))
+
+
 def bench_tables(rows: list, fast: bool) -> dict:
     from benchmarks import paper_tables
 
@@ -116,7 +141,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--only", default=None,
-                    choices=["kernels", "backends", "tables", "roofline"])
+                    choices=["kernels", "backends", "throughput", "tables",
+                             "roofline"])
     args = ap.parse_args()
 
     rows: list = []
@@ -125,6 +151,8 @@ def main() -> None:
         bench_kernels(rows)
     if args.only in (None, "backends"):
         bench_backends(rows, args.fast)
+    if args.only in (None, "throughput"):
+        bench_throughput(rows, args.fast)
     if args.only in (None, "tables"):
         outputs.update(bench_tables(rows, args.fast))
     if args.only in (None, "roofline"):

@@ -20,6 +20,7 @@ from typing import TYPE_CHECKING
 
 from repro.backends.base import (BackendCapabilities, ExecutionPlan,
                                  LookupBackend)
+from repro.backends.placement import Placement, place
 from repro.backends.registry import (available, default_backend, get,
                                      register, resolve, unregister)
 
@@ -32,8 +33,8 @@ if TYPE_CHECKING:  # pragma: no cover
     from repro.core.folding import FoldedNetwork
 
 __all__ = [
-    "BackendCapabilities", "ExecutionPlan", "LookupBackend",
-    "available", "default_backend", "get", "register", "resolve",
+    "BackendCapabilities", "ExecutionPlan", "LookupBackend", "Placement",
+    "available", "default_backend", "get", "place", "register", "resolve",
     "unregister", "make_plan", "plan_for",
 ]
 

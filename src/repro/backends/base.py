@@ -41,6 +41,10 @@ class BackendCapabilities:
     fused: bool             # whole cascade in a single kernel launch?
     needs_pallas: bool      # lowers through a Pallas kernel?
     description: str = ""
+    # can the units axis be sharded across a mesh (layer-by-layer execution
+    # with all-gathers at layer boundaries)?  Batch sharding needs no
+    # capability — every backend's rows are independent (placement.py).
+    unit_shardable: bool = False
 
 
 @dataclasses.dataclass
@@ -70,6 +74,10 @@ class LookupBackend(abc.ABC):
     # False when planning is a trivial re-extraction of the base arrays
     # (persisting would only duplicate the tables).
     persist_plan: bool = True
+    # Unit-sharded placement (placement.py strategy "units") needs the
+    # backend to execute layer-by-layer; backends that support it override
+    # this and implement ``unit_sharded_runner``.
+    supports_unit_sharding: bool = False
 
     @abc.abstractmethod
     def capabilities(self) -> BackendCapabilities:
@@ -88,6 +96,15 @@ class LookupBackend(abc.ABC):
         """Execute the cascade: input codes [batch, in_features] int32 ->
         final-layer codes [batch, units_last] int32.  Must be jit-traceable
         (plan buffers are closed-over constants)."""
+
+    def unit_sharded_runner(self, plan: ExecutionPlan, mesh, axes):
+        """Unit-sharded execution over mesh ``axes`` (placement.py).
+
+        Returns ``run(codes) -> codes`` over global arrays, or raises for
+        backends without per-layer boundaries (``supports_unit_sharding``
+        is the static capability; placement checks it before calling)."""
+        raise NotImplementedError(
+            f"{self.name}: unit-sharded execution not supported")
 
 
 def require_mappings(net: "FoldedNetwork", who: str) -> None:

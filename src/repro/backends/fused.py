@@ -42,6 +42,9 @@ class FusedCascadeBackend(LookupBackend):
     plan_format = "fused-packed-v1"
 
     def capabilities(self) -> BackendCapabilities:
+        # unit_shardable stays False: the fused kernel's whole point is
+        # that layer boundaries never materialize, so there is nowhere to
+        # all-gather; mesh execution uses batch sharding (placement.py).
         return BackendCapabilities(
             name=self.name, fused=True, needs_pallas=True,
             description="single-pallas_call whole-network cascade; "

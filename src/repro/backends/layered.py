@@ -11,6 +11,7 @@ from __future__ import annotations
 
 from typing import Any, Dict
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -24,6 +25,7 @@ class LayeredBackend(LookupBackend):
 
     plan_format = "layered-v1"
     persist_plan = False  # plan is a verbatim copy of the base arrays
+    supports_unit_sharding = True  # per-layer boundaries to all-gather at
 
     def __init__(self, impl: str):
         self._impl = impl
@@ -37,7 +39,7 @@ class LayeredBackend(LookupBackend):
         }[self._impl]
         return BackendCapabilities(name=self.name, fused=False,
                                    needs_pallas=self._impl == "pallas",
-                                   description=desc)
+                                   description=desc, unit_shardable=True)
 
     def plan(self, net) -> ExecutionPlan:
         require_mappings(net, f"{self.name}.plan")
@@ -68,6 +70,58 @@ class LayeredBackend(LookupBackend):
             codes = ops.lut_lookup(jnp.asarray(plan.buffers[f"table_{l}"]),
                                    addr, impl=plan.meta["impl"])
         return codes
+
+    def unit_sharded_runner(self, plan: ExecutionPlan, mesh, axes):
+        """Units-sharded cascade: each device owns a row-slice of every
+        layer's table/mapping, computes its slice of the layer's codes,
+        and the full code vector is re-assembled by ``all_gather`` at the
+        layer boundary (the next layer's mapping may read any unit).
+
+        The final layer skips the in-kernel gather: ``shard_map``
+        concatenates the local slices via ``out_specs=P(None, axes)``,
+        which sidesteps replication checks on the output.
+        """
+        from jax.sharding import PartitionSpec as P
+
+        from repro.backends.placement import shard_map, unit_shard_buffers
+        from repro.core import quant
+        from repro.kernels import ops
+
+        layers = plan.meta["layers"]
+        impl = plan.meta["impl"]
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        bufs = unit_shard_buffers(
+            layers, lambda l: plan.buffers[f"table_{l}"],
+            lambda l: plan.buffers[f"mapping_{l}"], n)
+        meta = tuple((lm["units"], lm["fan_in"], lm["bits"])
+                     for lm in layers)
+        ax = tuple(axes)
+
+        def local(codes, *shards):
+            for li, (units, fan_in, bits) in enumerate(meta):
+                table, mapping = shards[2 * li], shards[2 * li + 1]
+                ci = codes[:, mapping]               # [B, up, F] local gather
+                addr = quant.pack_address(ci, bits, fan_in)
+                out = ops.lut_lookup(table, addr, impl=impl)   # [B, up]
+                if li == len(meta) - 1:
+                    return out                       # assembled by out_specs
+                codes = jax.lax.all_gather(
+                    out, ax, axis=1, tiled=True)[:, :units]
+            return codes  # pragma: no cover - loop always returns
+
+        sharded = shard_map(
+            local, mesh=mesh,
+            in_specs=(P(),) + (P(ax, None),) * len(bufs),
+            out_specs=P(None, ax))
+        n_out = meta[-1][0]
+        consts = tuple(jnp.asarray(b) for b in bufs)
+
+        def run(codes):
+            return sharded(codes, *consts)[:, :n_out]
+
+        return run
 
 
 register("take", lambda: LayeredBackend("take"))

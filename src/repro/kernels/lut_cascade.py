@@ -78,6 +78,11 @@ def lut_cascade_pallas(codes: Array, amat: Array, tables: Array, *,
     layers: static ``(prev, units, entries, off)`` per layer.
     """
     batch = codes.shape[0]
+    # never tile wider than the batch itself (rounded up to a power of two,
+    # floored at the sublane count): under batch-sharded placement each
+    # device sees batch/n rows, and padding those to a full 256-row tile
+    # would waste most of the kernel's work
+    block_b = min(block_b, max(8, 1 << (batch - 1).bit_length()))
     # the one-hot tile is the VMEM high-water mark; shrink block_b to fit
     worst = max(u * t for _, u, t, _ in layers)
     block_b = fit_block_b(block_b, worst * 4)

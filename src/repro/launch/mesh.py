@@ -40,6 +40,18 @@ def make_host_mesh() -> Mesh:
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
+def make_serving_mesh(devices: int = 0) -> Mesh:
+    """1-D ``("data",)`` mesh over the first ``devices`` host devices (all
+    of them when 0) — LUT serving placement (DESIGN.md §3) is pure batch
+    data-parallelism, so the mesh is a flat DP axis."""
+    import numpy as np
+    devs = jax.devices()
+    n = devices or len(devs)
+    if n > len(devs):
+        raise ValueError(f"asked for {n} devices, have {len(devs)}")
+    return Mesh(np.asarray(devs[:n]), ("data",))
+
+
 def mesh_devices(mesh: Mesh) -> int:
     n = 1
     for a in mesh.axis_names:

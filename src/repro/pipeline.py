@@ -128,23 +128,33 @@ class PlannedExecutor:
     backend's :class:`~repro.backends.ExecutionPlan` plus ONE jitted
     cascade (quantize -> backend.run -> dequantize) compiled for it.
     Calling it returns logits; ``predict_codes`` the raw integer codes.
+
+    With a :class:`~repro.backends.Placement` the cascade runs sharded
+    over the placement's mesh (batch- or unit-sharded, DESIGN.md §3);
+    codes stay bit-identical to unplaced execution.
     """
 
     def __init__(self, net: "CompiledLUTNetwork",
                  backend: backends.LookupBackend,
-                 plan: backends.ExecutionPlan):
+                 plan: backends.ExecutionPlan,
+                 placement: Optional[backends.Placement] = None):
         self.backend = backend.name
         self.plan = plan
+        self.placement = placement
         self.capabilities = backend.capabilities()
         cfg = net.cfg
         in_q = {"log_scale": jnp.asarray(net.in_log_scale)}
         out_q = {"log_scale": jnp.asarray(net.out_log_scale)}
         in_spec = cfg.input_quant_spec()
         out_spec = cfg.quant_spec(len(cfg.layers) - 1)
+        if placement is None:
+            cascade = lambda codes: backend.run(plan, codes)  # noqa: E731
+        else:
+            cascade = backends.place(backend, plan, placement)
 
         def both(x):
             codes = quant.quantize_codes(in_q, in_spec, x)
-            codes = backend.run(plan, codes)
+            codes = cascade(codes)
             return codes, quant.dequantize_codes(out_q, out_spec, codes)
 
         self._both = jax.jit(both)
@@ -189,7 +199,8 @@ class CompiledLUTNetwork:
         self.backend = backend or default_backend()
         self._folded: Optional[FoldedNetwork] = None
         self._plans: Dict[str, backends.ExecutionPlan] = {}
-        self._executors: Dict[str, PlannedExecutor] = {}
+        # keyed by (backend name, placement cache_key or None)
+        self._executors: Dict[tuple, PlannedExecutor] = {}
 
     # -- construction --------------------------------------------------------
     @classmethod
@@ -216,14 +227,31 @@ class CompiledLUTNetwork:
                           for m in self.mappings])
         return self._folded
 
-    def compile_backend(self, name: Optional[str] = None) -> PlannedExecutor:
+    def compile_backend(self, name: Optional[str] = None, *,
+                        mesh=None,
+                        placement: Optional[backends.Placement] = None,
+                        ) -> PlannedExecutor:
         """Plan the named lookup backend (default: ``self.backend``) over
         this network and return the reusable jitted executor.
 
-        Planning runs once per backend per artifact; the plan is kept in
-        ``_plans`` and round-trips through :meth:`save`/:meth:`load`."""
+        ``mesh`` (a ``jax.sharding.Mesh``) is sugar for
+        ``placement=Placement(mesh)``: the executor runs batch-sharded
+        over the mesh's data-parallel axes with bit-identical codes, so a
+        loaded ``.npz`` artifact stands up sharded with no code changes.
+        Pass a full :class:`~repro.backends.Placement` to pick the
+        strategy (``units`` for layers that dwarf the batch).
+
+        Planning runs once per backend per artifact and is placement-
+        independent (placement only wraps execution); the plan is kept in
+        ``_plans`` and round-trips through :meth:`save`/:meth:`load`.
+        Executors are cached per (backend, placement)."""
+        if mesh is not None:
+            if placement is not None:
+                raise ValueError("pass either mesh= or placement=, not both")
+            placement = backends.Placement(mesh)
         be = backends.resolve(name or self.backend)
-        if be.name not in self._executors:
+        key = (be.name, None if placement is None else placement.cache_key())
+        if key not in self._executors:
             plan = self._plans.get(be.name)
             if plan is None or plan.meta.get("plan_format") != be.plan_format:
                 # no plan yet, or a restored plan whose buffer layout was
@@ -232,8 +260,9 @@ class CompiledLUTNetwork:
                 # foreign buffers to run()
                 plan = self._plans[be.name] = backends.make_plan(
                     self.folded(), be)
-            self._executors[be.name] = PlannedExecutor(self, be, plan)
-        return self._executors[be.name]
+            self._executors[key] = PlannedExecutor(self, be, plan,
+                                                   placement=placement)
+        return self._executors[key]
 
     def predict_codes(self, x, *, backend: Optional[str] = None) -> Array:
         """[batch, in_features] floats -> final-layer integer codes."""

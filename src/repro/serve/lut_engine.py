@@ -8,18 +8,30 @@ feed-forward row — so the continuous-batching problem reduces to classic
 micro-batching: fixed block shape (one XLA compilation, ever), pad the
 tail, amortize dispatch overhead across the block.
 
+Since PR 3 the engine is **double-buffered**: JAX dispatch is async, so a
+tick *dispatches* block N+1 while block N's device computation is still in
+flight and only *retires* (waits on + scatters) a block once ``depth``
+blocks are outstanding.  Host-side work — padding the next block, fanning
+results back onto requests — overlaps device compute instead of
+serializing with it; nothing blocks until :meth:`drain`.  ``depth=1``
+reproduces the old synchronous tick exactly.  Per-tick wall latency lands
+in ``stats.tick_latencies_us`` (p50/p99 via ``stats.latency_us``).
+
 The cascade itself is a ``CompiledLUTNetwork.compile_backend`` executor —
 any registered lookup backend (take / onehot / pallas / fused, DESIGN.md
-§2) planned once at engine construction — and fully self-contained, so an
-engine can be stood up from a ``.npz`` artifact with no training state
-anywhere in the process.  Artifacts saved with their plans skip planning
-entirely.
+§2), optionally mesh-sharded via ``mesh=`` (DESIGN.md §3) — and fully
+self-contained, so an engine can be stood up from a ``.npz`` artifact with
+no training state anywhere in the process.  ``block``, ``backend``,
+``depth`` and the mesh are fixed at construction (the jitted block
+function is compiled once for that shape); the attributes are read-only
+and raise on assignment — build a new engine to change them.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Deque, List, Optional
+import time
+from typing import Deque, List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -36,29 +48,85 @@ class LUTRequest:
     done: bool = False
 
 
+# per-tick latency history kept for percentile stats; bounded so a
+# long-running serving process doesn't leak one float per tick forever
+LATENCY_WINDOW = 10_000
+
+
 @dataclasses.dataclass
 class LUTEngineStats:
-    ticks: int = 0
+    ticks: int = 0                      # blocks dispatched
     requests: int = 0
     rows_padded: int = 0
+    tick_latencies_us: "collections.deque[float]" = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=LATENCY_WINDOW))
+
+    def latency_us(self, pct: float) -> float:
+        """Percentile (e.g. 50, 99) of per-tick wall latency over the last
+        ``LATENCY_WINDOW`` ticks, in us."""
+        if not self.tick_latencies_us:
+            return 0.0
+        return float(np.percentile(np.asarray(self.tick_latencies_us), pct))
 
 
 class LUTEngine:
-    """``block`` and ``backend`` are fixed at construction: the jitted
-    block function is compiled once for that (shape, backend) and reused
-    for the life of the engine — build a new engine to change either."""
+    """Double-buffered micro-batching engine over one planned backend.
+
+    ``depth`` is the maximum number of blocks in flight on the device:
+    1 = synchronous (each ``tick`` dispatches and immediately retires its
+    block — the pre-PR-3 behavior), 2+ = async double-buffering (``tick``
+    dispatches without waiting; the oldest block is retired only when the
+    pipeline is full or at :meth:`drain`).
+    """
 
     def __init__(self, net: CompiledLUTNetwork, *, block: int = 256,
-                 backend: Optional[str] = None):
+                 backend: Optional[str] = None, mesh=None, depth: int = 1):
+        if depth < 1:
+            raise ValueError(f"depth must be >= 1, got {depth}")
         self.net = net
-        self.block = block
-        self.backend = backend or net.backend
+        self._block = int(block)
+        self._backend = backend or net.backend
+        self._depth = int(depth)
         self.queue: Deque[LUTRequest] = collections.deque()
         self.stats = LUTEngineStats()
         self._next_rid = 0
-        # plan the backend now; mutating self.backend later is a no-op
-        self._executor = net.compile_backend(self.backend)
+        # (requests, codes device array, logits device array), oldest first
+        self._inflight: Deque[Tuple[List[LUTRequest], object, object]] = \
+            collections.deque()
+        self._executor = net.compile_backend(self._backend, mesh=mesh)
         self._fwd = self._executor.codes_and_logits
+
+    # -- fixed-at-construction attributes ------------------------------------
+    # The jitted block function is compiled once for (block, backend, mesh);
+    # silently accepting a new value used to do nothing — now it raises.
+    @property
+    def block(self) -> int:
+        return self._block
+
+    @block.setter
+    def block(self, _value):
+        raise AttributeError(
+            "LUTEngine.block is fixed at construction (the block function "
+            "is jit-compiled for this shape); build a new engine instead")
+
+    @property
+    def backend(self) -> str:
+        return self._backend
+
+    @backend.setter
+    def backend(self, _value):
+        raise AttributeError(
+            "LUTEngine.backend is fixed at construction (the backend is "
+            "planned and jitted once); build a new engine instead")
+
+    @property
+    def depth(self) -> int:
+        return self._depth
+
+    @property
+    def inflight(self) -> int:
+        """Blocks currently dispatched but not yet retired."""
+        return len(self._inflight)
 
     # -- queueing ------------------------------------------------------------
     def submit(self, x: np.ndarray) -> LUTRequest:
@@ -69,33 +137,82 @@ class LUTEngine:
         self.stats.requests += 1
         return req
 
-    def tick(self) -> int:
-        """Drain up to ``block`` queued requests with one jitted cascade.
+    def submit_many(self, xs: np.ndarray) -> List[LUTRequest]:
+        """Enqueue every row of ``xs`` with ONE dtype conversion.
 
-        Returns the number of requests completed this tick."""
-        if not self.queue:
-            return 0
+        Per-row ``submit`` pays a ``np.asarray`` per request — measurably
+        the largest serial cost of bulk workloads (it cannot overlap
+        device compute, unlike the per-tick work).  Handles share row
+        views of the converted matrix."""
+        xs = np.asarray(xs, np.float32)
+        base = self._next_rid
+        reqs = [LUTRequest(rid=base + i, x=row)
+                for i, row in enumerate(xs)]
+        self._next_rid += len(reqs)
+        self.queue.extend(reqs)
+        self.stats.requests += len(reqs)
+        return reqs
+
+    # -- the pump ------------------------------------------------------------
+    def _dispatch(self) -> int:
+        """Pad up to ``block`` queued requests and launch the cascade
+        WITHOUT waiting for the result (JAX dispatch is async)."""
         batch: List[LUTRequest] = []
-        while self.queue and len(batch) < self.block:
+        while self.queue and len(batch) < self._block:
             batch.append(self.queue.popleft())
-        xb = np.zeros((self.block, self.net.cfg.in_features), np.float32)
-        for i, req in enumerate(batch):
-            xb[i] = req.x
-        self.stats.rows_padded += self.block - len(batch)
+        if not batch:
+            return 0
+        xb = np.zeros((self._block, self.net.cfg.in_features), np.float32)
+        # one C-level fill, not a per-row python loop: the dispatch path is
+        # host-side work the async pipeline hides behind device compute
+        xb[:len(batch)] = [req.x for req in batch]
+        self.stats.rows_padded += self._block - len(batch)
         codes, logits = self._fwd(jnp.asarray(xb))
-        codes_np, logits_np = np.asarray(codes), np.asarray(logits)
-        for i, req in enumerate(batch):
-            req.codes = codes_np[i]
-            req.logits = logits_np[i]
-            req.done = True
+        self._inflight.append((batch, codes, logits))
         self.stats.ticks += 1
         return len(batch)
 
+    def _retire(self) -> int:
+        """Wait on the OLDEST in-flight block and fan results out."""
+        batch, codes, logits = self._inflight.popleft()
+        codes_np, logits_np = np.asarray(codes), np.asarray(logits)
+        # list(ndarray) materializes the row views in one C loop
+        for req, c, lg in zip(batch, list(codes_np), list(logits_np)):
+            req.codes = c
+            req.logits = lg
+            req.done = True
+        return len(batch)
+
+    def tick(self) -> int:
+        """Dispatch one block; retire the oldest once ``depth`` blocks are
+        in flight.  Returns the number of requests completed this tick
+        (with ``depth > 1`` completion trails dispatch — drain() retires
+        the stragglers)."""
+        t0 = time.perf_counter()
+        dispatched = self._dispatch() if self.queue else 0
+        completed = 0
+        while len(self._inflight) > self._depth - 1:
+            completed += self._retire()
+        if dispatched or completed:
+            self.stats.tick_latencies_us.append(
+                (time.perf_counter() - t0) * 1e6)
+        return completed
+
+    def drain(self) -> int:
+        """Retire every in-flight block (the only place the engine blocks
+        on the device unconditionally)."""
+        completed = 0
+        while self._inflight:
+            completed += self._retire()
+        return completed
+
     def run(self, xs: np.ndarray) -> np.ndarray:
-        """Convenience: submit every row of ``xs`` and tick until drained.
+        """Convenience: submit every row of ``xs``, tick until the queue
+        is empty, drain the pipeline.
 
         Returns logits [len(xs), n_out] in submission order."""
-        reqs = [self.submit(x) for x in np.asarray(xs)]
+        reqs = self.submit_many(xs)
         while self.queue:
             self.tick()
+        self.drain()
         return np.stack([r.logits for r in reqs])

@@ -237,3 +237,63 @@ def test_lut_engine_incremental_submit():
     for i, r in enumerate(reqs):
         np.testing.assert_array_equal(r.codes, ref[i])
     assert eng.tick() == 0  # empty queue is a no-op
+
+
+def test_lut_engine_async_double_buffered_matches_sync():
+    """depth=2 overlaps dispatch with device compute; results, ordering
+    and padding stats are identical to the synchronous engine."""
+    from repro.serve.lut_engine import LUTEngine
+    cfg = paper_tasks.reduced("nid")
+    params = assemble.init(jax.random.PRNGKey(15), cfg)
+    compiled = pipeline.compile_network(params, cfg)
+    x = np.asarray(_rand_inputs(cfg, 100, seed=16))
+
+    sync = LUTEngine(compiled, block=32, depth=1)
+    async_ = LUTEngine(compiled, block=32, depth=2)
+    np.testing.assert_allclose(async_.run(x), sync.run(x),
+                               rtol=1e-6, atol=1e-6)
+    assert async_.stats.ticks == sync.stats.ticks == 4
+    assert async_.stats.rows_padded == sync.stats.rows_padded == 28
+    assert async_.inflight == 0          # drained
+    assert len(async_.stats.tick_latencies_us) >= 4
+    assert async_.stats.latency_us(99) >= async_.stats.latency_us(50) > 0
+
+
+def test_lut_engine_async_completion_trails_dispatch():
+    """With depth=2 a tick dispatches without waiting: the first block's
+    requests are not done until a later tick (or drain) retires it."""
+    from repro.serve.lut_engine import LUTEngine
+    cfg = paper_tasks.reduced("jsc")
+    params = assemble.init(jax.random.PRNGKey(17), cfg)
+    compiled = pipeline.compile_network(params, cfg)
+    eng = LUTEngine(compiled, block=4, depth=2)
+    x = np.asarray(_rand_inputs(cfg, 12, seed=18))
+    reqs = [eng.submit(row) for row in x]
+
+    assert eng.tick() == 0               # block 0 dispatched, in flight
+    assert eng.inflight == 1 and not reqs[0].done
+    assert eng.tick() == 4               # block 1 dispatched, block 0 retired
+    assert reqs[0].done and not reqs[4].done
+    assert eng.tick() == 4               # block 2 dispatched, block 1 retired
+    assert eng.drain() == 4              # the only unconditional wait
+    assert all(r.done for r in reqs)
+    ref = np.asarray(compiled.predict_codes(jnp.asarray(x)))
+    for i, r in enumerate(reqs):
+        np.testing.assert_array_equal(r.codes, ref[i])
+
+
+def test_lut_engine_block_and_backend_are_read_only():
+    """The documented footgun — mutating engine.backend/engine.block after
+    construction silently did nothing — now raises instead."""
+    from repro.serve.lut_engine import LUTEngine
+    cfg = paper_tasks.reduced("nid")
+    params = assemble.init(jax.random.PRNGKey(19), cfg)
+    compiled = pipeline.compile_network(params, cfg)
+    eng = LUTEngine(compiled, block=16)
+    assert eng.block == 16 and eng.backend == compiled.backend
+    with pytest.raises(AttributeError, match="fixed at construction"):
+        eng.block = 64
+    with pytest.raises(AttributeError, match="fixed at construction"):
+        eng.backend = "fused"
+    with pytest.raises(ValueError, match="depth"):
+        LUTEngine(compiled, depth=0)
