@@ -1,0 +1,138 @@
+"""Assembly-search benchmark: the Pareto frontier per task as JSON.
+
+Runs ``repro.search`` (``Toolflow.search``) over registered tasks and
+writes ``experiments/BENCH_assembly_search.json`` — per task the ranked
+frontier (accuracy, calibrated LUT count, calibrated area-delay product),
+the best accuracy, and search bookkeeping (candidates, rejections, rung
+trajectories, wall time).  Every frontier artifact is additionally
+round-tripped through save/load and checked bit-identical across ALL
+registered lookup backends; any mismatch is recorded and fails the CLI.
+
+``--fast`` is the CI ``accuracy-gate`` smoke: two reduced tasks on the
+smoke budget.  ``--task NAME`` runs one task on the full default budget
+(the nightly workflow's frontier drift probe).
+
+    PYTHONPATH=src python -m benchmarks.assembly_search [--fast]
+        [--task NAME] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                           "BENCH_assembly_search.json")
+# every BENCH_*.json carries a schema_version so the regression gate
+# (benchmarks/check_regression.py) can evolve its metric extraction safely
+SCHEMA_VERSION = 1
+# the one definition of "smoke-sized" (CI accuracy-gate and run.py share it)
+FAST_TASKS = ("nid_reduced", "jsc_reduced")
+
+
+def write_results(results: dict, out: str = DEFAULT_OUT) -> str:
+    out = os.path.abspath(out)
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(results, f, indent=2)
+        f.write("\n")
+    return out
+
+
+def _artifact_contract(point, batch: int = 64, seed: int = 0) -> dict:
+    """Save/load round-trip + cross-backend bit-identity of one frontier
+    artifact.  Returns {backend: bool}; the gate treats False as a hard
+    violation (same contract as the backend sweep)."""
+    import jax
+
+    from repro import backends
+    from repro.pipeline import CompiledLUTNetwork
+
+    x = np.asarray(jax.random.uniform(
+        jax.random.PRNGKey(seed), (batch, point.cfg.in_features),
+        minval=-1.0, maxval=1.0))
+    ref = np.asarray(point.compiled.predict_codes(x, backend="take"))
+    with tempfile.TemporaryDirectory() as td:
+        path = point.compiled.save(os.path.join(td, "artifact.npz"))
+        loaded = CompiledLUTNetwork.load(path)
+        return {name: bool(np.array_equal(
+            np.asarray(loaded.predict_codes(x, backend=name)), ref))
+            for name in backends.available()}
+
+
+def sweep(tasks=FAST_TASKS, budget=None, *, smoke: bool = True) -> dict:
+    from repro.pipeline import Toolflow
+    from repro.search import SearchBudget
+
+    budget = budget or (SearchBudget.smoke() if smoke else SearchBudget())
+    results = {"schema_version": SCHEMA_VERSION,
+               "budget": {"rungs": list(budget.rungs),
+                          "n_candidates": budget.n_candidates,
+                          "promote": budget.promote,
+                          "min_frontier": budget.min_frontier,
+                          "retrain_steps": budget.retrain_steps},
+               "tasks": {}}
+    for task in tasks:
+        t0 = time.time()
+        res = Toolflow.search(task, budget)
+        frontier = res.summary()
+        bit = {p["name"]: _artifact_contract(pt)
+               for p, pt in zip(frontier, res.frontier)}
+        results["tasks"][task] = {
+            "frontier": frontier,
+            "best_accuracy": max((p["accuracy"] for p in frontier),
+                                 default=0.0),
+            "frontier_points": len(frontier),
+            "bit_identical": bit,
+            "n_candidates": len(res.evaluated),
+            "n_rejected": len(res.rejected),
+            "evaluated": res.evaluated,
+            "seconds": round(time.time() - t0, 1),
+        }
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smoke budget on the two small reduced tasks "
+                         "(the CI accuracy-gate job)")
+    ap.add_argument("--task", default=None,
+                    help="run ONE task on the full default budget "
+                         "(nightly frontier probe)")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args()
+
+    if args.task:
+        results = sweep(tasks=(args.task,), smoke=False)
+    elif args.fast:
+        results = sweep()
+    else:
+        results = sweep(tasks=("nid_reduced", "jsc_reduced",
+                               "mnist_reduced"), smoke=False)
+    out = write_results(results, args.out)
+
+    print("task,point,accuracy,luts,adp,bit_identical")
+    bad = []
+    min_frontier = results["budget"]["min_frontier"]
+    for task, t in results["tasks"].items():
+        for p in t["frontier"]:
+            ok = all(t["bit_identical"][p["name"]].values())
+            print(f"{task},{p['name']},{p['accuracy']},{p['luts']},"
+                  f"{p['adp']},{ok}")
+            if not ok:
+                bad.append((task, p["name"]))
+        if t["frontier_points"] < min_frontier:
+            bad.append((task, f"frontier has {t['frontier_points']} < "
+                              f"{min_frontier} points"))
+    if bad:
+        raise SystemExit(f"assembly-search contract violations: {bad}")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

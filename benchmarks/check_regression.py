@@ -1,38 +1,52 @@
-"""Perf-regression gate over the committed ``BENCH_*.json`` sweeps.
+"""Regression gates over the committed ``BENCH_*.json`` sweeps, by suite.
 
-Flattens the throughput (``BENCH_lut_throughput.json``) and backend
-(``BENCH_lut_backends.json``) sweeps into named scalar metrics, compares
-them against the committed ``experiments/BENCH_baseline.json`` with a
-relative tolerance (default +-30%), and exits non-zero on regression —
-the CI ``perf-gate`` job runs this on every PR after regenerating the
-sweeps with ``--fast``.
+Generalized (PR 4) from a throughput-only gate to *named suites*, each with
+its own metric extraction, baseline file, tolerance, and comparison mode:
 
-  * higher-is-better metrics (rows/s, speedups) regress when they fall
-    below ``baseline * (1 - tol)``; lower-is-better (us timings) when they
-    rise above ``baseline * (1 + tol)``.
-  * boolean invariants (``bit_identical``) are hard failures regardless of
-    tolerance.
+  * ``throughput`` — engine/mesh/backend timings from
+    ``BENCH_lut_throughput.json`` + ``BENCH_lut_backends.json`` vs
+    ``experiments/BENCH_baseline.json``; RELATIVE tolerance (default ±30%).
+    The CI ``perf-gate`` job runs this on every PR.
+  * ``accuracy`` — per-task best frontier accuracy from
+    ``BENCH_assembly_search.json`` vs ``experiments/ACC_baseline.json``;
+    ABSOLUTE accuracy-drop tolerance (default 0.03).  The CI
+    ``accuracy-gate`` job runs this on every PR — accuracy can no longer
+    rot silently while perf stays green.
+
+Shared gate semantics (both suites):
+
+  * higher-is-better metrics regress when they fall below the allowance;
+    lower-is-better when they rise above it.
+  * boolean invariants (bit-identity, minimum frontier size) are hard
+    failures regardless of tolerance.
   * a metric present in the baseline but missing from the current sweeps
-    is a failure (a silently shrunk sweep must not pass the gate); new
+    is a failure — a vanished task/cell must not pass the gate; new
     metrics are reported and ignored until the baseline is refreshed.
 
-``--refresh`` rewrites the baseline from the current sweep outputs — the
-CI workflow does this on pushes to main so the baseline tracks the tip of
-the default branch (and the runner generation CI actually uses).
+``--refresh`` rewrites the selected suite's baseline from the current sweep
+outputs — the CI workflows do this on pushes to main so each baseline
+tracks the tip of the default branch (and the runner generation CI
+actually uses).
 
-    PYTHONPATH=src python -m benchmarks.check_regression [--refresh]
-        [--tolerance 0.3] [--baseline PATH]
+    PYTHONPATH=src python -m benchmarks.check_regression
+        [--suite throughput|accuracy|all] [--refresh]
+        [--tolerance T] [--baseline PATH]
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import sys
+from typing import Callable, Dict, List, Tuple
 
 EXPERIMENTS = os.path.join(os.path.dirname(__file__), "..", "experiments")
 BASELINE = os.path.join(EXPERIMENTS, "BENCH_baseline.json")
+ACC_BASELINE = os.path.join(EXPERIMENTS, "ACC_baseline.json")
 SCHEMA_VERSION = 1
+
+Metrics = Dict[str, Tuple[float, bool]]  # name -> (value, higher_is_better)
 
 
 def _load(path: str) -> dict:
@@ -40,14 +54,19 @@ def _load(path: str) -> dict:
         return json.load(f)
 
 
-def extract_metrics(experiments: str = EXPERIMENTS):
-    """Flatten the sweep JSONs -> (metrics, invariant_failures).
+# ---------------------------------------------------------------------------
+# Per-suite metric extraction
+# ---------------------------------------------------------------------------
+
+def extract_throughput(experiments: str = EXPERIMENTS
+                       ) -> Tuple[Metrics, List[str]]:
+    """Flatten the perf sweep JSONs -> (metrics, invariant_failures).
 
     Raises FileNotFoundError when a sweep output is missing — the gate
     must not silently pass because a benchmark did not run.
     """
-    metrics: dict = {}
-    violations: list = []
+    metrics: Metrics = {}
+    violations: List[str] = []
 
     tp = _load(os.path.join(experiments, "BENCH_lut_throughput.json"))
     for c in tp["engine"]:
@@ -81,8 +100,66 @@ def extract_metrics(experiments: str = EXPERIMENTS):
     return metrics, violations
 
 
-def compare(baseline: dict, metrics, tolerance: float):
-    """Returns (regressions, missing, improved) vs ``baseline['metrics']``."""
+def extract_accuracy(experiments: str = EXPERIMENTS
+                     ) -> Tuple[Metrics, List[str]]:
+    """Flatten the assembly-search frontier -> (metrics, violations).
+
+    One headline metric per task (best frontier accuracy, absolute
+    tolerance); frontier size < 3 and any save/load-round-trip backend
+    bit-mismatch are hard violations.  A task that vanishes from the sweep
+    hits the baseline's missing-metric failure path.
+    """
+    metrics: Metrics = {}
+    violations: List[str] = []
+    doc = _load(os.path.join(experiments, "BENCH_assembly_search.json"))
+    # the sweep records the budget it ran under; the gate enforces the
+    # frontier floor THAT budget promised rather than hardcoding one
+    min_frontier = doc.get("budget", {}).get("min_frontier", 3)
+    for task, t in doc["tasks"].items():
+        metrics[f"accuracy/{task}/best_frontier_acc"] = (
+            t["best_accuracy"], True)
+        if t["frontier_points"] < min_frontier:
+            violations.append(
+                f"accuracy/{task}: frontier has {t['frontier_points']} < "
+                f"{min_frontier} points")
+        for point, per_backend in t.get("bit_identical", {}).items():
+            for backend, ok in per_backend.items():
+                if not ok:
+                    violations.append(
+                        f"accuracy/{task}/{point}: {backend} not "
+                        "bit-identical after save/load")
+    return metrics, violations
+
+
+# ---------------------------------------------------------------------------
+# Suites
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Suite:
+    name: str
+    extract: Callable[..., Tuple[Metrics, List[str]]]
+    baseline: str
+    tolerance: float
+    mode: str  # "relative" | "absolute"
+
+
+SUITES: Dict[str, Suite] = {
+    "throughput": Suite("throughput", extract_throughput, BASELINE,
+                        tolerance=0.30, mode="relative"),
+    "accuracy": Suite("accuracy", extract_accuracy, ACC_BASELINE,
+                      tolerance=0.03, mode="absolute"),
+}
+
+
+def compare(baseline: dict, metrics: Metrics, tolerance: float,
+            mode: str = "relative"):
+    """Returns (regressions, missing, improved) vs ``baseline['metrics']``.
+
+    ``relative`` mode flags drifts beyond ``ref * (1 ± tol)``; ``absolute``
+    mode beyond ``ref ± tol`` (the accuracy suite: a 3-point drop is a
+    3-point drop regardless of where the baseline sits).
+    """
     regressions, missing, improved = [], [], []
     base = baseline["metrics"]
     for name, entry in base.items():
@@ -91,64 +168,66 @@ def compare(baseline: dict, metrics, tolerance: float):
             continue
         ref = entry["value"]
         cur, hib = metrics[name]
-        if ref == 0:
-            continue
-        ratio = cur / ref
-        if hib and ratio < 1.0 - tolerance:
-            regressions.append((name, ref, cur, ratio))
-        elif not hib and ratio > 1.0 + tolerance:
-            regressions.append((name, ref, cur, ratio))
-        elif (ratio > 1.0 + tolerance) if hib else (ratio < 1.0 - tolerance):
-            improved.append((name, ref, cur, ratio))
+        if mode == "relative":
+            if ref == 0:
+                continue
+            lo, hi = ref * (1.0 - tolerance), ref * (1.0 + tolerance)
+        else:
+            lo, hi = ref - tolerance, ref + tolerance
+        if hib and cur < lo:
+            regressions.append((name, ref, cur))
+        elif not hib and cur > hi:
+            regressions.append((name, ref, cur))
+        elif (cur > hi) if hib else (cur < lo):
+            improved.append((name, ref, cur))
     return regressions, missing, improved
 
 
-def refresh(path: str = BASELINE) -> str:
-    metrics, violations = extract_metrics()
+def refresh(suite: Suite, path: str = None) -> str:
+    metrics, violations = suite.extract()
     if violations:
         raise SystemExit(
             "refusing to bake invariant violations into the baseline:\n  "
             + "\n  ".join(violations))
     doc = {
         "schema_version": SCHEMA_VERSION,
+        "suite": suite.name,
         "metrics": {name: {"value": v, "higher_is_better": hib}
                     for name, (v, hib) in sorted(metrics.items())},
     }
-    path = os.path.abspath(path)
+    path = os.path.abspath(path or suite.baseline)
     with open(path, "w") as f:
         json.dump(doc, f, indent=2)
         f.write("\n")
     return path
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--refresh", action="store_true",
-                    help="rewrite the baseline from the current sweeps")
-    ap.add_argument("--tolerance", type=float, default=0.30,
-                    help="relative tolerance before a drift is a regression")
-    ap.add_argument("--baseline", default=BASELINE)
-    args = ap.parse_args()
-
-    if args.refresh:
-        print(f"baseline refreshed: {refresh(args.baseline)}")
-        return
-
-    if not os.path.exists(args.baseline):
+def run_suite(suite: Suite, tolerance: float = None,
+              baseline_path: str = None) -> bool:
+    """Gate one suite; prints the report, returns True when it failed."""
+    tolerance = suite.tolerance if tolerance is None else tolerance
+    baseline_path = baseline_path or suite.baseline
+    if not os.path.exists(baseline_path):
         raise SystemExit(
-            f"no baseline at {args.baseline}; run with --refresh after the "
+            f"no baseline at {baseline_path}; run with --refresh after the "
             "sweeps to create one")
-    baseline = _load(args.baseline)
+    baseline = _load(baseline_path)
     if baseline.get("schema_version") != SCHEMA_VERSION:
         raise SystemExit(
             f"baseline schema {baseline.get('schema_version')} != expected "
             f"{SCHEMA_VERSION}; refresh the baseline on main")
+    if baseline.get("suite", suite.name) != suite.name:
+        raise SystemExit(
+            f"{baseline_path} holds suite {baseline.get('suite')!r}, not "
+            f"{suite.name!r}")
 
-    metrics, violations = extract_metrics()
-    regressions, missing, improved = compare(baseline, metrics,
-                                             args.tolerance)
-    for name, ref, cur, ratio in improved:
-        print(f"IMPROVED   {name}: {ref:g} -> {cur:g} ({ratio:.2f}x)")
+    metrics, violations = suite.extract()
+    regressions, missing, improved = compare(baseline, metrics, tolerance,
+                                             suite.mode)
+    tol_txt = (f"+-{tolerance:.0%}" if suite.mode == "relative"
+               else f"+-{tolerance:g} abs")
+    for name, ref, cur in improved:
+        print(f"IMPROVED   {name}: {ref:g} -> {cur:g}")
     new = sorted(set(metrics) - set(baseline["metrics"]))
     for name in new:
         print(f"NEW        {name}: {metrics[name][0]:g} "
@@ -161,20 +240,57 @@ def main() -> None:
     for name in missing:
         print(f"MISSING    {name}: in baseline but not produced by sweeps")
         failed = True
-    for name, ref, cur, ratio in regressions:
-        direction = "down" if ratio < 1 else "up"
+    for name, ref, cur in regressions:
+        direction = "down" if cur < ref else "up"
         print(f"REGRESSION {name}: {ref:g} -> {cur:g} "
-              f"({ratio:.2f}x, {direction}, tol +-{args.tolerance:.0%})")
+              f"({direction}, tol {tol_txt})")
         failed = True
 
     checked = len(baseline["metrics"]) - len(missing)
-    print(f"checked {checked} metrics vs {os.path.relpath(args.baseline)} "
-          f"(+-{args.tolerance:.0%}): "
+    print(f"[{suite.name}] checked {checked} metrics vs "
+          f"{os.path.relpath(baseline_path)} ({tol_txt}): "
           f"{len(regressions)} regressions, {len(violations)} violations, "
           f"{len(missing)} missing, {len(improved)} improved, {len(new)} new")
+    if not failed:
+        print(f"{suite.name} gate: OK")
+    return failed
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--suite", default="throughput",
+                    choices=[*SUITES, "all"],
+                    help="which regression suite to gate (default: "
+                         "throughput, the pre-PR-4 behavior)")
+    ap.add_argument("--refresh", action="store_true",
+                    help="rewrite the suite's baseline from current sweeps")
+    ap.add_argument("--tolerance", type=float, default=None,
+                    help="override the suite's default tolerance "
+                         "(relative fraction or absolute, per suite mode)")
+    ap.add_argument("--baseline", default=None,
+                    help="override the suite's baseline path "
+                         "(single suite only)")
+    args = ap.parse_args()
+
+    suites = list(SUITES.values()) if args.suite == "all" \
+        else [SUITES[args.suite]]
+    if args.baseline and len(suites) > 1:
+        raise SystemExit("--baseline requires a single --suite")
+    if args.tolerance is not None and len(suites) > 1:
+        # one number cannot serve a relative AND an absolute suite
+        raise SystemExit("--tolerance requires a single --suite")
+
+    if args.refresh:
+        for s in suites:
+            print(f"baseline refreshed: {refresh(s, args.baseline)}")
+        return
+
+    failed = False
+    for s in suites:
+        failed |= run_suite(s, tolerance=args.tolerance,
+                            baseline_path=args.baseline)
     if failed:
         sys.exit(1)
-    print("perf gate: OK")
 
 
 if __name__ == "__main__":

@@ -102,6 +102,23 @@ def bench_throughput(rows: list, fast: bool) -> None:
     rows.append(("lut_throughput_sweep", (time.time() - t0) * 1e6, derived))
 
 
+def bench_search(rows: list, fast: bool) -> None:
+    """Assembly-search sweep (writes BENCH_assembly_search.json)."""
+    from benchmarks import assembly_search
+    t0 = time.time()
+    if fast:
+        res = assembly_search.sweep()  # smoke budget, 2 reduced tasks
+    else:
+        res = assembly_search.sweep(
+            tasks=("nid_reduced", "jsc_reduced", "mnist_reduced"),
+            smoke=False)
+    assembly_search.write_results(res)
+    derived = "; ".join(
+        f"{task}: {t['frontier_points']}pt best_acc={t['best_accuracy']}"
+        for task, t in res["tasks"].items())
+    rows.append(("assembly_search_sweep", (time.time() - t0) * 1e6, derived))
+
+
 def bench_tables(rows: list, fast: bool) -> dict:
     from benchmarks import paper_tables
 
@@ -142,7 +159,7 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--only", default=None,
                     choices=["kernels", "backends", "throughput", "tables",
-                             "roofline"])
+                             "roofline", "search"])
     args = ap.parse_args()
 
     rows: list = []
@@ -153,6 +170,8 @@ def main() -> None:
         bench_backends(rows, args.fast)
     if args.only in (None, "throughput"):
         bench_throughput(rows, args.fast)
+    if args.only in (None, "search"):
+        bench_search(rows, args.fast)
     if args.only in (None, "tables"):
         outputs.update(bench_tables(rows, args.fast))
     if args.only in (None, "roofline"):

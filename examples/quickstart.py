@@ -23,6 +23,7 @@ from repro.configs import paper_tasks
 from repro.core import dontcare
 from repro.data import synthetic
 from repro.pipeline import CompiledLUTNetwork, Toolflow
+from repro.search import SearchBudget
 from repro.serve.lut_engine import LUTEngine
 
 
@@ -94,6 +95,24 @@ def main() -> None:
     with open(out, "w") as f:
         f.write(compiled.to_verilog(pipeline_every=3))
     print(f"   wrote {out}")
+
+    print("== phase 5: hardware-aware assembly search (DESIGN.md §8)")
+    # The paper's real contribution: *choose* the assembly.  Search the
+    # (fan-in, widths, depth, beta, skips) space around the base design and
+    # get back the accuracy/area-delay Pareto frontier, each point a
+    # deployable artifact.  The smoke budget keeps this demo ~2 minutes.
+    result = Toolflow.search("nid_reduced", SearchBudget.smoke())
+    print(f"   {len(result.evaluated)} candidates "
+          f"({len(result.rejected)} rejected by validity rules), "
+          f"{len(result.promoted)} fully trained, "
+          f"{len(result.frontier)}-point frontier in {result.seconds:.0f}s:")
+    print(f"   {'point':>10} {'acc':>6} {'LUTs':>6} {'ADP':>9} (calibrated)")
+    for p in result.frontier:
+        print(f"   {p.name:>10} {p.accuracy:6.3f} {p.luts:6d} {p.adp:9.1f}")
+    best_path = os.path.join(os.path.dirname(__file__),
+                             "nid_frontier_best.npz")
+    result.frontier[0].compiled.save(best_path)
+    print(f"   saved the most accurate frontier artifact to {best_path}")
 
 
 if __name__ == "__main__":

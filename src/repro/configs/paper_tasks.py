@@ -85,3 +85,39 @@ def reduced(task: str) -> AssembleConfig:
                     LayerSpec(4, 2, 2, True), LayerSpec(1, 4, 2, True)),
             subnet_width=16, subnet_depth=2, skip_step=2)
     raise ValueError(task)
+
+
+# ---------------------------------------------------------------------------
+# Task registry — the named entry points the toolflow/search operate on.
+# ---------------------------------------------------------------------------
+
+# name -> (dataset name for data.synthetic.load, config factory).  The four
+# full Table-II designs plus the three reduced surrogates that train in
+# seconds on CPU (benchmark / CI-smoke defaults).
+TASKS = {
+    "mnist": ("mnist", mnist),
+    "jsc_cernbox": ("jsc_cernbox", jsc_cernbox),
+    "jsc_openml": ("jsc_openml", jsc_openml),
+    "nid": ("nid", nid),
+    "mnist_reduced": ("mnist", lambda: reduced("mnist")),
+    "jsc_reduced": ("jsc_openml", lambda: reduced("jsc")),
+    "nid_reduced": ("nid", lambda: reduced("nid")),
+}
+
+
+def task_names():
+    return tuple(TASKS)
+
+
+def task_config(name: str) -> AssembleConfig:
+    """Base architecture of a registered task (``TASKS``)."""
+    if name not in TASKS:
+        raise ValueError(f"unknown task {name!r}; known: {sorted(TASKS)}")
+    return TASKS[name][1]()
+
+
+def task_dataset(name: str) -> str:
+    """Dataset name (for ``data.synthetic.load``) of a registered task."""
+    if name not in TASKS:
+        raise ValueError(f"unknown task {name!r}; known: {sorted(TASKS)}")
+    return TASKS[name][0]

@@ -161,9 +161,12 @@ def random_mapping(rng: Array, cfg: AssembleConfig, l: int) -> Array:
 # forward
 # ---------------------------------------------------------------------------
 
-def _gather_layer_inputs(cfg: AssembleConfig, params_l: dict, l: int,
-                         h: Array, *, dense: bool) -> Array:
-    """[batch, prev] -> [batch, units, fan_in] (or broadcast in dense mode)."""
+def gather_layer_inputs(cfg: AssembleConfig, params_l: dict, l: int,
+                        h: Array, *, dense: bool = False) -> Array:
+    """[batch, prev] -> [batch, units, fan_in] (or broadcast in dense mode).
+
+    Public: the population trainer (``lut_trainer.train_population``) reuses
+    this to mirror :func:`apply` under ``vmap``."""
     spec = cfg.layers[l]
     if spec.assemble:
         return h.reshape(h.shape[0], spec.units, spec.fan_in)
@@ -183,7 +186,7 @@ def apply(params: dict, cfg: AssembleConfig, x: Array, *,
     new_layers = []
     for l, spec in enumerate(cfg.layers):
         pl = params["layers"][l]
-        xi = _gather_layer_inputs(cfg, pl, l, h, dense=dense)
+        xi = gather_layer_inputs(cfg, pl, l, h, dense=dense)
         out, new_sn = subnet.apply_subnet(
             pl["subnet"], cfg.subnet_spec(l, dense=dense), xi,
             activation=cfg.has_activation(l), training=training)
@@ -205,7 +208,7 @@ def apply_codes(params: dict, cfg: AssembleConfig, x: Array) -> Array:
     h = quant.dequantize_codes(params["in_q"], in_spec, codes)
     for l, spec in enumerate(cfg.layers):
         pl = params["layers"][l]
-        xi = _gather_layer_inputs(cfg, pl, l, h, dense=False)
+        xi = gather_layer_inputs(cfg, pl, l, h, dense=False)
         out, _ = subnet.apply_subnet(
             pl["subnet"], cfg.subnet_spec(l), xi,
             activation=cfg.has_activation(l), training=False)

@@ -155,6 +155,48 @@ def report(cfg: AssembleConfig, pipeline_every: int = 3) -> HwReport:
                     latency_ns=latency, area_delay=luts * latency)
 
 
+# ---------------------------------------------------------------------------
+# Calibration against actual RTL emission (assembly-search ADP scoring)
+# ---------------------------------------------------------------------------
+
+def calibration_vs_rtl(net, pipeline_every: int = 3) -> dict:
+    """Cross-check the analytic LUT count against real Verilog emission.
+
+    ``net`` is a ``FoldedNetwork``.  Emits the module with ``core.rtl`` and
+    structurally counts LUT6s from the text (``rtl.count_luts``), returning
+    ``{"analytic_luts", "rtl_luts", "ratio"}`` with
+    ``ratio = rtl / analytic``.  The two legs share only ``plut_per_bit``;
+    any divergence in what is emitted vs what is modeled (layer widths,
+    address packing, ROM output bits) shows up as ``ratio != 1``.  The
+    assembly search multiplies its analytic ADP estimates by this ratio for
+    the final frontier scores (DESIGN.md §8).
+    """
+    from repro.core import rtl
+
+    analytic = network_luts(net.cfg)
+    counted = rtl.count_luts(
+        rtl.emit_verilog(net, pipeline_every=pipeline_every))
+    return {"analytic_luts": analytic, "rtl_luts": counted,
+            "ratio": counted / max(analytic, 1)}
+
+
+def calibrated_report(net, pipeline_every: int = 3,
+                      calibration: dict = None) -> HwReport:
+    """:func:`report` with the LUT count (and hence area-delay product)
+    scaled by the RTL-emission cross-check ratio.
+
+    Pass a precomputed :func:`calibration_vs_rtl` result as
+    ``calibration`` to avoid re-emitting the (potentially multi-MB)
+    Verilog; it must come from the same ``pipeline_every``.
+    """
+    rep = report(net.cfg, pipeline_every=pipeline_every)
+    if calibration is None:
+        calibration = calibration_vs_rtl(net, pipeline_every=pipeline_every)
+    luts = int(round(rep.luts * calibration["ratio"]))
+    return dataclasses.replace(rep, luts=luts,
+                               area_delay=luts * rep.latency_ns)
+
+
 def tree_area(fan_ins: Sequence[int], bits: int, out_bits: int = None) -> int:
     """LUT6 area of ONE assembled tree (Fig. 2 / Fig. 5 analysis).
 

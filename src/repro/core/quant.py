@@ -67,6 +67,22 @@ def fake_quant(params: dict, spec: QuantSpec, x: Array) -> Array:
     return q * s
 
 
+def fake_quant_dynamic(params: dict, qmin: Array, qmax: Array,
+                       x: Array) -> Array:
+    """:func:`fake_quant` with *traced* clip bounds.
+
+    ``qmin``/``qmax`` are arrays (broadcast against ``x``) instead of the
+    static ``QuantSpec`` ints, so bit-widths can vary along a vmapped axis —
+    the assembly search trains a whole population of beta (mixed-precision)
+    candidates in one ``vmap`` this way (``lut_trainer.train_population``).
+    Identical to ``fake_quant`` when ``qmin == spec.qmin`` etc.
+    """
+    s = jnp.exp(params["log_scale"])
+    q = _round_ste(x / s)
+    q = jnp.clip(q, qmin, qmax)
+    return q * s
+
+
 def quantize_codes(params: dict, spec: QuantSpec, x: Array) -> Array:
     """Hard-quantize to integer *codes* in [0, 2^bits) (the LUT address bits).
 

@@ -461,6 +461,27 @@ class Toolflow:
         """All four phases end-to-end."""
         return self.pretrain(data).prune().retrain().compile()
 
+    # -- hardware-aware assembly search --------------------------------------
+    @classmethod
+    def search(cls, task: str, budget=None, *, data=None):
+        """Search the assembly space of a registered task (DESIGN.md §8).
+
+        Explores fan-in / unit-width / depth / beta / skip-placement
+        variants of the task's base design (``configs.paper_tasks.TASKS``)
+        with vmapped short-horizon training and successive halving, then
+        fully trains the Pareto survivors through this driver.  Returns a
+        :class:`repro.search.SearchResult` whose ``frontier`` is the ranked
+        accuracy/area-delay-product Pareto frontier; every point carries a
+        deployable :class:`CompiledLUTNetwork` (``point.compiled``) that
+        save/load-round-trips and predicts bit-identically on every
+        registered backend.
+
+        ``budget`` is a :class:`repro.search.SearchBudget` (default: the
+        standard budget; ``SearchBudget.smoke()`` for CI-sized runs).
+        """
+        from repro.search import run_search
+        return run_search(task, budget=budget, data=data)
+
     # -- evaluation ----------------------------------------------------------
     def accuracy(self, data=None, *, folded: bool = False,
                  max_eval: int = 2048) -> float:

@@ -1,0 +1,24 @@
+"""Hardware-aware assembly search (the paper's method as a subsystem).
+
+Explores (fan-in, unit widths, subnet depth, beta/mixed precision, skip
+placement) candidates for a registered task, trains them in vmapped groups
+with successive halving, and promotes Pareto survivors to full Toolflow
+training — returning a ranked frontier of deployable `CompiledLUTNetwork`
+artifacts scored by calibrated area-delay product.  DESIGN.md §8.
+
+    from repro.pipeline import Toolflow
+    result = Toolflow.search("nid_reduced")        # or any TASKS entry
+    for p in result.frontier:
+        print(p.name, p.accuracy, p.luts, p.adp)
+        p.compiled.save(f"frontier_{p.name}.npz")
+"""
+from repro.search.driver import (FrontierPoint, SearchResult, pareto_frontier,
+                                 pareto_order, run_search)
+from repro.search.space import (Candidate, SearchBudget, generate_candidates,
+                                shape_signature, validate)
+
+__all__ = [
+    "Candidate", "FrontierPoint", "SearchBudget", "SearchResult",
+    "generate_candidates", "pareto_frontier", "pareto_order", "run_search",
+    "shape_signature", "validate",
+]

@@ -1,0 +1,261 @@
+"""Successive-halving assembly search over (accuracy, area-delay product).
+
+The paper's method — not one design point — is *choosing* the assembly
+(fan-in, widths, depth, beta, skips) per task.  This driver reproduces that
+choice as a search:
+
+  1. `generate_candidates` (space.py) enumerates valid variants of the
+     task's base design;
+  2. candidates are grouped by *shape signature* and each group trains as
+     ONE vmapped program (`lut_trainer.train_population`) for the rung's
+     short horizon; validation accuracy is read per candidate;
+  3. survivors are picked by Pareto rank over (rung accuracy, analytic
+     area-delay product from `core.hwcost`), so the cheap-but-weak and the
+     big-but-strong both stay alive — selection on accuracy alone would
+     collapse the frontier;
+  4. after the last rung, candidates are *promoted* in Pareto order to the
+     full Toolflow (dense pre-train -> prune -> sparse retrain -> fold),
+     producing a `CompiledLUTNetwork` per survivor; promotion continues
+     past `budget.promote` (up to `max_promote_extra`) while the frontier
+     has fewer than `budget.min_frontier` points;
+  5. the returned frontier holds the non-dominated promoted points, each
+     scored with the *calibrated* ADP (`hwcost.calibrated_report`: the
+     analytic model cross-checked against actual `rtl.emit_verilog`
+     output).
+
+Scorer contract: rung training uses random mappings and no lasso phase —
+it ranks architectures, it does not produce deployable weights.  Every
+deployable artifact on the frontier comes from the full Toolflow.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core import hwcost
+from repro.core.assemble import AssembleConfig
+from repro.search.space import (Candidate, SearchBudget, generate_candidates,
+                                shape_signature)
+
+
+# ---------------------------------------------------------------------------
+# Pareto helpers (accuracy: higher is better; adp: lower is better)
+# ---------------------------------------------------------------------------
+
+def pareto_frontier(points: Sequence[Tuple[float, float]]) -> List[int]:
+    """Indices of the non-dominated points among (accuracy, adp) pairs.
+
+    A point is dominated when another has accuracy >= AND adp <= with at
+    least one strict; among exact duplicates the first index wins.
+    """
+    order = sorted(range(len(points)),
+                   key=lambda i: (points[i][1], -points[i][0], i))
+    frontier: List[int] = []
+    best_acc = None
+    for i in order:
+        acc, _ = points[i]
+        if best_acc is None or acc > best_acc:
+            frontier.append(i)
+            best_acc = acc
+    return sorted(frontier)
+
+
+def pareto_order(points: Sequence[Tuple[float, float]]) -> List[int]:
+    """All indices ordered by Pareto rank (frontier first), accuracy
+    descending within a rank — the promotion queue."""
+    remaining = list(range(len(points)))
+    out: List[int] = []
+    while remaining:
+        sub = [points[i] for i in remaining]
+        front = pareto_frontier(sub)
+        picked = [remaining[j] for j in front]
+        out.extend(sorted(picked, key=lambda i: -points[i][0]))
+        remaining = [i for i in remaining if i not in set(picked)]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Results
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FrontierPoint:
+    """One promoted, fully-trained, compiled design on the Pareto frontier."""
+    name: str
+    cfg: AssembleConfig
+    accuracy: float          # folded (bit-exact deployable) test accuracy
+    luts: int                # calibrated LUT6 count
+    adp: float               # calibrated area-delay product (LUT x ns)
+    latency_ns: float
+    fmax_mhz: float
+    calibration: float       # rtl-parsed / analytic LUT ratio (1.0 = exact)
+    rung_accuracy: float     # last short-horizon score (diagnostic)
+    compiled: object         # CompiledLUTNetwork (kept untyped: no cycle)
+
+
+@dataclasses.dataclass
+class SearchResult:
+    task: str
+    frontier: List[FrontierPoint]      # ranked by accuracy, descending
+    promoted: List[FrontierPoint]      # everything fully trained
+    evaluated: List[dict]              # every candidate's rung trajectory
+    rejected: List[Tuple[str, str]]    # (name, validity reason)
+    seconds: float
+
+    def summary(self) -> List[dict]:
+        """JSON-ready frontier rows (benchmarks/assembly_search.py)."""
+        return [{
+            "name": p.name, "accuracy": round(p.accuracy, 4),
+            "luts": p.luts, "adp": round(p.adp, 2),
+            "latency_ns": round(p.latency_ns, 3),
+            "fmax_mhz": round(p.fmax_mhz, 1),
+            "calibration": round(p.calibration, 4),
+            "layers": [[l.units, l.fan_in, l.bits, l.assemble]
+                       for l in p.cfg.layers],
+        } for p in self.frontier]
+
+
+# ---------------------------------------------------------------------------
+# The search
+# ---------------------------------------------------------------------------
+
+def _analytic_adp(cfg: AssembleConfig, pipeline_every: int) -> float:
+    return hwcost.report(cfg, pipeline_every=pipeline_every).area_delay
+
+
+def _rung(candidates: List[Candidate], data, budget: SearchBudget,
+          steps: int) -> Dict[str, float]:
+    """Short-horizon accuracy of every candidate, vmapped per group."""
+    from repro.train import lut_trainer
+
+    groups: Dict[tuple, List[Candidate]] = {}
+    for c in candidates:
+        groups.setdefault(shape_signature(c.cfg), []).append(c)
+    accs: Dict[str, float] = {}
+    for members in groups.values():
+        bounds = lut_trainer.stack_bounds([m.cfg for m in members])
+        res = lut_trainer.train_population(
+            members[0].cfg, bounds, data, steps=steps, lr=budget.lr,
+            batch_size=budget.batch_size, seed=budget.seed,
+            max_train=budget.train_rows)
+        acc = lut_trainer.population_accuracy(
+            members[0].cfg, res.params, bounds, data,
+            max_eval=budget.eval_rows)
+        for m, a in zip(members, acc):
+            accs[m.name] = float(a)
+    return accs
+
+
+def _promote(cand: Candidate, data, budget: SearchBudget,
+             rung_acc: float) -> FrontierPoint:
+    """Full Toolflow training + compilation + calibrated hardware scoring."""
+    from repro import pipeline
+    from repro.train import lut_trainer
+
+    flow = pipeline.Toolflow(
+        cand.cfg, pretrain_steps=budget.pretrain_steps,
+        retrain_steps=budget.retrain_steps, lr=budget.lr,
+        batch_size=budget.batch_size, lasso=budget.lasso,
+        seed=budget.seed, max_train=budget.train_rows)
+    compiled = flow.run(data)
+    acc = lut_trainer.accuracy(cand.cfg, flow.params, data, folded=True,
+                               max_eval=budget.eval_rows)
+    # one Verilog emission serves both the ratio and the scaled report
+    cal = hwcost.calibration_vs_rtl(compiled.folded(),
+                                    pipeline_every=budget.pipeline_every)
+    rep = hwcost.calibrated_report(compiled.folded(),
+                                   pipeline_every=budget.pipeline_every,
+                                   calibration=cal)
+    return FrontierPoint(
+        name=cand.name, cfg=cand.cfg, accuracy=acc, luts=rep.luts,
+        adp=rep.area_delay, latency_ns=rep.latency_ns,
+        fmax_mhz=rep.fmax_mhz, calibration=cal["ratio"],
+        rung_accuracy=rung_acc, compiled=compiled)
+
+
+def run_search(task: str, budget: Optional[SearchBudget] = None, *,
+               data=None) -> SearchResult:
+    """Hardware-aware assembly search for one registered task.
+
+    ``task`` names an entry of ``configs.paper_tasks.TASKS``; ``data``
+    overrides the synthetic dataset (tests).  See the module docstring for
+    the schedule; `pipeline.Toolflow.search` is the public entry point.
+    """
+    from repro.configs import paper_tasks
+    from repro.data import synthetic
+
+    budget = budget or SearchBudget()
+    t0 = time.time()
+    base = paper_tasks.task_config(task)
+    if data is None:
+        data = synthetic.load(paper_tasks.task_dataset(task),
+                              n_train=max(budget.train_rows, 2048),
+                              n_test=max(budget.eval_rows * 2, 2048))
+
+    candidates, rejected = generate_candidates(base, budget)
+    evaluated = [{"name": c.name, "adp_estimate":
+                  round(_analytic_adp(c.cfg, budget.pipeline_every), 2),
+                  "rungs": {}} for c in candidates]
+    by_name = {e["name"]: e for e in evaluated}
+
+    alive = list(candidates)
+    accs: Dict[str, float] = {c.name: 0.0 for c in alive}
+    for steps in budget.rungs:
+        accs = _rung(alive, data, budget, steps)
+        for name, a in accs.items():
+            by_name[name]["rungs"][str(steps)] = round(a, 4)
+        n_keep = max(min(budget.promote, len(alive)),
+                     int(round(len(alive) * budget.keep)))
+        points = [(accs[c.name],
+                   _analytic_adp(c.cfg, budget.pipeline_every))
+                  for c in alive]
+        keep_idx = pareto_order(points)[:n_keep]
+        alive = [alive[i] for i in keep_idx]
+
+    # Promotion phase A: the rung survivors, in Pareto order.
+    points = [(accs.get(c.name, 0.0),
+               _analytic_adp(c.cfg, budget.pipeline_every)) for c in alive]
+    queue = [alive[i] for i in pareto_order(points)]
+    promoted: List[FrontierPoint] = []
+    for cand in queue[:budget.promote]:
+        promoted.append(_promote(cand, data, budget,
+                                 accs.get(cand.name, 0.0)))
+
+    # Promotion phase B: if full training left the frontier short (rung
+    # scores are noisy; mid-range survivors can all come back dominated),
+    # fill from the WHOLE evaluated set, preferring candidates whose ADP
+    # lies outside the promoted range — a strictly-cheaper design always
+    # extends the frontier, a strictly-bigger one does whenever it wins on
+    # accuracy.  Bounded by max_promote_extra.
+    def _last_rung_acc(name: str) -> float:
+        rungs = by_name[name]["rungs"]
+        return list(rungs.values())[-1] if rungs else 0.0
+
+    max_promote = budget.promote + budget.max_promote_extra
+    while len(promoted) < max_promote:
+        frontier_n = len(pareto_frontier(
+            [(p.accuracy, p.adp) for p in promoted]))
+        if frontier_n >= budget.min_frontier:
+            break
+        done = {p.name for p in promoted}
+        remaining = [c for c in candidates if c.name not in done]
+        if not remaining:
+            break
+        lo = min(p.adp for p in promoted) if promoted else 0.0
+        hi = max(p.adp for p in promoted) if promoted else 0.0
+        adp_of = {c.name: _analytic_adp(c.cfg, budget.pipeline_every)
+                  for c in remaining}
+        below = [c for c in remaining if adp_of[c.name] < lo]
+        above = [c for c in remaining if adp_of[c.name] > hi]
+        pool = below or above or remaining
+        cand = max(pool, key=lambda c: _last_rung_acc(c.name))
+        promoted.append(_promote(cand, data, budget,
+                                 _last_rung_acc(cand.name)))
+
+    front_idx = pareto_frontier([(p.accuracy, p.adp) for p in promoted])
+    frontier = sorted((promoted[i] for i in front_idx),
+                      key=lambda p: -p.accuracy)
+    return SearchResult(task=task, frontier=frontier, promoted=promoted,
+                        evaluated=evaluated, rejected=rejected,
+                        seconds=time.time() - t0)

@@ -17,13 +17,14 @@ full Table II configs.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import assemble, folding
+from repro.core import assemble, folding, quant, subnet
 from repro.core.assemble import AssembleConfig
 from repro.data.synthetic import Dataset
 from repro.train import losses, optim
@@ -75,6 +76,161 @@ def train(cfg: AssembleConfig, data: Dataset, *, steps: int = 200,
         params, opt, l = step(params, opt, x[lo:lo + bs], y[lo:lo + bs])
         hist.append(float(l))
     return TrainResult(params=params, losses=hist)
+
+
+# ---------------------------------------------------------------------------
+# Population training (assembly search, DESIGN.md §8)
+# ---------------------------------------------------------------------------
+#
+# The assembly search scores MANY candidate configs with short-horizon
+# training.  Candidates that share a *shape signature* — identical layer
+# widths/fan-ins/assemble flags and subnet hyperparameters — differ only in
+# their quantization bit-widths (beta / mixed precision), which never touch
+# parameter shapes.  Such a group trains as ONE vmapped program: the per-
+# candidate quantizer clip bounds become traced arrays
+# (quant.fake_quant_dynamic) and init/step/eval vmap over the candidate
+# axis.  This is a *scorer*: rung training uses random mappings and no
+# lasso phase; frontier survivors are re-trained through the full Toolflow.
+
+
+def quant_bounds(cfg: AssembleConfig) -> dict:
+    """Per-boundary (qmin, qmax) clip bounds of ONE candidate as f32 arrays.
+
+    Stack these across a shape-signature group (``jax.tree.map`` over the
+    candidate list) to feed :func:`train_population`.  Signedness is
+    structural (it follows the activation pattern) and must be identical
+    across a group; bit-widths may vary.
+    """
+    in_spec = cfg.input_quant_spec()
+    return {
+        "in": (jnp.float32(in_spec.qmin), jnp.float32(in_spec.qmax)),
+        "layers": [(jnp.float32(cfg.quant_spec(l).qmin),
+                    jnp.float32(cfg.quant_spec(l).qmax))
+                   for l in range(len(cfg.layers))],
+    }
+
+
+def stack_bounds(cfgs: Sequence[AssembleConfig]) -> dict:
+    """Stack per-candidate bounds into [n_candidates]-leading arrays."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs),
+                        *[quant_bounds(c) for c in cfgs])
+
+
+def population_forward(params: dict, cfg: AssembleConfig, bounds: dict,
+                       x: jax.Array, *, training: bool):
+    """``assemble.apply`` with traced quantizer bounds (one candidate).
+
+    ``cfg`` supplies only the shape signature — every bit-width decision
+    comes from ``bounds``, so the same traced program serves a whole vmapped
+    group of beta variants.  Returns (logits, new params with BN stats).
+    """
+    h = quant.fake_quant_dynamic(params["in_q"], bounds["in"][0],
+                                 bounds["in"][1], x)
+    new_layers = []
+    for l in range(len(cfg.layers)):
+        pl = params["layers"][l]
+        xi = assemble.gather_layer_inputs(cfg, pl, l, h)
+        out, new_sn = subnet.apply_subnet(
+            pl["subnet"], cfg.subnet_spec(l), xi,
+            activation=cfg.has_activation(l), training=training)
+        out = out[..., 0]
+        h = quant.fake_quant_dynamic(pl["out_q"], bounds["layers"][l][0],
+                                     bounds["layers"][l][1], out)
+        nl = dict(pl)
+        nl["subnet"] = new_sn
+        new_layers.append(nl)
+    return h, dict(params, layers=new_layers)
+
+
+@dataclasses.dataclass
+class PopulationResult:
+    params: dict        # stacked pytree, leading [n_candidates] axis
+    losses: np.ndarray  # [n_candidates, steps]
+
+
+@functools.lru_cache(maxsize=64)
+def _population_step(cfg: AssembleConfig, ocfg: optim.AdamWConfig):
+    """Jitted vmapped train step, cached per shape signature.
+
+    The search calls :func:`train_population` once per (group, rung); the
+    traced program depends only on ``cfg``'s shapes and the optimizer
+    config, so caching here makes successive rungs compile-free."""
+    binary = cfg.layers[-1].units == 1
+
+    def one_step(p, o, b, xb, yb):
+        def loss_fn(pp):
+            logits, new_p = population_forward(pp, cfg, b, xb, training=True)
+            if binary:
+                l = losses.binary_cross_entropy(logits, yb)
+            else:
+                l = losses.softmax_cross_entropy(logits, yb)
+            return l, new_p
+        (l, new_p), g = jax.value_and_grad(loss_fn, has_aux=True,
+                                           allow_int=True)(p)
+        new_p2, o2, _ = optim.adamw_update(ocfg, g, o, new_p)
+        return new_p2, o2, l
+
+    return jax.jit(jax.vmap(one_step, in_axes=(0, 0, 0, None, None)))
+
+
+@functools.lru_cache(maxsize=64)
+def _population_eval(cfg: AssembleConfig):
+    @jax.jit
+    @functools.partial(jax.vmap, in_axes=(0, 0, None))
+    def fwd(p, b, xx):
+        logits, _ = population_forward(p, cfg, b, xx, training=False)
+        return logits
+    return fwd
+
+
+def train_population(cfg: AssembleConfig, bounds: dict, data: Dataset, *,
+                     steps: int = 40, lr: float = 5e-3,
+                     batch_size: int = 256, weight_decay: float = 1e-4,
+                     seed: int = 0, max_train: int = 2048
+                     ) -> PopulationResult:
+    """Short-horizon training of a shape-signature group, all at once.
+
+    ``bounds`` comes from :func:`stack_bounds`; its leading axis is the
+    candidate count.  One jitted vmapped train step covers the whole group
+    (shared data batch, per-candidate params/optimizer/bounds); mappings
+    are random per candidate (the scorer contract above).
+    """
+    n_cand = int(jax.tree.leaves(bounds)[0].shape[0])
+    keys = jax.random.split(jax.random.PRNGKey(seed), n_cand)
+    params = jax.vmap(lambda k: assemble.init(k, cfg))(keys)
+    opt = optim.adamw_init(params)  # zeros_like: stacked params -> stacked m/v
+    ocfg = optim.AdamWConfig(lr=lr, weight_decay=weight_decay)
+    # adamw's scalar step count must stay per-candidate under vmap
+    opt = optim.AdamWState(step=jnp.zeros((n_cand,), jnp.int32),
+                           m=opt.m, v=opt.v)
+    x = jnp.asarray(data.x_train[:max_train])
+    y = jnp.asarray(data.y_train[:max_train])
+    step = _population_step(cfg, ocfg)
+    n = x.shape[0]
+    bs = min(batch_size, n)
+    hist = []
+    for i in range(steps):
+        lo = (i * bs) % (n - bs + 1)
+        params, opt, l = step(params, opt, bounds, x[lo:lo + bs],
+                              y[lo:lo + bs])
+        hist.append(np.asarray(l))
+    return PopulationResult(params=params,
+                            losses=np.stack(hist, axis=-1) if hist
+                            else np.zeros((n_cand, 0)))
+
+
+def population_accuracy(cfg: AssembleConfig, params: dict, bounds: dict,
+                        data: Dataset, *, max_eval: int = 1024) -> np.ndarray:
+    """Validation accuracy of every candidate in a trained group. [n_cand]."""
+    x = jnp.asarray(data.x_test[:max_eval])
+    y = np.asarray(data.y_test[:max_eval])
+    fwd = _population_eval(cfg)
+    logits = np.asarray(fwd(params, bounds, x))  # [n_cand, rows, out]
+    if cfg.layers[-1].units == 1:
+        pred = (logits[..., 0] > 0).astype(np.int32)
+    else:
+        pred = logits.argmax(-1)
+    return (pred == y[None, :]).mean(axis=-1)
 
 
 def accuracy(cfg: AssembleConfig, params: dict, data: Dataset, *,

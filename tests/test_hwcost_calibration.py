@@ -1,0 +1,86 @@
+"""hwcost <-> rtl calibration: the analytic LUT model vs actual emission.
+
+The assembly search scores candidates with ``core.hwcost``'s analytic
+area-delay product; the model is only trustworthy if it matches what
+``core.rtl`` actually emits.  These tests emit real Verilog for every
+Table-II config (and the reduced surrogates), structurally count LUT6s
+from the text (``rtl.count_luts``), and assert the analytic count agrees
+within a tight error bound — plus the calibrated-report plumbing the
+search uses.
+"""
+import jax
+import pytest
+
+from repro.configs import paper_tasks
+from repro.core import assemble, folding, hwcost, rtl
+
+# (name, config factory): the paper's four Table-II designs + the reduced
+# surrogates the search/CI operate on.
+CONFIGS = {
+    "mnist_full": paper_tasks.mnist,
+    "jsc_cernbox_full": paper_tasks.jsc_cernbox,
+    "jsc_openml_full": paper_tasks.jsc_openml,
+    "nid_full": paper_tasks.nid,
+    "mnist_reduced": lambda: paper_tasks.reduced("mnist"),
+    "jsc_reduced": lambda: paper_tasks.reduced("jsc"),
+    "nid_reduced": lambda: paper_tasks.reduced("nid"),
+}
+
+# Relative error bound on |rtl-counted - analytic| / analytic.  The two
+# legs share only the plut_per_bit decomposition table; today they agree
+# exactly, and any structural drift (emission changes, model changes) must
+# stay within 2% before someone revisits the calibration.
+ERROR_BOUND = 0.02
+
+
+def _folded(cfg, seed=0):
+    params = assemble.init(jax.random.PRNGKey(seed), cfg)
+    return folding.fold_network(params, cfg)
+
+
+@pytest.mark.parametrize("name", sorted(CONFIGS))
+def test_analytic_luts_match_emitted_rtl(name):
+    cfg = CONFIGS[name]()
+    net = _folded(cfg)
+    counted = rtl.count_luts(rtl.emit_verilog(net))
+    analytic = hwcost.network_luts(cfg)
+    rel_err = abs(counted - analytic) / analytic
+    assert rel_err <= ERROR_BOUND, (
+        f"{name}: rtl-counted {counted} vs analytic {analytic} "
+        f"({rel_err:.1%} > {ERROR_BOUND:.0%})")
+
+
+def test_calibration_ratio_and_calibrated_report():
+    cfg = paper_tasks.reduced("nid")
+    net = _folded(cfg)
+    cal = hwcost.calibration_vs_rtl(net)
+    assert cal["analytic_luts"] == hwcost.network_luts(cfg)
+    assert abs(cal["ratio"] - 1.0) <= ERROR_BOUND
+
+    rep = hwcost.calibrated_report(net)
+    base = hwcost.report(cfg)
+    assert rep.luts == int(round(base.luts * cal["ratio"]))
+    assert rep.area_delay == pytest.approx(rep.luts * base.latency_ns)
+    # timing model untouched by calibration
+    assert rep.fmax_mhz == base.fmax_mhz
+    assert rep.cycles == base.cycles
+
+
+def test_count_luts_rejects_non_modules():
+    with pytest.raises(ValueError, match="no ROMs"):
+        rtl.count_luts("module empty(); endmodule")
+
+
+def test_count_luts_wide_rom_decomposition():
+    """A k>6 ROM must be counted through the Shannon/MUX decomposition,
+    not one-LUT-per-ROM, and ROMs without an address wire must raise."""
+    v = ("  wire [7:0] l0_a0 = {x[7:0]};\n"
+         "  reg [3:0] l0_r0;\n"
+         "  wire [5:0] l1_a0 = {l0_c[5:0]};\n"
+         "  reg [0:0] l1_r0;\n")
+    expected = 4 * hwcost.plut_per_bit(8) + 1 * hwcost.plut_per_bit(6)
+    assert rtl.count_luts(v) == expected == 17
+
+    orphan = "  reg [3:0] l9_r0;\n"
+    with pytest.raises(ValueError, match="no matching address"):
+        rtl.count_luts(v + orphan)

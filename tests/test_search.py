@@ -1,0 +1,173 @@
+"""Assembly-search subsystem: space validity, Pareto logic, the vmapped
+population scorer's equivalence with the canonical forward, and the
+end-to-end Toolflow.search contract (frontier size + artifact round-trip
+bit-identity across every registered backend)."""
+import dataclasses
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro import backends
+from repro.configs import paper_tasks
+from repro.core import assemble
+from repro.data import synthetic
+from repro.pipeline import CompiledLUTNetwork, Toolflow
+from repro.search import (SearchBudget, generate_candidates, pareto_frontier,
+                          pareto_order, shape_signature, validate)
+from repro.train import lut_trainer
+
+
+# ---------------------------------------------------------------------------
+# candidate space
+# ---------------------------------------------------------------------------
+
+def test_generator_base_first_valid_and_deduped():
+    budget = SearchBudget()
+    base = paper_tasks.reduced("nid")
+    cands, rejected = generate_candidates(base, budget)
+    assert cands[0].name == "base" and cands[0].cfg == base
+    assert 3 <= len(cands) <= budget.n_candidates
+    cfgs = [c.cfg for c in cands]
+    assert len(set(cfgs)) == len(cfgs), "duplicate configs survived"
+    for c in cands:
+        assert validate(c.cfg, budget) is None, c.name
+    # rejections are recorded with reasons, never silently dropped
+    for name, reason in rejected:
+        assert isinstance(name, str) and reason
+
+
+def test_validate_enforces_addr_bit_budget():
+    base = paper_tasks.reduced("nid")
+    tight = SearchBudget(max_addr_bits=max(
+        base.lut_addr_bits(l) for l in range(len(base.layers))) - 1)
+    reason = validate(base, tight)
+    assert reason is not None and "address bits" in reason
+
+
+def test_validate_enforces_table_entry_cap():
+    base = paper_tasks.reduced("nid")
+    reason = validate(base, SearchBudget(max_table_entries=10))
+    assert reason is not None and "table entries" in reason
+
+
+def test_shape_signature_groups_beta_variants_only():
+    base = paper_tasks.reduced("jsc")
+    beta = dataclasses.replace(base, layers=tuple(
+        dataclasses.replace(l, bits=l.bits + 1) for l in base.layers))
+    depth = dataclasses.replace(base, subnet_depth=base.subnet_depth + 1)
+    assert shape_signature(beta) == shape_signature(base)
+    assert shape_signature(depth) != shape_signature(base)
+
+
+def test_task_registry_has_seven_tasks():
+    names = paper_tasks.task_names()
+    assert len(names) == 7
+    for n in names:
+        cfg = paper_tasks.task_config(n)
+        assert cfg.layers
+        synthetic_name = paper_tasks.task_dataset(n)
+        assert isinstance(synthetic_name, str)
+    with pytest.raises(ValueError, match="unknown task"):
+        paper_tasks.task_config("nope")
+
+
+# ---------------------------------------------------------------------------
+# Pareto logic
+# ---------------------------------------------------------------------------
+
+def test_pareto_frontier_staircase():
+    #          acc   adp      dominated by
+    points = [(0.9, 100.0),   # -
+              (0.8, 120.0),   # idx 0 (worse acc, more area)
+              (0.7, 10.0),    # -
+              (0.95, 500.0),  # -
+              (0.7, 10.0)]    # duplicate of idx 2 -> first wins
+    assert pareto_frontier(points) == [0, 2, 3]
+
+
+def test_pareto_order_covers_all_points_frontier_first():
+    points = [(0.9, 100.0), (0.8, 120.0), (0.7, 10.0), (0.95, 500.0)]
+    order = pareto_order(points)
+    assert sorted(order) == [0, 1, 2, 3]
+    assert set(order[:3]) == {0, 2, 3}   # rank-1 frontier first
+    assert order[3] == 1
+
+
+# ---------------------------------------------------------------------------
+# population scorer
+# ---------------------------------------------------------------------------
+
+def test_population_forward_matches_canonical_apply():
+    """With a candidate's own bounds, the dynamic-bounds forward is the
+    same function as assemble.apply — the scorer scores the real model."""
+    cfg = paper_tasks.reduced("jsc")
+    params = assemble.init(jax.random.PRNGKey(3), cfg)
+    x = jax.random.uniform(jax.random.PRNGKey(4), (32, cfg.in_features),
+                           minval=-1.0, maxval=1.0)
+    ref, _ = assemble.apply(params, cfg, x, training=False)
+    bounds = lut_trainer.quant_bounds(cfg)
+    got, _ = lut_trainer.population_forward(params, cfg, bounds, x,
+                                            training=False)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
+
+
+def test_train_population_trains_beta_group():
+    base = paper_tasks.reduced("nid")
+    cfgs = [base,
+            dataclasses.replace(base, layers=tuple(
+                dataclasses.replace(l, bits=l.bits + 1)
+                for l in base.layers))]
+    assert shape_signature(cfgs[0]) == shape_signature(cfgs[1])
+    bounds = lut_trainer.stack_bounds(cfgs)
+    data = synthetic.load("nid", n_train=1024, n_test=512)
+    res = lut_trainer.train_population(base, bounds, data, steps=25,
+                                       max_train=512)
+    assert res.losses.shape == (2, 25)
+    assert np.isfinite(res.losses).all()
+    # short-horizon training reduces loss for every candidate
+    assert (res.losses[:, -5:].mean(-1) < res.losses[:, :5].mean(-1)).all()
+    acc = lut_trainer.population_accuracy(base, res.params, bounds, data,
+                                          max_eval=512)
+    assert acc.shape == (2,)
+    assert ((acc >= 0) & (acc <= 1)).all()
+
+
+# ---------------------------------------------------------------------------
+# end-to-end
+# ---------------------------------------------------------------------------
+
+def test_toolflow_search_end_to_end(tmp_path):
+    """Acceptance contract on a reduced task with a trimmed budget: a >=3
+    point Pareto frontier whose artifacts round-trip through save/load and
+    predict bit-identically on every registered backend."""
+    res = Toolflow.search("nid_reduced", SearchBudget.smoke())
+
+    assert res.task == "nid_reduced"
+    assert len(res.frontier) >= 3
+    assert res.seconds < 300  # the acceptance bound: < 5 min on CPU
+    # ranked: accuracy descending; frontier: no point dominates another
+    accs = [p.accuracy for p in res.frontier]
+    assert accs == sorted(accs, reverse=True)
+    for p in res.frontier:
+        for q in res.frontier:
+            if p is not q:
+                assert not (q.accuracy >= p.accuracy and q.adp <= p.adp
+                            and (q.accuracy > p.accuracy or q.adp < p.adp))
+    # every evaluated candidate carries its rung trajectory
+    assert all(e["rungs"] for e in res.evaluated)
+
+    x = np.asarray(jax.random.uniform(
+        jax.random.PRNGKey(0), (33, res.frontier[0].cfg.in_features),
+        minval=-1.0, maxval=1.0))
+    for i, p in enumerate(res.frontier):
+        assert p.calibration == pytest.approx(1.0, abs=0.02)
+        assert p.adp > 0 and p.luts > 0
+        ref = np.asarray(p.compiled.predict_codes(x, backend="take"))
+        path = p.compiled.save(os.path.join(tmp_path, f"front_{i}.npz"))
+        loaded = CompiledLUTNetwork.load(path)
+        for name in backends.available():
+            got = np.asarray(loaded.predict_codes(x, backend=name))
+            np.testing.assert_array_equal(got, ref,
+                                          err_msg=f"{p.name}/{name}")
