@@ -155,7 +155,7 @@ def _promote(cand: Candidate, data, budget: SearchBudget,
 
     flow = pipeline.Toolflow(
         cand.cfg, pretrain_steps=budget.pretrain_steps,
-        retrain_steps=2, lr=budget.lr,  # INJECTED REGRESSION (accuracy-gate demo)
+        retrain_steps=budget.retrain_steps, lr=budget.lr,
         batch_size=budget.batch_size, lasso=budget.lasso,
         seed=budget.seed, max_train=budget.train_rows)
     compiled = flow.run(data)
