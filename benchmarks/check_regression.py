@@ -12,6 +12,12 @@ its own metric extraction, baseline file, tolerance, and comparison mode:
     ABSOLUTE accuracy-drop tolerance (default 0.03).  The CI
     ``accuracy-gate`` job runs this on every PR — accuracy can no longer
     rot silently while perf stays green.
+  * ``fleet`` — multi-tenant serving cells from ``BENCH_fleet.json`` vs
+    ``experiments/FLEET_baseline.json``; RELATIVE tolerance (default
+    ±35%), plus hard violations for the serving contract (per-tenant
+    bit-identity, zero hot-swap drops/wrong answers, corrupted deploys
+    rejected, admission actually shedding).  Runs in the CI ``perf-gate``
+    job alongside ``throughput``.
 
 Shared gate semantics (both suites):
 
@@ -29,7 +35,7 @@ tracks the tip of the default branch (and the runner generation CI
 actually uses).
 
     PYTHONPATH=src python -m benchmarks.check_regression
-        [--suite throughput|accuracy|all] [--refresh]
+        [--suite throughput|accuracy|fleet|all] [--refresh]
         [--tolerance T] [--baseline PATH]
 """
 from __future__ import annotations
@@ -44,6 +50,7 @@ from typing import Callable, Dict, List, Tuple
 EXPERIMENTS = os.path.join(os.path.dirname(__file__), "..", "experiments")
 BASELINE = os.path.join(EXPERIMENTS, "BENCH_baseline.json")
 ACC_BASELINE = os.path.join(EXPERIMENTS, "ACC_baseline.json")
+FLEET_BASELINE = os.path.join(EXPERIMENTS, "FLEET_baseline.json")
 SCHEMA_VERSION = 1
 
 Metrics = Dict[str, Tuple[float, bool]]  # name -> (value, higher_is_better)
@@ -131,6 +138,57 @@ def extract_accuracy(experiments: str = EXPERIMENTS
     return metrics, violations
 
 
+def extract_fleet(experiments: str = EXPERIMENTS
+                  ) -> Tuple[Metrics, List[str]]:
+    """Flatten the multi-tenant fleet sweep -> (metrics, violations).
+
+    Throughput cells (online fleet / online isolated / offline fleet) gate
+    with relative tolerance; the serving CONTRACT is all hard violations:
+    any tenant not bit-identical, any hot-swap drop or wrong answer, a
+    corrupted deploy slipping through, or the admission stress failing to
+    shed (a gate that never sheds is not testing admission).
+    """
+    metrics: Metrics = {}
+    violations: List[str] = []
+    doc = _load(os.path.join(experiments, "BENCH_fleet.json"))
+
+    on, off = doc["online"], doc["offline"]
+    metrics["fleet/online/fleet_rows_per_s"] = (on["fleet_rows_per_s"], True)
+    metrics["fleet/online/isolated_sync_rows_per_s"] = (
+        on["isolated_sync_rows_per_s"], True)
+    metrics["fleet/offline/fleet_rows_per_s"] = (
+        off["fleet_rows_per_s"], True)
+    # one aggregate ratio cell (same rationale as the async speedup): the
+    # structural coalescing win, not per-cell noise amplification
+    metrics["fleet/online/speedup_vs_isolated_sync"] = (
+        on["speedup_vs_isolated_sync"], True)
+
+    for t in doc["per_tenant"]:
+        if not t["bit_identical"]:
+            violations.append(
+                f"fleet/{t['model_id']}: fleet-served codes not "
+                "bit-identical to the artifact's reference")
+    hs = doc["hot_swap"]
+    if not hs["good_deploy_ok"]:
+        violations.append("fleet/hot_swap: good deploy did not land")
+    if hs["dropped"]:
+        violations.append(
+            f"fleet/hot_swap: {hs['dropped']} requests dropped")
+    if hs["wrong"]:
+        violations.append(
+            f"fleet/hot_swap: {hs['wrong']} wrong answers served")
+    if not hs["corrupt_deploy_rejected"]:
+        violations.append(
+            "fleet/hot_swap: corrupted artifact was NOT rejected")
+    if not hs["rollback_recorded"]:
+        violations.append(
+            "fleet/hot_swap: rejection missing from swap history")
+    if doc["admission"]["shed"] <= 0:
+        violations.append(
+            "fleet/admission: over-budget burst shed nothing")
+    return metrics, violations
+
+
 # ---------------------------------------------------------------------------
 # Suites
 # ---------------------------------------------------------------------------
@@ -149,6 +207,10 @@ SUITES: Dict[str, Suite] = {
                         tolerance=0.30, mode="relative"),
     "accuracy": Suite("accuracy", extract_accuracy, ACC_BASELINE,
                       tolerance=0.03, mode="absolute"),
+    # wider than throughput: fleet cells layer scheduler timing on top of
+    # engine timing, so their run-to-run wobble compounds
+    "fleet": Suite("fleet", extract_fleet, FLEET_BASELINE,
+                   tolerance=0.35, mode="relative"),
 }
 
 

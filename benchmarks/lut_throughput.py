@@ -125,10 +125,11 @@ def sweep(task: str = "nid", blocks=(64, 256, 1024),
                 {"sync": _make(block, name, 1),
                  "async": _make(block, name, 2)}, x, reps)
             for mode, (rate, stats) in best.items():
+                s = stats.summary()   # the supported stats surface
                 cell[mode] = {
                     "rows_per_s": round(rate, 1),
-                    "p50_tick_us": round(stats.latency_us(50), 1),
-                    "p99_tick_us": round(stats.latency_us(99), 1),
+                    "p50_tick_us": s["p50_tick_us"],
+                    "p99_tick_us": s["p99_tick_us"],
                 }
             cell["async_speedup"] = round(
                 cell["async"]["rows_per_s"] / cell["sync"]["rows_per_s"], 3)

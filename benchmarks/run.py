@@ -102,6 +102,18 @@ def bench_throughput(rows: list, fast: bool) -> None:
     rows.append(("lut_throughput_sweep", (time.time() - t0) * 1e6, derived))
 
 
+def bench_fleet(rows: list, fast: bool) -> None:
+    """Multi-tenant fleet serving sweep (writes BENCH_fleet.json)."""
+    from benchmarks import fleet_serving
+    t0 = time.time()
+    res = fleet_serving.sweep(**(fleet_serving.FAST_KW if fast else {}))
+    fleet_serving.write_results(res)
+    on = res["online"]
+    rows.append(("fleet_serving_sweep", (time.time() - t0) * 1e6,
+                 f"online speedup {on['speedup_vs_isolated_sync']}x "
+                 f"({on['fleet_blocks']} vs {on['isolated_blocks']} blocks)"))
+
+
 def bench_search(rows: list, fast: bool) -> None:
     """Assembly-search sweep (writes BENCH_assembly_search.json)."""
     from benchmarks import assembly_search
@@ -159,7 +171,7 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--only", default=None,
                     choices=["kernels", "backends", "throughput", "tables",
-                             "roofline", "search"])
+                             "roofline", "search", "fleet"])
     args = ap.parse_args()
 
     rows: list = []
@@ -172,6 +184,8 @@ def main() -> None:
         bench_throughput(rows, args.fast)
     if args.only in (None, "search"):
         bench_search(rows, args.fast)
+    if args.only in (None, "fleet"):
+        bench_fleet(rows, args.fast)
     if args.only in (None, "tables"):
         outputs.update(bench_tables(rows, args.fast))
     if args.only in (None, "roofline"):

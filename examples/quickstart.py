@@ -7,7 +7,9 @@ deployment artifact that is planned onto every registered lookup backend
 (``compile_backend``; incl. the single-launch fused Pallas cascade), saved
 with its plans, re-loaded, verified bit-exact, costed with the FPGA model,
 and emitted as synthesizable Verilog.  No training params cross the
-deployment boundary.
+deployment boundary.  The final phases run the hardware-aware assembly
+search and then serve three of its frontier artifacts as tenants of one
+``LUTFleet`` — registry, SLOs, and a zero-downtime hot swap included.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -113,6 +115,49 @@ def main() -> None:
                              "nid_frontier_best.npz")
     result.frontier[0].compiled.save(best_path)
     print(f"   saved the most accurate frontier artifact to {best_path}")
+
+    print("== phase 6: multi-tenant fleet serving (DESIGN.md §9)")
+    # Serve several frontier artifacts from ONE process: each Pareto point
+    # becomes a tenant with its own version history and SLO, scheduled with
+    # continuous cross-tenant batching over a shared in-flight budget.
+    from repro.serve import LUTFleet, TenantSLO, make_reference
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                    "tests"))
+    import traffic
+
+    points = result.frontier[:3]
+    fleet = LUTFleet(block=64, depth=2)
+    for p in points:
+        fleet.register(p.name, p.compiled,
+                       reference=make_reference(p.compiled),
+                       slo=TenantSLO(max_queue=4096, policy="shed"))
+    ids = [p.name for p in points]
+    trace = traffic.ragged_trace(ids, n_events=30, seed=0)
+    inputs = traffic.make_inputs(
+        trace, {p.name: p.compiled.cfg.in_features for p in points}, seed=1)
+    for ev, xs in zip(trace, inputs):
+        fleet.submit_many(ev.model_id, xs)
+        fleet.tick()
+    fleet.pump()
+    for p in points:
+        s = fleet.summary(p.name)
+        print(f"   tenant {p.name:>10}: v{s['version']} "
+              f"{s['completed']} rows, {s['ticks']} blocks, "
+              f"p99 {s['p99_request_us'] / 1e3:.1f} ms, shed {s['shed']}")
+    # zero-downtime hot swap: redeploy the best artifact from its .npz
+    # mid-stream — the smoke check gates it, the lane adopts v2 seamlessly
+    rng = np.random.default_rng(2)
+    live = rng.uniform(-1.0, 1.0, (100, points[0].compiled.cfg.in_features)
+                       ).astype(np.float32)
+    fleet.submit_many(ids[0], live)
+    event = fleet.deploy(ids[0], best_path,
+                         reference=make_reference(points[0].compiled))
+    fleet.pump()
+    s = fleet.summary(ids[0])
+    print(f"   hot swap {ids[0]}: ok={event.ok} v{event.from_version}->"
+          f"v{event.to_version}, queue drained to {s['queue_depth']}, "
+          f"history={len(s['swap_history'])} event(s)")
 
 
 if __name__ == "__main__":

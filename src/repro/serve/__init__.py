@@ -1,1 +1,20 @@
-"""Serving substrate."""
+"""Serving substrate.
+
+``engine``/``sampling`` serve the LM substrate; ``lut_engine`` micro-batches
+one folded LUT artifact; the fleet tier (``fleet``/``registry``/
+``admission``, DESIGN.md §9) operates MANY artifacts in one process with
+smoke-checked hot swaps, an LRU executor cache, and per-tenant SLOs.
+"""
+from repro.serve.admission import (AdmissionController, AdmissionDecision,
+                                   TenantSLO)
+from repro.serve.fleet import FleetStats, LUTFleet
+from repro.serve.registry import (ExecutorCache, Reference, SwapEvent,
+                                  TenantRegistry, make_reference,
+                                  smoke_check)
+
+__all__ = [
+    "AdmissionController", "AdmissionDecision", "TenantSLO",
+    "FleetStats", "LUTFleet",
+    "ExecutorCache", "Reference", "SwapEvent", "TenantRegistry",
+    "make_reference", "smoke_check",
+]

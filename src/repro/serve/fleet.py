@@ -1,0 +1,374 @@
+"""Multi-tenant LUT serving fleet: one process, many artifacts, SLO-aware.
+
+``CompiledLUTNetwork`` artifacts are tiny and self-contained — the whole
+point of the paper's folding step — so a single process can host a *fleet*
+of them.  :class:`LUTFleet` is that tier (DESIGN.md §9):
+
+  * **registry** (:mod:`repro.serve.registry`): model-id -> versioned
+    artifact with smoke-checked zero-downtime hot swaps and an LRU
+    executor cache under a byte/entry budget.
+  * **scheduler**: one engine lane per tenant (the double-buffered
+    dispatch/retire machinery of :class:`~repro.serve.lut_engine.LUTEngine`,
+    driven externally), round-robined with **continuous cross-tenant
+    batching** — every tick each tenant with queued rows dispatches one
+    padded block without waiting, and blocks retire oldest-first across
+    the WHOLE fleet once ``depth`` blocks are in flight.  A tenant with 3
+    queued rows dispatches alongside one with 300 instead of behind it,
+    and the device pipeline never empties at tenant boundaries (the
+    aggregate-throughput win over N isolated engines — see
+    ``benchmarks/fleet_serving.py``).
+  * **admission** (:mod:`repro.serve.admission`): per-tenant p99/queue
+    budgets, enforced at the door (shed) or absorbed (defer).
+
+Per-tenant :class:`FleetStats` surface rows, queue depth, request-latency
+p50/p99, shed/deferred counts the same way ``LUTEngineStats`` does for a
+single engine; ``summary(model_id)`` adds version + swap history.
+
+Hot swap contract: ``deploy`` mutates only the registry; each lane picks
+the new version up at its next tick boundary — queued requests migrate to
+the new engine, in-flight blocks retire on the engine that dispatched
+them.  Zero requests dropped, zero answers from a half-installed version.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro import backends
+from repro.serve.admission import (AdmissionController, AdmissionDecision,
+                                   TenantSLO)
+from repro.serve.lut_engine import (LATENCY_WINDOW, LUTEngine, LUTRequest)
+from repro.serve.registry import (ArtifactSource, ExecutorCache, Reference,
+                                  SwapEvent, TenantRegistry)
+
+
+@dataclasses.dataclass
+class FleetStats:
+    """Per-tenant serving counters (the fleet analogue of LUTEngineStats;
+    latencies here are per-REQUEST submit->result, queue wait included —
+    that is what a tenant's SLO is written against)."""
+
+    requests: int = 0            # admitted rows
+    completed: int = 0
+    shed: int = 0
+    deferred: int = 0            # rows that went through the deferred queue
+    ticks: int = 0               # blocks dispatched for this tenant
+    rows_padded: int = 0
+    request_latencies_us: "collections.deque[float]" = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=LATENCY_WINDOW))
+
+    def latency_us(self, pct: float) -> float:
+        """Request-latency percentile over the window; 0.0 when empty."""
+        if not self.request_latencies_us:
+            return 0.0
+        return float(np.percentile(
+            np.asarray(self.request_latencies_us), pct))
+
+    def summary(self) -> dict:
+        """Flat JSON-ready snapshot (mirrors LUTEngineStats.summary)."""
+        return {
+            "requests": self.requests,
+            "completed": self.completed,
+            "shed": self.shed,
+            "deferred": self.deferred,
+            "ticks": self.ticks,
+            "rows_padded": self.rows_padded,
+            "p50_request_us": round(self.latency_us(50), 1),
+            "p99_request_us": round(self.latency_us(99), 1),
+            "latency_window": len(self.request_latencies_us),
+        }
+
+
+class _TenantLane:
+    """One tenant's serving lane: engine + deferred queue + stats."""
+
+    def __init__(self, model_id: str, *, block: int,
+                 backend: Optional[str], placement):
+        self.model_id = model_id
+        self.block = block
+        self.backend = backend
+        self.placement = placement
+        self.version = 0                 # forces engine build on first sync
+        self.engine: Optional[LUTEngine] = None
+        self.deferred: Deque[Tuple[np.ndarray, float]] = collections.deque()
+        self.stats = FleetStats()
+        self.t_first: Optional[float] = None
+        self.t_last: Optional[float] = None
+
+    def queue_depth(self) -> int:
+        queued = len(self.engine.queue) if self.engine is not None else 0
+        return queued + len(self.deferred)
+
+
+class LUTFleet:
+    """Many tenants, one pump.  See the module docstring for the model.
+
+    ``depth`` is the GLOBAL in-flight block budget shared by all tenants
+    (2 = double-buffered, the serving default); ``block`` the default
+    per-tenant block size, overridable per :meth:`register`; ``min_fill``
+    the batching-delay threshold (rows a lane must have queued before it
+    dispatches — ``block`` trades latency for full-block throughput under
+    arrival-driven pumping, see ``benchmarks/fleet_serving.py``).
+    """
+
+    def __init__(self, *, block: int = 256, depth: int = 2,
+                 min_fill: int = 1,
+                 registry: Optional[TenantRegistry] = None,
+                 cache: Optional[ExecutorCache] = None,
+                 admission: Optional[AdmissionController] = None):
+        if depth < 1:
+            raise ValueError(f"depth must be >= 1, got {depth}")
+        if min_fill < 1:
+            raise ValueError(f"min_fill must be >= 1, got {min_fill}")
+        if registry is not None and cache is not None:
+            raise ValueError("pass either registry= or cache=, not both "
+                             "(the registry owns its cache)")
+        self.block = int(block)
+        self.depth = int(depth)
+        # batching-delay policy: a lane dispatches only once it has
+        # min_fill rows queued (or on a flush/drain).  1 = dispatch
+        # whatever is queued every tick (lowest latency, the default);
+        # block = full blocks only (highest throughput under per-arrival
+        # pumping — every padded row is wasted lookup compute, since the
+        # jitted block function always processes `block` rows)
+        self.min_fill = int(min_fill)
+        self.registry = (registry if registry is not None
+                         else TenantRegistry(cache=cache))
+        self.admission = admission or AdmissionController()
+        self._lanes: Dict[str, _TenantLane] = {}
+        # global retirement order: (lane, engine-that-dispatched), oldest
+        # first — the engine ref keeps a swapped-out version alive exactly
+        # until its last in-flight block retires
+        self._order: Deque[Tuple[_TenantLane, LUTEngine]] = \
+            collections.deque()
+        self._rr = 0
+
+    # -- tenant lifecycle ----------------------------------------------------
+    def register(self, model_id: str, source: ArtifactSource, *,
+                 reference: Optional[Reference] = None,
+                 slo: Optional[TenantSLO] = None,
+                 block: Optional[int] = None,
+                 backend: Optional[str] = None,
+                 mesh=None, placement=None) -> None:
+        """Install version 1 of a tenant and open its serving lane."""
+        if mesh is not None:
+            if placement is not None:
+                raise ValueError("pass either mesh= or placement=, not both")
+            placement = backends.Placement(mesh)
+        self.registry.register(model_id, source, reference=reference,
+                               slo=slo)
+        self._lanes[model_id] = _TenantLane(
+            model_id, block=int(block or self.block), backend=backend,
+            placement=placement)
+
+    def deploy(self, model_id: str, source: ArtifactSource, *,
+               reference: Optional[Reference] = None,
+               strict: bool = False) -> SwapEvent:
+        """Hot-swap a new artifact version (see TenantRegistry.deploy);
+        the lane adopts a successful swap at its next tick boundary."""
+        return self.registry.deploy(model_id, source, reference=reference,
+                                    strict=strict)
+
+    def model_ids(self) -> List[str]:
+        return list(self._lanes)
+
+    # -- stats surface -------------------------------------------------------
+    def stats(self, model_id: str) -> FleetStats:
+        return self._lane(model_id).stats
+
+    def queue_depth(self, model_id: str) -> int:
+        return self._lane(model_id).queue_depth()
+
+    @property
+    def inflight(self) -> int:
+        """Blocks dispatched fleet-wide but not yet retired."""
+        return len(self._order)
+
+    def summary(self, model_id: str) -> dict:
+        """One tenant's full operational picture: FleetStats + live queue
+        depth + serving version + rows/s + swap history."""
+        lane = self._lane(model_id)
+        entry = self.registry.get(model_id)
+        out = lane.stats.summary()
+        elapsed = ((lane.t_last - lane.t_first)
+                   if lane.t_first is not None and lane.t_last is not None
+                   else 0.0)
+        out.update({
+            "model_id": model_id,
+            "version": entry.version,
+            "queue_depth": lane.queue_depth(),
+            "rows_per_s": (round(lane.stats.completed / elapsed, 1)
+                           if elapsed > 0 else 0.0),
+            "swap_history": [e.summary() for e in entry.history],
+        })
+        return out
+
+    # -- submission ----------------------------------------------------------
+    def submit_many(self, model_id: str, xs: np.ndarray
+                    ) -> Tuple[List[LUTRequest], AdmissionDecision]:
+        """Admit rows for one tenant.  Returns the accepted requests (in
+        row order) and the admission decision; shed rows are simply not
+        represented, deferred rows surface later through the same stats."""
+        lane = self._lane(model_id)
+        entry = self.registry.get(model_id)
+        self._sync_lane(lane)
+        xs = np.asarray(xs, np.float32)
+        if xs.ndim != 2:
+            raise ValueError(f"xs must be [n, in_features], got {xs.shape}")
+        decision = self.admission.decide(
+            n=len(xs), queue_depth=lane.queue_depth(),
+            p99_us=self._p99_if_budgeted(lane, entry.slo), slo=entry.slo)
+        now = time.perf_counter()
+        if lane.t_first is None and (decision.accept or decision.defer):
+            lane.t_first = now
+        reqs: List[LUTRequest] = []
+        if decision.accept:
+            reqs = lane.engine.submit_many(xs[:decision.accept],
+                                           t_submit=now)
+        lane.stats.requests += decision.accept
+        lane.stats.shed += decision.shed
+        lane.stats.deferred += decision.defer
+        if decision.defer:
+            start = decision.accept
+            lane.deferred.extend(
+                (row, now) for row in xs[start:start + decision.defer])
+        return reqs, decision
+
+    def submit(self, model_id: str, x: np.ndarray
+               ) -> Tuple[Optional[LUTRequest], AdmissionDecision]:
+        """Single-row sugar over :meth:`submit_many`."""
+        reqs, decision = self.submit_many(model_id,
+                                          np.asarray(x, np.float32)[None])
+        return (reqs[0] if reqs else None), decision
+
+    # -- the pump ------------------------------------------------------------
+    def tick(self, *, flush: bool = False) -> int:
+        """One fleet tick: round-robin one block dispatch per tenant with
+        work (continuous cross-tenant batching), then retire oldest-first
+        until at most ``depth - 1`` blocks remain in flight.  Returns the
+        number of requests completed.
+
+        A lane below the ``min_fill`` batching threshold holds its rows
+        for a fuller block unless ``flush=True`` (or :meth:`pump` detects
+        that nothing else will arrive)."""
+        lanes = list(self._lanes.values())
+        if lanes:
+            # rotate the start so no tenant permanently dispatches first
+            self._rr = (self._rr + 1) % len(lanes)
+            lanes = lanes[self._rr:] + lanes[:self._rr]
+        for lane in lanes:
+            self._sync_lane(lane)
+            self._drain_deferred(lane)
+            fill = 1 if flush else min(self.min_fill, lane.block)
+            if len(lane.engine.queue) >= fill:
+                batch = lane.engine.dispatch_block()
+                lane.stats.ticks += 1
+                lane.stats.rows_padded += lane.block - len(batch)
+                self._order.append((lane, lane.engine))
+        completed = 0
+        while len(self._order) > self.depth - 1:
+            completed += self._retire_one()
+        return completed
+
+    def drain(self) -> int:
+        """Retire every in-flight block (the only unconditional wait)."""
+        completed = 0
+        while self._order:
+            completed += self._retire_one()
+        return completed
+
+    def pump(self, max_ticks: int = 100_000) -> int:
+        """Tick until every queue (incl. deferred) is empty, then drain.
+        Returns total requests completed; raises if ``max_ticks`` is hit
+        (a wedged deferred queue is a bug, not a steady state)."""
+        completed = 0
+        for _ in range(max_ticks):
+            if not any(l.queue_depth() for l in self._lanes.values()):
+                return completed + self.drain()
+            before = sum(l.stats.ticks for l in self._lanes.values())
+            completed += self.tick()
+            stalled = (before == sum(l.stats.ticks
+                                     for l in self._lanes.values()))
+            if stalled and any(l.queue_depth()
+                               for l in self._lanes.values()):
+                # nothing dispatched but work remains: every lane with
+                # rows is below the min_fill threshold (or gated on a
+                # deferred queue whose lane must go idle first).  No more
+                # arrivals come through pump(), so retire what's in
+                # flight and flush the partial blocks instead of spinning.
+                completed += self.drain()
+                completed += self.tick(flush=True)
+        raise RuntimeError(f"fleet did not go idle in {max_ticks} ticks")
+
+    # -- internals -----------------------------------------------------------
+    def _lane(self, model_id: str) -> _TenantLane:
+        try:
+            return self._lanes[model_id]
+        except KeyError:
+            raise KeyError(
+                f"unknown model {model_id!r}; registered: "
+                f"{sorted(self._lanes)}") from None
+
+    def _sync_lane(self, lane: _TenantLane) -> None:
+        """Adopt the registry's current version: build the new engine off
+        the LRU executor cache and migrate queued (not in-flight) work."""
+        entry = self.registry.get(lane.model_id)
+        if lane.version == entry.version:
+            return
+        ex = self.registry.executor(lane.model_id, backend=lane.backend,
+                                    placement=lane.placement)
+        engine = LUTEngine(entry.net, block=lane.block, executor=ex)
+        if lane.engine is not None and lane.engine.queue:
+            engine.queue.extend(lane.engine.queue)
+            lane.engine.queue.clear()
+        lane.engine = engine
+        lane.version = entry.version
+
+    @staticmethod
+    def _p99_if_budgeted(lane: _TenantLane, slo: Optional[TenantSLO]
+                         ) -> float:
+        """The observed p99 only when a latency budget will read it: the
+        percentile walks the whole latency window (up to LATENCY_WINDOW
+        floats) and computing it per submit for unbudgeted tenants costs
+        more than the fleet's entire scheduling overhead."""
+        if slo is None or slo.p99_budget_us is None:
+            return 0.0
+        return lane.stats.latency_us(99)
+
+    def _drain_deferred(self, lane: _TenantLane) -> None:
+        if not lane.deferred:
+            return
+        entry = self.registry.get(lane.model_id)
+        allowance = self.admission.may_drain_deferred(
+            queue_depth=len(lane.engine.queue),
+            p99_us=self._p99_if_budgeted(lane, entry.slo), slo=entry.slo)
+        if not lane.engine.queue and not any(
+                l is lane for l, _ in self._order):
+            # the storm is definitionally over for an idle lane: re-admit
+            # at least one block so deferred work cannot wedge on a stale
+            # p99 window that nothing is refreshing
+            allowance = max(allowance, lane.block)
+        n = min(allowance, len(lane.deferred))
+        if n <= 0:
+            return
+        rows = [lane.deferred.popleft() for _ in range(n)]
+        reqs = lane.engine.submit_many(np.stack([r for r, _ in rows]))
+        for req, (_, t0) in zip(reqs, rows):
+            req.t_submit = t0   # latency counts from ORIGINAL arrival
+        lane.stats.requests += n
+
+    def _retire_one(self) -> int:
+        lane, engine = self._order.popleft()
+        batch = engine.retire_oldest()
+        now = time.perf_counter()
+        lane.t_last = now
+        lane.stats.completed += len(batch)
+        # one C-level extend, not a per-row append: this loop runs for
+        # every served row and is the fleet's only per-row bookkeeping
+        lane.stats.request_latencies_us.extend(
+            (now - req.t_submit) * 1e6 for req in batch if req.t_submit)
+        return len(batch)

@@ -46,6 +46,9 @@ class LUTRequest:
     codes: Optional[np.ndarray] = None  # [n_out] int32 result
     logits: Optional[np.ndarray] = None
     done: bool = False
+    # wall-clock submission time, stamped by callers that track end-to-end
+    # request latency (the fleet tier); 0.0 = unstamped
+    t_submit: float = 0.0
 
 
 # per-tick latency history kept for percentile stats; bounded so a
@@ -63,10 +66,24 @@ class LUTEngineStats:
 
     def latency_us(self, pct: float) -> float:
         """Percentile (e.g. 50, 99) of per-tick wall latency over the last
-        ``LATENCY_WINDOW`` ticks, in us."""
+        ``LATENCY_WINDOW`` ticks, in us.  An empty window returns 0.0 —
+        callers (benchmark sweeps, admission control) must never have to
+        special-case an engine that has not ticked yet."""
         if not self.tick_latencies_us:
             return 0.0
         return float(np.percentile(np.asarray(self.tick_latencies_us), pct))
+
+    def summary(self) -> dict:
+        """Flat JSON-ready snapshot — the supported way for benchmarks and
+        dashboards to consume stats (nobody should reach into the deque)."""
+        return {
+            "ticks": self.ticks,
+            "requests": self.requests,
+            "rows_padded": self.rows_padded,
+            "p50_tick_us": round(self.latency_us(50), 1),
+            "p99_tick_us": round(self.latency_us(99), 1),
+            "latency_window": len(self.tick_latencies_us),
+        }
 
 
 class LUTEngine:
@@ -80,12 +97,12 @@ class LUTEngine:
     """
 
     def __init__(self, net: CompiledLUTNetwork, *, block: int = 256,
-                 backend: Optional[str] = None, mesh=None, depth: int = 1):
+                 backend: Optional[str] = None, mesh=None, depth: int = 1,
+                 executor=None):
         if depth < 1:
             raise ValueError(f"depth must be >= 1, got {depth}")
         self.net = net
         self._block = int(block)
-        self._backend = backend or net.backend
         self._depth = int(depth)
         self.queue: Deque[LUTRequest] = collections.deque()
         self.stats = LUTEngineStats()
@@ -93,7 +110,21 @@ class LUTEngine:
         # (requests, codes device array, logits device array), oldest first
         self._inflight: Deque[Tuple[List[LUTRequest], object, object]] = \
             collections.deque()
-        self._executor = net.compile_backend(self._backend, mesh=mesh)
+        if executor is not None:
+            # fleet hook: a pre-built PlannedExecutor (e.g. from the tenant
+            # registry's LRU cache) — the engine never plans or caches
+            if backend is not None and backend != executor.backend:
+                raise ValueError(
+                    f"executor runs backend {executor.backend!r}, "
+                    f"not {backend!r}")
+            if mesh is not None:
+                raise ValueError("pass mesh= at executor build time, "
+                                 "not alongside executor=")
+            self._executor = executor
+        else:
+            self._executor = net.compile_backend(backend or net.backend,
+                                                 mesh=mesh)
+        self._backend = self._executor.backend
         self._fwd = self._executor.codes_and_logits
 
     # -- fixed-at-construction attributes ------------------------------------
@@ -137,16 +168,19 @@ class LUTEngine:
         self.stats.requests += 1
         return req
 
-    def submit_many(self, xs: np.ndarray) -> List[LUTRequest]:
+    def submit_many(self, xs: np.ndarray,
+                    t_submit: float = 0.0) -> List[LUTRequest]:
         """Enqueue every row of ``xs`` with ONE dtype conversion.
 
         Per-row ``submit`` pays a ``np.asarray`` per request — measurably
         the largest serial cost of bulk workloads (it cannot overlap
         device compute, unlike the per-tick work).  Handles share row
-        views of the converted matrix."""
+        views of the converted matrix.  ``t_submit`` stamps every handle
+        at construction (the fleet's request-latency clock) instead of a
+        second per-row pass by the caller."""
         xs = np.asarray(xs, np.float32)
         base = self._next_rid
-        reqs = [LUTRequest(rid=base + i, x=row)
+        reqs = [LUTRequest(rid=base + i, x=row, t_submit=t_submit)
                 for i, row in enumerate(xs)]
         self._next_rid += len(reqs)
         self.queue.extend(reqs)
@@ -154,14 +188,19 @@ class LUTEngine:
         return reqs
 
     # -- the pump ------------------------------------------------------------
-    def _dispatch(self) -> int:
+    # dispatch_block/retire_oldest are public: the multi-tenant fleet tier
+    # (serve/fleet.py) drives many engines through them with a GLOBAL
+    # in-flight budget, reusing this double-buffered machinery per tenant
+    # while owning the cross-tenant retirement order itself.
+    def dispatch_block(self) -> List[LUTRequest]:
         """Pad up to ``block`` queued requests and launch the cascade
-        WITHOUT waiting for the result (JAX dispatch is async)."""
+        WITHOUT waiting for the result (JAX dispatch is async).  Returns
+        the dispatched requests ([] when the queue was empty)."""
         batch: List[LUTRequest] = []
         while self.queue and len(batch) < self._block:
             batch.append(self.queue.popleft())
         if not batch:
-            return 0
+            return batch
         xb = np.zeros((self._block, self.net.cfg.in_features), np.float32)
         # one C-level fill, not a per-row python loop: the dispatch path is
         # host-side work the async pipeline hides behind device compute
@@ -170,10 +209,13 @@ class LUTEngine:
         codes, logits = self._fwd(jnp.asarray(xb))
         self._inflight.append((batch, codes, logits))
         self.stats.ticks += 1
-        return len(batch)
+        return batch
 
-    def _retire(self) -> int:
-        """Wait on the OLDEST in-flight block and fan results out."""
+    def retire_oldest(self) -> List[LUTRequest]:
+        """Wait on the OLDEST in-flight block, fan results out, and return
+        the completed requests ([] when nothing is in flight)."""
+        if not self._inflight:
+            return []
         batch, codes, logits = self._inflight.popleft()
         codes_np, logits_np = np.asarray(codes), np.asarray(logits)
         # list(ndarray) materializes the row views in one C loop
@@ -181,7 +223,13 @@ class LUTEngine:
             req.codes = c
             req.logits = lg
             req.done = True
-        return len(batch)
+        return batch
+
+    def _dispatch(self) -> int:
+        return len(self.dispatch_block())
+
+    def _retire(self) -> int:
+        return len(self.retire_oldest())
 
     def tick(self) -> int:
         """Dispatch one block; retire the oldest once ``depth`` blocks are

@@ -11,6 +11,7 @@ import jax
 import numpy as np
 import pytest
 
+import traffic
 from repro import backends, pipeline
 from repro.backends.base import (BackendCapabilities, ExecutionPlan,
                                  LookupBackend)
@@ -58,10 +59,12 @@ def test_all_backends_bit_identical_on_paper_tasks(name):
         np.testing.assert_array_equal(got, ref, err_msg=f"{name}/{be}")
 
 
-@pytest.mark.parametrize("batch", [1, 8, 33, 257])
+@pytest.mark.parametrize("batch", traffic.ADVERSARIAL_BATCHES)
 def test_backends_adversarial_batch_shapes(batch):
     """Batches below/off/above the Pallas block sizes (incl. 257 > the
-    default 256 batch tile, forcing a multi-step grid + padded tail)."""
+    default 256 batch tile, forcing a multi-step grid + padded tail).
+    The shapes come from tests/traffic.py — the shared adversarial set
+    that also seeds the fleet traffic generator."""
     cfg = paper_tasks.reduced("nid")
     compiled = _compiled(cfg, seed=2)
     x = _x(cfg, batch, seed=3)

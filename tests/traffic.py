@@ -1,0 +1,92 @@
+"""Reusable ragged-traffic generator for serving tests and benchmarks.
+
+Before the fleet PR the adversarial batch shapes lived as one-off literals
+scattered across test files (``(1, 8, 33, 257)`` in test_backends.py,
+``(1, 33, 257)`` in test_sharded_backends.py).  This module is the single
+source of truth (seeding ROADMAP item 5's traffic-replay tier):
+
+  * :data:`ADVERSARIAL_BATCHES` — the canonical shapes: below, off, and
+    above the kernel/shard block sizes (257 > the default 256 tile forces
+    a multi-step grid + padded tail; 1 is the latency-path degenerate).
+  * :func:`ragged_trace` — a deterministic multi-tenant arrival trace:
+    bursty (a tenant fires several events back-to-back), ragged (batch
+    sizes drawn from the adversarial set plus jitter), with idle gaps.
+
+Pure numpy + stdlib on purpose: importable from tests (pytest puts this
+directory on ``sys.path``) and from ``benchmarks/fleet_serving.py`` (which
+inserts it explicitly) without dragging jax in.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+# below / off / above every kernel block and shard size in the repo
+ADVERSARIAL_BATCHES = (1, 8, 33, 257)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficEvent:
+    """One arrival: ``batch`` rows for ``model_id`` after ``gap_ticks``
+    idle fleet ticks (0 = back-to-back with the previous event)."""
+
+    model_id: str
+    batch: int
+    gap_ticks: int = 0
+
+
+def ragged_trace(model_ids: Sequence[str], *, n_events: int = 40,
+                 seed: int = 0, batches: Sequence[int] = ADVERSARIAL_BATCHES,
+                 burst_prob: float = 0.35, max_burst: int = 4,
+                 gap_prob: float = 0.2, max_gap: int = 3,
+                 jitter: int = 5) -> List[TrafficEvent]:
+    """Deterministic bursty multi-tenant arrival trace.
+
+    Each step picks a tenant uniformly; with probability ``burst_prob`` it
+    fires a burst of up to ``max_burst`` consecutive events (the shape
+    that starves naive round-robin schedulers).  Batch sizes draw from
+    ``batches`` with ±``jitter`` rows of ragged noise (floored at 1), and
+    events carry idle-gap ticks with probability ``gap_prob``.  Same
+    (arguments, seed) -> identical trace, always.
+    """
+    if not model_ids:
+        raise ValueError("model_ids must be non-empty")
+    rng = np.random.default_rng(seed)
+    trace: List[TrafficEvent] = []
+    while len(trace) < n_events:
+        mid = model_ids[int(rng.integers(len(model_ids)))]
+        burst = (int(rng.integers(2, max_burst + 1))
+                 if rng.random() < burst_prob else 1)
+        for _ in range(min(burst, n_events - len(trace))):
+            batch = int(batches[int(rng.integers(len(batches)))])
+            batch = max(1, batch + int(rng.integers(-jitter, jitter + 1)))
+            gap = (int(rng.integers(1, max_gap + 1))
+                   if rng.random() < gap_prob else 0)
+            trace.append(TrafficEvent(model_id=mid, batch=batch,
+                                      gap_ticks=gap))
+    return trace
+
+
+def rows_per_model(trace: Sequence[TrafficEvent]) -> Dict[str, int]:
+    """Total rows each tenant receives over the trace."""
+    totals: Dict[str, int] = {}
+    for ev in trace:
+        totals[ev.model_id] = totals.get(ev.model_id, 0) + ev.batch
+    return totals
+
+
+def total_rows(trace: Sequence[TrafficEvent]) -> int:
+    return sum(ev.batch for ev in trace)
+
+
+def make_inputs(trace: Sequence[TrafficEvent], in_features: Dict[str, int],
+                *, seed: int = 0) -> List[np.ndarray]:
+    """Deterministic float32 input rows for every event (one array per
+    event, shaped ``[event.batch, in_features[event.model_id]]``)."""
+    rng = np.random.default_rng(seed)
+    return [rng.uniform(-1.0, 1.0,
+                        (ev.batch, in_features[ev.model_id])
+                        ).astype(np.float32)
+            for ev in trace]
