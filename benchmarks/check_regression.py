@@ -18,6 +18,12 @@ its own metric extraction, baseline file, tolerance, and comparison mode:
     bit-identity, zero hot-swap drops/wrong answers, corrupted deploys
     rejected, admission actually shedding).  Runs in the CI ``perf-gate``
     job alongside ``throughput``.
+  * ``stream`` — stateful stream serving cells from ``BENCH_stream.json``
+    vs ``experiments/STREAM_baseline.json``; RELATIVE tolerance (default
+    ±35%), plus the streaming contract as hard violations (per-stream
+    bit-identity on every backend, zero dropped steps, stateful hot swaps
+    with zero wrong answers and the recorded migration mode).  Runs in
+    the CI ``perf-gate`` job alongside ``throughput`` and ``fleet``.
 
 Shared gate semantics (both suites):
 
@@ -35,7 +41,7 @@ tracks the tip of the default branch (and the runner generation CI
 actually uses).
 
     PYTHONPATH=src python -m benchmarks.check_regression
-        [--suite throughput|accuracy|fleet|all] [--refresh]
+        [--suite throughput|accuracy|fleet|stream|all] [--refresh]
         [--tolerance T] [--baseline PATH]
 """
 from __future__ import annotations
@@ -51,6 +57,7 @@ EXPERIMENTS = os.path.join(os.path.dirname(__file__), "..", "experiments")
 BASELINE = os.path.join(EXPERIMENTS, "BENCH_baseline.json")
 ACC_BASELINE = os.path.join(EXPERIMENTS, "ACC_baseline.json")
 FLEET_BASELINE = os.path.join(EXPERIMENTS, "FLEET_baseline.json")
+STREAM_BASELINE = os.path.join(EXPERIMENTS, "STREAM_baseline.json")
 SCHEMA_VERSION = 1
 
 Metrics = Dict[str, Tuple[float, bool]]  # name -> (value, higher_is_better)
@@ -168,6 +175,11 @@ def extract_fleet(experiments: str = EXPERIMENTS
             violations.append(
                 f"fleet/{t['model_id']}: fleet-served codes not "
                 "bit-identical to the artifact's reference")
+        # per-tenant tail latency is a gated metric, not a side note: a
+        # scheduler change that doubles p99 while keeping throughput flat
+        # must fail CI, not rot until someone reads the JSON
+        metrics[f"fleet/{t['model_id']}/p99_request_us"] = (
+            t["p99_request_us"], False)
     hs = doc["hot_swap"]
     if not hs["good_deploy_ok"]:
         violations.append("fleet/hot_swap: good deploy did not land")
@@ -187,6 +199,28 @@ def extract_fleet(experiments: str = EXPERIMENTS
         violations.append(
             "fleet/admission: over-budget burst shed nothing")
     return metrics, violations
+
+
+def extract_stream(experiments: str = EXPERIMENTS
+                   ) -> Tuple[Metrics, List[str]]:
+    """Flatten the stateful stream sweep -> (metrics, violations).
+
+    Per scale point: steps/s (higher is better) and the p99 per-step
+    latency (lower is better — a router change that doubles the stream
+    tail while throughput stays flat must fail CI).  The streaming
+    CONTRACT (bit-identity per backend, zero drops, clean stateful
+    swaps) is delegated to ``stream_serving.contract_violations`` so the
+    benchmark's own exit gate and this suite can never disagree.
+    """
+    from benchmarks import stream_serving
+
+    metrics: Metrics = {}
+    doc = _load(os.path.join(experiments, "BENCH_stream.json"))
+    for p in doc["scaling"]:
+        stem = f"stream/scale{p['streams']}"
+        metrics[f"{stem}/steps_per_s"] = (p["steps_per_s"], True)
+        metrics[f"{stem}/p99_step_us"] = (p["p99_step_us"], False)
+    return metrics, stream_serving.contract_violations(doc)
 
 
 # ---------------------------------------------------------------------------
@@ -211,6 +245,9 @@ SUITES: Dict[str, Suite] = {
     # engine timing, so their run-to-run wobble compounds
     "fleet": Suite("fleet", extract_fleet, FLEET_BASELINE,
                    tolerance=0.35, mode="relative"),
+    # same width as fleet: stream cells stack router + engine timing
+    "stream": Suite("stream", extract_stream, STREAM_BASELINE,
+                    tolerance=0.35, mode="relative"),
 }
 
 

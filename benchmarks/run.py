@@ -131,6 +131,19 @@ def bench_search(rows: list, fast: bool) -> None:
     rows.append(("assembly_search_sweep", (time.time() - t0) * 1e6, derived))
 
 
+def bench_stream(rows: list, fast: bool) -> None:
+    """Stateful stream serving sweep (writes BENCH_stream.json)."""
+    from benchmarks import stream_serving
+    t0 = time.time()
+    res = stream_serving.sweep(
+        **(stream_serving.FAST_KW if fast else {}))
+    stream_serving.write_results(res)
+    peak = max(res["scaling"], key=lambda p: p["streams"])
+    rows.append(("stream_serving_sweep", (time.time() - t0) * 1e6,
+                 f"{peak['streams']} streams {peak['steps_per_s']} steps/s "
+                 f"p99 {peak['p99_step_us']}us"))
+
+
 def bench_tables(rows: list, fast: bool) -> dict:
     from benchmarks import paper_tables
 
@@ -171,7 +184,7 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--only", default=None,
                     choices=["kernels", "backends", "throughput", "tables",
-                             "roofline", "search", "fleet"])
+                             "roofline", "search", "fleet", "stream"])
     args = ap.parse_args()
 
     rows: list = []
@@ -186,6 +199,8 @@ def main() -> None:
         bench_search(rows, args.fast)
     if args.only in (None, "fleet"):
         bench_fleet(rows, args.fast)
+    if args.only in (None, "stream"):
+        bench_stream(rows, args.fast)
     if args.only in (None, "tables"):
         outputs.update(bench_tables(rows, args.fast))
     if args.only in (None, "roofline"):

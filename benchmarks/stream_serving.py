@@ -1,0 +1,365 @@
+"""Stateful stream serving sweep -> ``experiments/BENCH_stream.json``.
+
+The PR-7 acceptance benchmark (DESIGN.md §10): stateful streams over an
+assembled-LUT recurrent cell, served by ONE cell-mode engine behind the
+fleet's stream lane.
+
+  * **concurrent-stream scaling** (the headline): N streams open at once,
+    each fed ``t_steps`` recurrent steps; the router packs steps of
+    different streams into full blocks, so concurrency — not per-stream
+    depth — keeps the fixed-shape block function busy.  Reported per
+    scale point: steps/s, per-step latency p50/p99 (submit -> retire),
+    dispatched blocks / padded rows, and the live state footprint in
+    bytes.  The full sweep must reach >= 1000 concurrent streams with
+    every stream's served codes bit-identical to the offline
+    full-sequence scan.
+  * **churn bit-identity, per backend**: a churned trace (streams open,
+    burst-feed, and close mid-trace — ``tests/traffic.py``) replayed per
+    registered lookup backend; every stream's full sequence must match
+    ``predict_sequence`` on that backend bit for bit.
+  * **stateful hot swap**: a mid-flight deploy with an identical
+    in-boundary carries live state verbatim (``carried``); a deploy whose
+    input scale moved re-quantizes every live state (``requantized``).
+    Both must drop zero steps and serve zero wrong answers.
+
+CPU numbers are structural (same caveat as lut_throughput); the gate in
+``check_regression.py --suite stream`` compares them cell-by-cell.
+
+    PYTHONPATH=src python -m benchmarks.stream_serving [--fast] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import time
+
+# tests/traffic.py is the shared trace generator (pure numpy, no package):
+# pytest sees it via rootdir, benchmarks via this explicit insert
+TESTS = os.path.join(os.path.dirname(__file__), "..", "tests")
+if TESTS not in sys.path:
+    sys.path.insert(0, TESTS)
+import traffic  # noqa: E402
+
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                           "BENCH_stream.json")
+SCHEMA_VERSION = 1
+# the one definition of "smoke-sized" (CI perf-gate and run.py --fast):
+# a tiny cell + small stream counts keep it CPU-cheap; the >= 1000
+# concurrent-stream floor only applies to full runs
+FAST_KW = dict(scales=(16, 64), t_steps=4, reps=2, block=64,
+               churn_events=24, swap_streams=8, full=False)
+
+
+def write_results(results: dict, out: str = DEFAULT_OUT) -> str:
+    out = os.path.abspath(out)
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(results, f, indent=2)
+    return out
+
+
+def _make_cell(seed: int, full: bool):
+    import jax
+
+    from repro.configs import paper_tasks
+    from repro.core.assemble import AssembleConfig, LayerSpec
+    from repro.stream import StreamCellConfig, compile_cell
+    from repro.stream import cell as cell_mod
+
+    # the full sweep streams the SeqMNIST task cell (the paper-aligned
+    # sequential architecture); the smoke sweep uses a reduced cell so the
+    # CI perf-gate stays cheap
+    if full:
+        cc = paper_tasks.stream_task_config("seqmnist_reduced")
+        task = "seqmnist_reduced"
+    else:
+        net = AssembleConfig(
+            in_features=6, input_bits=2, input_signed=False,
+            layers=(LayerSpec(12, 3, 2, False), LayerSpec(4, 3, 2, True)),
+            subnet_width=8, subnet_depth=2, skip_step=2)
+        cc = StreamCellConfig(net=net, n_in=4, n_state=2)
+        task = "reduced"
+    params = cell_mod.init(jax.random.PRNGKey(seed), cc)
+    return task, cc, params, compile_cell(params, cc)
+
+
+def _stream_batch(n: int, t: int, n_in: int, seed: int):
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    return rng.uniform(0.0, 1.0, (n, t, n_in)).astype(np.float32)
+
+
+def _replay_scale(comp, xs, block: int, depth: int):
+    """Open one stream per row of ``xs [N, T, n_in]``, feed its whole
+    sequence, pump to idle.  Returns (elapsed_s, fleet)."""
+    from repro.serve import LUTFleet
+
+    fleet = LUTFleet(block=block, depth=depth)
+    fleet.register("cell", comp)
+    t0 = time.perf_counter()
+    for sid in range(len(xs)):
+        fleet.open_stream("cell", sid)
+        fleet.submit_stream("cell", sid, xs[sid])
+    fleet.pump()
+    return time.perf_counter() - t0, fleet
+
+
+def _scaling_sweep(comp, scales, t_steps: int, block: int, depth: int,
+                   reps: int, seed: int) -> list:
+    import numpy as np
+
+    points = []
+    for n in scales:
+        xs = _stream_batch(n, t_steps, comp.cell.n_in, seed + n)
+        # warm replay (jit compile out of the timed region) doubles as the
+        # bit-identity check: every stream vs ONE batched offline scan
+        _, fleet = _replay_scale(comp, xs, block, depth)
+        ref = np.asarray(comp.predict_sequence(xs)[0])
+        lane = fleet._lanes["cell"]
+        identical = all(
+            np.array_equal(lane.sessions[sid].codes(), ref[sid])
+            for sid in range(n))
+        best_dt, best_fleet = None, None
+        for _ in range(max(reps, 1)):
+            dt, fl = _replay_scale(comp, xs, block, depth)
+            if best_dt is None or dt < best_dt:
+                best_dt, best_fleet = dt, fl
+        s = best_fleet.summary("cell")
+        lane = best_fleet._lanes["cell"]
+        points.append({
+            "streams": n, "steps": n * t_steps,
+            "steps_per_s": round(n * t_steps / best_dt, 1),
+            "p50_step_us": s["p50_request_us"],
+            "p99_step_us": s["p99_request_us"],
+            "blocks": s["ticks"], "rows_padded": s["rows_padded"],
+            "state_bytes": lane.store.nbytes,
+            "bit_identical": identical,
+        })
+    return points
+
+
+def _churn_identity(comp, n_events: int, block: int, depth: int,
+                    seed: int) -> dict:
+    """Churned stream traffic per registered backend: open/burst/close
+    mid-trace, then every stream's full sequence vs the offline scan."""
+    import numpy as np
+
+    from repro import backends
+    from repro.serve import LUTFleet
+
+    trace = traffic.stream_churn_trace(["cell"], n_events=n_events,
+                                       seed=seed)
+    inputs = traffic.make_stream_inputs(trace, {"cell": comp.cell.n_in},
+                                        seed=seed + 1)
+    seqs = traffic.stream_sequences(trace, inputs)
+    per_backend = {}
+    for be in backends.available():
+        fleet = LUTFleet(block=block, depth=depth)
+        fleet.register("cell", comp, backend=be)
+        for ev, x in zip(trace, inputs):
+            if ev.action == "open":
+                fleet.open_stream("cell", ev.stream_id)
+            elif ev.action == "feed":
+                fleet.submit_stream("cell", ev.stream_id, x)
+            else:
+                fleet.close_stream("cell", ev.stream_id)
+            for _ in range(ev.gap_ticks):
+                fleet.tick()
+        fleet.pump()
+        lane = fleet._lanes["cell"]
+        identical = True
+        for (_, sid), xs in seqs.items():
+            ref = np.asarray(comp.predict_sequence(xs[None],
+                                                   backend=be)[0])[0]
+            identical &= bool(np.array_equal(lane.sessions[sid].codes(),
+                                             ref))
+        s = fleet.summary("cell")
+        per_backend[be] = {
+            "bit_identical": identical,
+            "completed": s["completed"],
+            "dropped": s["requests"] - s["completed"],
+        }
+    return {"events": len(trace), "streams": len(seqs),
+            "steps": int(sum(len(x) for x in seqs.values())),
+            "per_backend": per_backend}
+
+
+def _hot_swap_carried(comp, n_streams: int, t_steps: int, block: int,
+                      depth: int, seed: int) -> dict:
+    """Deploy v2 (identical tables, identical in-boundary) while steps are
+    IN FLIGHT: live state carries verbatim, and every stream's complete
+    sequence still matches the offline scan."""
+    import numpy as np
+
+    from repro.serve import LUTFleet
+
+    xs = _stream_batch(n_streams, t_steps, comp.cell.n_in, seed)
+    half = t_steps // 2
+    fleet = LUTFleet(block=block, depth=depth)
+    fleet.register("cell", comp)
+    for sid in range(n_streams):
+        fleet.open_stream("cell", sid)
+        fleet.submit_stream("cell", sid, xs[sid, :half])
+    fleet.tick()                                  # steps now in flight
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "v2.npz")
+        comp.save(path)
+        event = fleet.deploy("cell", path)
+    for sid in range(n_streams):
+        fleet.submit_stream("cell", sid, xs[sid, half:])
+    fleet.pump()
+
+    ref = np.asarray(comp.predict_sequence(xs)[0])
+    lane = fleet._lanes["cell"]
+    wrong = sum(
+        int((lane.sessions[sid].codes() != ref[sid]).any(axis=-1).sum())
+        for sid in range(n_streams))
+    s = fleet.summary("cell")
+    return {
+        "streams": n_streams, "requests": s["requests"],
+        "deploy_ok": bool(event.ok), "to_version": event.to_version,
+        "state_migration": s["swap_history"][-1]["state_migration"],
+        "dropped": s["requests"] - s["completed"], "wrong": wrong,
+    }
+
+
+def _hot_swap_requantized(comp, params, n_streams: int, t_steps: int,
+                          block: int, depth: int, seed: int) -> dict:
+    """Deploy a v2 whose input scale moved: every live stream's state is
+    re-quantized onto the new boundary, and post-swap serving matches the
+    new cell's own recurrence from the migrated state."""
+    import jax
+    import numpy as np
+
+    from repro.serve import LUTFleet
+    from repro.stream import compile_cell, migrate_state_codes
+
+    params2 = dict(params, in_q={
+        "log_scale": jax.numpy.asarray(params["in_q"]["log_scale"]) + 0.1})
+    comp2 = compile_cell(params2, comp.cell)
+
+    xs = _stream_batch(n_streams, t_steps, comp.cell.n_in, seed)
+    half = t_steps // 2
+    fleet = LUTFleet(block=block, depth=depth)
+    fleet.register("cell", comp)
+    for sid in range(n_streams):
+        fleet.open_stream("cell", sid)
+        fleet.submit_stream("cell", sid, xs[sid, :half])
+    fleet.pump()                        # drain: the v1/v2 boundary is exact
+    lane = fleet._lanes["cell"]
+    s_before = np.stack([lane.store.get(sid) for sid in range(n_streams)])
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "v2.npz")
+        comp2.save(path)
+        event = fleet.deploy("cell", path)
+    for sid in range(n_streams):
+        fleet.submit_stream("cell", sid, xs[sid, half:])
+    fleet.pump()
+
+    s_mig = np.asarray(migrate_state_codes(comp, comp2, s_before))
+    expect = np.asarray(comp2.predict_sequence(xs[:, half:],
+                                               s0_codes=s_mig)[0])
+    wrong = sum(
+        int((lane.sessions[sid].codes()[half:] != expect[sid])
+            .any(axis=-1).sum())
+        for sid in range(n_streams))
+    s = fleet.summary("cell")
+    return {
+        "streams": n_streams, "requests": s["requests"],
+        "deploy_ok": bool(event.ok), "to_version": event.to_version,
+        "state_migration": s["swap_history"][-1]["state_migration"],
+        "dropped": s["requests"] - s["completed"], "wrong": wrong,
+    }
+
+
+def sweep(scales=(64, 256, 1024), t_steps: int = 8, block: int = 256,
+          depth: int = 2, reps: int = 5, churn_events: int = 60,
+          swap_streams: int = 32, seed: int = 0, full: bool = True) -> dict:
+    task, cc, params, comp = _make_cell(seed, full)
+    results = {
+        "schema_version": SCHEMA_VERSION,
+        "cell": {"task": task, "n_in": cc.n_in, "n_state": cc.n_state,
+                 "n_out": cc.n_out, "layers": len(cc.net.layers)},
+        "block": block, "depth": depth, "t_steps": t_steps,
+        "full_size": full,
+        "scaling": _scaling_sweep(comp, scales, t_steps, block, depth,
+                                  reps, seed + 1),
+        "churn": _churn_identity(comp, churn_events, block, depth,
+                                 seed + 2),
+        "hot_swap": {
+            "carried": _hot_swap_carried(
+                comp, swap_streams, max(t_steps, 4), block, depth,
+                seed + 3),
+            "requantized": _hot_swap_requantized(
+                comp, params, swap_streams, max(t_steps, 4), block, depth,
+                seed + 4),
+        },
+    }
+    return results
+
+
+def contract_violations(results: dict) -> list:
+    """The streaming serving contract, shared with check_regression."""
+    bad = []
+    for p in results["scaling"]:
+        if not p["bit_identical"]:
+            bad.append(f"scale {p['streams']}: streamed codes not "
+                       "bit-identical to the offline scan")
+    for be, r in results["churn"]["per_backend"].items():
+        if not r["bit_identical"]:
+            bad.append(f"churn[{be}]: streamed codes not bit-identical")
+        if r["dropped"]:
+            bad.append(f"churn[{be}]: {r['dropped']} steps dropped")
+    for mode, hs in results["hot_swap"].items():
+        if not hs["deploy_ok"]:
+            bad.append(f"hot_swap[{mode}]: deploy did not land")
+        if hs["state_migration"] != mode:
+            bad.append(f"hot_swap[{mode}]: migration recorded as "
+                       f"{hs['state_migration']!r}")
+        if hs["dropped"]:
+            bad.append(f"hot_swap[{mode}]: {hs['dropped']} steps dropped")
+        if hs["wrong"]:
+            bad.append(f"hot_swap[{mode}]: {hs['wrong']} wrong answers")
+    if results["full_size"]:
+        peak = max(p["streams"] for p in results["scaling"])
+        if peak < 1000:
+            bad.append(f"full sweep peaked at {peak} concurrent streams "
+                       "(< 1000)")
+    return bad
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smoke-sized sweep (CI perf-gate)")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args()
+
+    results = sweep(**(FAST_KW if args.fast else {}))
+    out = write_results(results, args.out)
+
+    print("streams,steps_per_s,p50_step_us,p99_step_us,blocks,state_bytes")
+    for p in results["scaling"]:
+        print(f"{p['streams']},{p['steps_per_s']},{p['p50_step_us']},"
+              f"{p['p99_step_us']},{p['blocks']},{p['state_bytes']}")
+    ch = results["churn"]
+    for be, r in ch["per_backend"].items():
+        print(f"churn[{be}] streams={ch['streams']} steps={ch['steps']} "
+              f"bit_identical={r['bit_identical']} dropped={r['dropped']}")
+    for mode, hs in results["hot_swap"].items():
+        print(f"hot_swap[{mode}] migration={hs['state_migration']} "
+              f"dropped={hs['dropped']} wrong={hs['wrong']} "
+              f"requests={hs['requests']}")
+
+    bad = contract_violations(results)
+    if bad:
+        raise SystemExit("stream serving contract violated:\n  "
+                         + "\n  ".join(bad))
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -178,9 +178,11 @@ def gather_layer_inputs(cfg: AssembleConfig, params_l: dict, l: int,
 
 
 def apply(params: dict, cfg: AssembleConfig, x: Array, *,
-          training: bool = False, dense: bool = False) -> Tuple[Array, dict]:
+          training: bool = False, dense: bool = False,
+          bn_batch_stats: bool = True) -> Tuple[Array, dict]:
     """Forward pass. x: [batch, in_features] -> (logits [batch, n_out], new
-    params with refreshed BN statistics)."""
+    params with refreshed BN statistics).  ``bn_batch_stats=False`` trains
+    with frozen-stats BN — the recurrent-cell mode (``repro.stream``)."""
     in_spec = cfg.input_quant_spec()
     h = quant.fake_quant(params["in_q"], in_spec, x)
     new_layers = []
@@ -189,7 +191,8 @@ def apply(params: dict, cfg: AssembleConfig, x: Array, *,
         xi = gather_layer_inputs(cfg, pl, l, h, dense=dense)
         out, new_sn = subnet.apply_subnet(
             pl["subnet"], cfg.subnet_spec(l, dense=dense), xi,
-            activation=cfg.has_activation(l), training=training)
+            activation=cfg.has_activation(l), training=training,
+            bn_batch_stats=bn_batch_stats)
         out = out[..., 0]  # out_dim == 1
         h = quant.fake_quant(pl["out_q"], cfg.quant_spec(l), out)
         nl = dict(pl)

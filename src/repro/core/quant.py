@@ -99,6 +99,21 @@ def dequantize_codes(params: dict, spec: QuantSpec, codes: Array) -> Array:
     return (codes.astype(jnp.float32) + spec.qmin) * s
 
 
+def recode(params_from: dict, spec_from: QuantSpec,
+           params_to: dict, spec_to: QuantSpec, codes: Array) -> Array:
+    """Re-quantize integer *codes* from one boundary to another.
+
+    Dequantizes through the source scale and hard-quantizes through the
+    target scale: exactly ``quantize_codes(to, dequantize_codes(from, c))``
+    but kept as one named operation because it IS the recurrent state edge
+    of a streamed LUT cell (out-boundary codes re-enter the in-boundary)
+    and the migration map for stateful hot swaps.  Identity when both
+    boundaries share (bits, signed, log_scale).
+    """
+    return quantize_codes(params_to, spec_to,
+                          dequantize_codes(params_from, spec_from, codes))
+
+
 def pack_address(codes: Array, bits: int, fan_in: int) -> Array:
     """Pack ``fan_in`` codes (last axis) of ``bits`` bits into one address.
 
@@ -141,9 +156,17 @@ def init_batchnorm(width: int) -> dict:
 
 
 def batchnorm_apply(params: dict, x: Array, *, training: bool,
-                    momentum: float = 0.9, eps: float = 1e-5
-                    ) -> Tuple[Array, dict]:
-    """BatchNorm over all leading axes. Returns (y, new_params)."""
+                    momentum: float = 0.9, eps: float = 1e-5,
+                    use_batch_stats: bool = True) -> Tuple[Array, dict]:
+    """BatchNorm over all leading axes. Returns (y, new_params).
+
+    ``use_batch_stats=False`` (training only) normalizes with the RUNNING
+    statistics while still refreshing the EMA — frozen-stats BN.  Recurrent
+    cells train this way: per-timestep batch statistics differ (the state
+    distribution at t=0 is degenerate), but the folded cell bakes ONE
+    (mean, var) pair into its tables, so normalizing each scan step with
+    the shared running stats is what keeps the training forward an image
+    of the deployed recurrence (DESIGN.md §10)."""
     if training:
         axes = tuple(range(x.ndim - 1))
         mean = jnp.mean(x, axis=axes)
@@ -151,6 +174,8 @@ def batchnorm_apply(params: dict, x: Array, *, training: bool,
         new = dict(params)
         new["mean"] = momentum * params["mean"] + (1 - momentum) * jax.lax.stop_gradient(mean)
         new["var"] = momentum * params["var"] + (1 - momentum) * jax.lax.stop_gradient(var)
+        if not use_batch_stats:
+            mean, var = params["mean"], params["var"]
     else:
         mean, var = params["mean"], params["var"]
         new = params

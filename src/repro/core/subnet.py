@@ -127,12 +127,14 @@ def apply_subnet(
     activation: bool,
     training: bool = False,
     act_fn=jax.nn.relu,
+    bn_batch_stats: bool = True,
 ) -> Tuple[Array, dict]:
     """Run the batched subnets.
 
     x: [batch, units, F] (dequantized inputs).
     Returns ([batch, units, out_dim] pre-quantization outputs, new params
-    with updated BN statistics when ``training``).
+    with updated BN statistics when ``training``).  ``bn_batch_stats=False``
+    trains with frozen-stats BN (see ``quant.batchnorm_apply``).
 
     ``activation`` applies ``act_fn`` to the *output*; hidden layers always
     use ``act_fn``.  Inner tree layers pass ``activation=False`` so the skip
@@ -159,12 +161,14 @@ def apply_subnet(
     out = h
     if spec.out_dim == 1:
         y, new_bn = quant.batchnorm_apply(params["bn"], out[..., 0],
-                                          training=training)
+                                          training=training,
+                                          use_batch_stats=bn_batch_stats)
         out = y[..., None]
     else:
         mean_in = out.mean(axis=-1)
         y, new_bn = quant.batchnorm_apply(params["bn"], mean_in,
-                                          training=training)
+                                          training=training,
+                                          use_batch_stats=bn_batch_stats)
         out = out + (y - mean_in)[..., None]
     new_params = dict(params)
     new_params["bn"] = new_bn

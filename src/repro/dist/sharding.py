@@ -71,8 +71,12 @@ def _cache_specs_from_tree(tree: Any, mesh: Mesh, batch: int) -> Any:
     shard_batch = dp and batch % dp_count == 0 and batch >= dp_count
 
     def leaf_spec(leaf):
-        # cache layout is [L, B, ...]; scalars/vectors stay replicated
-        if shard_batch and leaf.ndim >= 2 and leaf.shape[1] == batch:
+        # cache layout is [L, B, ...]; scalars/vectors stay replicated.
+        # Floating leaves only: int bookkeeping (pos [B], slot_pos [B, W])
+        # is tiny and its batch axis is axis 0, not 1 — the structural
+        # shape test would misfire when W == batch.
+        if (shard_batch and leaf.ndim >= 2 and leaf.shape[1] == batch
+                and jnp.issubdtype(leaf.dtype, jnp.floating)):
             return P(None, dp)
         return P()
 

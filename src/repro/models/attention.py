@@ -90,8 +90,14 @@ def _project_qkv(pl_: dict, spec: AttnSpec, x: Array, positions: Array,
         q = layers.rms_norm(q, pl_["q_norm"])
         k = layers.rms_norm(k, pl_["k_norm"])
     if spec.rope and freqs is not None:
-        q = layers.apply_rope(q, positions[None, None, None], freqs)
-        k = layers.apply_rope(k, positions[None, None], freqs)
+        if positions.ndim == 2:     # per-row absolute positions [B, S]
+            qpos = positions[:, None, None, :]
+            kpos = positions[:, None, :]
+        else:                       # shared positions [S]
+            qpos = positions[None, None, None]
+            kpos = positions[None, None]
+        q = layers.apply_rope(q, qpos, freqs)
+        k = layers.apply_rope(k, kpos, freqs)
         q = constrain(q, "batch", "heads", None, "act_seq", None)
         k = constrain(k, "batch", "heads", None, None)
     return q, k, v
@@ -251,25 +257,40 @@ def attention_prefill(pl_: dict, spec: AttnSpec, x: Array, positions: Array,
 def attention_decode(pl_: dict, spec: AttnSpec, x: Array, pos: Array,
                      freqs: Optional[Array], cache: KVCache,
                      slot_positions: Array) -> Tuple[Array, KVCache]:
-    """One-token decode. x: [B,1,D]; pos: scalar int32 (absolute position);
-    slot_positions: [W] absolute position stored in each ring slot (after
-    this token's update)."""
-    b = x.shape[0]
-    q, k, v = _project_qkv(pl_, spec, x, pos[None], freqs)
+    """One-token decode. x: [B,1,D]; pos: [B] int32 absolute positions
+    (each batch row at its own decode position — the continuous-batching
+    engine packs requests with different prompt lengths), or a scalar for
+    the lock-step path (whisper); slot_positions: [B, W] ([W] when pos is
+    scalar) absolute position stored in each ring slot (after this
+    token's update)."""
     w = cache.k.shape[2]
-    slot = pos % w
-    k_new = jax.lax.dynamic_update_index_in_dim(cache.k, k[:, :, 0], slot,
-                                                axis=2)
-    v_new = jax.lax.dynamic_update_index_in_dim(cache.v, v[:, :, 0], slot,
-                                                axis=2)
+    if pos.ndim:                    # per-row positions [B]
+        q, k, v = _project_qkv(pl_, spec, x, pos[:, None], freqs)
+        # per-row ring-slot scatter: row b writes its own slot pos[b] % w
+        hit = (jnp.arange(w, dtype=jnp.int32)[None, :]
+               == (pos % w)[:, None])                       # [B, W]
+        k_new = jnp.where(hit[:, None, :, None], k[:, :, :1], cache.k)
+        v_new = jnp.where(hit[:, None, :, None], v[:, :, :1], cache.v)
+        pos_q = pos[:, None]                                # [B, 1] vs [B, W]
+    else:
+        q, k, v = _project_qkv(pl_, spec, x, pos[None], freqs)
+        slot = pos % w
+        k_new = jax.lax.dynamic_update_index_in_dim(cache.k, k[:, :, 0],
+                                                    slot, axis=2)
+        v_new = jax.lax.dynamic_update_index_in_dim(cache.v, v[:, :, 0],
+                                                    slot, axis=2)
+        pos_q = pos
     scale = spec.head_dim ** -0.5
     s = jnp.einsum("bhgqd,bhkd->bhgqk", q.astype(jnp.float32) * scale,
                    k_new.astype(jnp.float32))
     valid = slot_positions >= 0
-    mask = valid & (slot_positions <= pos)
+    mask = valid & (slot_positions <= pos_q)
     if spec.window is not None:
-        mask = mask & (slot_positions > pos - spec.window)
-    s = jnp.where(mask[None, None, None, None, :], s, -1e30)
+        mask = mask & (slot_positions > pos_q - spec.window)
+    if mask.ndim == 2:              # [B, W] -> [B, 1, 1, 1, W]
+        s = jnp.where(mask[:, None, None, None, :], s, -1e30)
+    else:
+        s = jnp.where(mask[None, None, None, None, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v_new.astype(jnp.float32))
     o = _merge_heads(o.astype(x.dtype))

@@ -280,14 +280,16 @@ def init_decode_cache(params: dict, cfg: ArchConfig, batch: int,
     """Zeroed decode cache pytree (used for ShapeDtypeStruct specs too)."""
     L = cfg.n_layers
     dt = compute_dtype(cfg)
-    cache: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    # pos / slot_pos are per batch row: slots decode at independent
+    # positions (requests with different prompt lengths share a batch)
+    cache: Dict[str, Any] = {"pos": jnp.zeros((batch,), jnp.int32)}
     if cfg.family != "ssm":
         aspec = attn_spec(cfg)
         w = attention.cache_length(aspec, context)
         shape = (L, batch, cfg.n_kv_heads, w, cfg.head_dim_)
         cache["kv_k"] = jnp.zeros(shape, dt)
         cache["kv_v"] = jnp.zeros(shape, dt)
-        cache["slot_pos"] = jnp.full((w,), -1, jnp.int32)
+        cache["slot_pos"] = jnp.full((batch, w), -1, jnp.int32)
     if cfg.family == "hybrid":
         sspec = ssm_spec(cfg)
         cache["ssm_h"] = jnp.zeros((L, batch, sspec.d_inner, sspec.d_state),
@@ -309,7 +311,7 @@ def prefill(params: dict, cfg: ArchConfig, tokens: Array, context: int
     b, s = tokens.shape
     x = _embed(params, cfg, tokens)
     positions = jnp.arange(s, dtype=jnp.int32)
-    cache = {"pos": jnp.asarray(s, jnp.int32)}
+    cache = {"pos": jnp.full((b,), s, jnp.int32)}
     if cfg.family == "ssm":
         state0 = rwkv.init_state(rwkv_spec(cfg), b, compute_dtype(cfg))
 
@@ -335,7 +337,8 @@ def prefill(params: dict, cfg: ArchConfig, tokens: Array, context: int
         cache["kv_k"], cache["kv_v"] = kv.k, kv.v
         aspec = attn_spec(cfg)
         w = attention.cache_length(aspec, context)
-        cache["slot_pos"] = attention.cache_positions(s, w)
+        cache["slot_pos"] = jnp.broadcast_to(
+            attention.cache_positions(s, w), (b, w))
         if cfg.family == "hybrid":
             sst = extras[1]
             cache["ssm_h"], cache["ssm_conv"] = sst.h, sst.conv
@@ -345,7 +348,11 @@ def prefill(params: dict, cfg: ArchConfig, tokens: Array, context: int
 
 def decode_step(params: dict, cfg: ArchConfig, cache: dict, tokens: Array
                 ) -> Tuple[Array, dict]:
-    """tokens [B, 1] -> (logits [B, vocab_p], updated cache)."""
+    """tokens [B, 1] -> (logits [B, vocab_p], updated cache).
+
+    ``cache["pos"]`` is a [B] vector: every batch row decodes at its own
+    absolute position, so a continuous-batching engine can pack requests
+    with different prompt lengths into one step."""
     b = tokens.shape[0]
     pos = cache["pos"]
     x = _embed(params, cfg, tokens)
@@ -364,8 +371,10 @@ def decode_step(params: dict, cfg: ArchConfig, cache: dict, tokens: Array
     else:
         freqs = layers.rope_freqs(cfg.head_dim_, cfg.rope_theta)
         w = cache["kv_k"].shape[3]
-        slot = pos % w
-        slot_pos = cache["slot_pos"].at[slot].set(pos)
+        # per-row ring-slot update: row b stamps its own slot pos[b] % w
+        slot_pos = jnp.where(
+            jnp.arange(w, dtype=jnp.int32)[None, :] == (pos % w)[:, None],
+            pos[:, None], cache["slot_pos"])
 
         if cfg.family == "hybrid":
             def body(x, xs):

@@ -209,3 +209,57 @@ def rwkv_block(pl_: dict, spec: RWKVSpec, x: Array, state: RWKVState
     cm, new_cm = channel_mix(pl_, spec, h2, state.shift_cm)
     x = constrain(x + cm, "batch", "act_seq", None)
     return x, RWKVState(wkv=s_fin, shift_tm=new_tm, shift_cm=new_cm)
+
+
+# ---------------------------------------------------------------------------
+# Assembled-LUT time mix (repro.stream) — the WKV path replaced by a folded
+# recurrent cell whose state lives in integer-code space.
+# ---------------------------------------------------------------------------
+
+def lut_time_mix(step_fn, x: Array, s0) -> Tuple[Array, Array]:
+    """Scan a per-step recurrent cell over ``x: [B, S, n_in]``.
+
+    ``step_fn(x_t [B, n_in], s) -> (y_t [B, n_out], s_next)`` is the
+    repro.stream cell ABI — ``stream.cell.apply_step`` during training or
+    a wrapper over ``CompiledStreamCell.step`` (code-space state) at
+    inference.  Returns ``(ys [B, S, n_out], s_final)``."""
+    def body(s, x_t):
+        y, s_next = step_fn(x_t, s)
+        return s_next, y
+    s_fin, ys = jax.lax.scan(body, s0, jnp.swapaxes(x, 0, 1))
+    return jnp.swapaxes(ys, 0, 1), s_fin
+
+
+def rwkv_block_lut_tm(pl_: dict, spec: RWKVSpec, x: Array, shift_cm: Array,
+                      step_fn, s0) -> Tuple[Array, Array, Array]:
+    """RWKV block variant with the time-mix path replaced by an
+    assembled-LUT recurrent cell.  The cell consumes ``LN(x_t)`` plus its
+    own state; its per-step output (``n_out == d_model``) takes the WKV
+    output's residual slot.  The channel-mix half is unchanged.  Returns
+    ``(out [B, S, D], cell state final, new channel-mix shift)``."""
+    h1 = layers.layer_norm(x, pl_["ln1"], pl_["ln1_b"])
+    att, s_fin = lut_time_mix(step_fn, h1, s0)
+    if att.shape[-1] != x.shape[-1]:
+        raise ValueError(
+            f"cell n_out {att.shape[-1]} != d_model {x.shape[-1]}")
+    x = x + att.astype(x.dtype)
+    h2 = layers.layer_norm(x, pl_["ln2"], pl_["ln2_b"])
+    cm, new_cm = channel_mix(pl_, spec, h2, shift_cm)
+    return x + cm, s_fin, new_cm
+
+
+def feature_stream(xs, *, n_heads: int = 2, seed: int = 0):
+    """Deterministic trunk features for the LUT time-mix head task:
+    run ``xs [N, T, P]`` through one fixed-parameter RWKV block (params
+    from ``init_rwkv_layer`` at a pinned seed; ``d_model = P``) and return
+    the block outputs ``[N, T, P]`` float32.  The repro.stream cell is
+    then trained as the recurrent head on these streams — the time-mix
+    replacement consumes exactly what the block would feed it."""
+    import numpy as np
+    xs = jnp.asarray(xs, jnp.float32)
+    n, _, d = xs.shape
+    spec = RWKVSpec(d_model=d, n_heads=n_heads, d_ff=2 * d, chunk=16)
+    full = init_rwkv_layer(jax.random.PRNGKey(seed), spec, 1)
+    pl_ = jax.tree.map(lambda p: p[0], full)
+    out, _ = rwkv_block(pl_, spec, xs, init_state(spec, n, jnp.float32))
+    return np.asarray(out, np.float32)

@@ -197,6 +197,9 @@ class CompiledLUTNetwork:
         self.in_log_scale = float(in_log_scale)
         self.out_log_scale = float(out_log_scale)
         self.backend = backend or default_backend()
+        # free-form JSON-able metadata that rides along in the .npz (the
+        # stream subsystem stores its cell ABI here, DESIGN.md §10)
+        self.extra_meta: Dict[str, Any] = {}
         self._folded: Optional[FoldedNetwork] = None
         self._plans: Dict[str, backends.ExecutionPlan] = {}
         # keyed by (backend name, placement cache_key or None)
@@ -315,6 +318,7 @@ class CompiledLUTNetwork:
             "out_log_scale": self.out_log_scale,
             "backend": self.backend,
             "plans": plans_meta,
+            "extra": self.extra_meta,
         }
         return _save_npz(path, arrays, "meta_json", meta)
 
@@ -328,6 +332,7 @@ class CompiledLUTNetwork:
                         else None for l in range(len(cfg.layers))]
             net = cls(cfg, tables, mappings, meta["in_log_scale"],
                       meta["out_log_scale"], backend=meta.get("backend"))
+            net.extra_meta = meta.get("extra") or {}
             for name, pmeta in meta.get("plans", {}).items():
                 prefix = f"plan__{name}__"
                 bufs = {k[len(prefix):]: data[k]
@@ -365,13 +370,23 @@ class Toolflow:
     ``save_state``/``load_state`` resume a flow across processes.
     """
 
-    def __init__(self, cfg: AssembleConfig, *, pretrain_steps: int = 120,
+    def __init__(self, cfg, *, pretrain_steps: int = 120,
                  retrain_steps: int = 250, lr: float = 5e-3,
                  pretrain_lr: Optional[float] = None,
                  batch_size: int = 256, lasso: float = 1e-4,
                  weight_decay: float = 1e-4, sgdr_t0: int = 100,
-                 seed: int = 0, max_train: int = 4096):
+                 seed: int = 0, max_train: int = 4096, tbptt: int = 8):
+        # A StreamCellConfig (repro.stream) routes the flow through the
+        # sequential-task paths: TBPTT training, last-step accuracy, and
+        # compile -> CompiledStreamCell.  Duck-typed so this module never
+        # imports repro.stream at import time.
+        if hasattr(cfg, "net") and hasattr(cfg, "n_state"):
+            self.cell = cfg
+            cfg = cfg.net
+        else:
+            self.cell = None
         self.cfg = cfg
+        self.tbptt = tbptt
         self.hyper = dict(pretrain_steps=pretrain_steps,
                           retrain_steps=retrain_steps, lr=lr,
                           pretrain_lr=pretrain_lr,
@@ -406,12 +421,22 @@ class Toolflow:
         from repro.train import lut_trainer
         h = self.hyper
         t0 = time.time()
-        res = lut_trainer.train(
-            self.cfg, data, dense=True, lasso=h["lasso"],
-            steps=h["pretrain_steps"],
-            lr=h["pretrain_lr"] if h["pretrain_lr"] is not None else h["lr"],
-            batch_size=h["batch_size"], weight_decay=h["weight_decay"],
-            seed=h["seed"], max_train=h["max_train"])
+        if self.cell is not None:
+            res = lut_trainer.train_stream(
+                self.cell, data, dense=True, lasso=h["lasso"],
+                steps=h["pretrain_steps"],
+                lr=h["pretrain_lr"] if h["pretrain_lr"] is not None
+                else h["lr"],
+                batch_size=h["batch_size"], weight_decay=h["weight_decay"],
+                seed=h["seed"], max_train=h["max_train"], tbptt=self.tbptt)
+        else:
+            res = lut_trainer.train(
+                self.cfg, data, dense=True, lasso=h["lasso"],
+                steps=h["pretrain_steps"],
+                lr=h["pretrain_lr"] if h["pretrain_lr"] is not None
+                else h["lr"],
+                batch_size=h["batch_size"], weight_decay=h["weight_decay"],
+                seed=h["seed"], max_train=h["max_train"])
         self.data = data
         self.dense_params = res.params
         self._record("pretrain", t0, final_loss=res.losses[-1],
@@ -436,11 +461,20 @@ class Toolflow:
             "data", "pretrain", "retrain")
         h = self.hyper
         t0 = time.time()
-        res = lut_trainer.train(
-            self.cfg, data, mappings=self.mappings,
-            steps=h["retrain_steps"], lr=h["lr"],
-            batch_size=h["batch_size"], weight_decay=h["weight_decay"],
-            sgdr_t0=h["sgdr_t0"], seed=h["seed"], max_train=h["max_train"])
+        if self.cell is not None:
+            res = lut_trainer.train_stream(
+                self.cell, data, mappings=self.mappings,
+                steps=h["retrain_steps"], lr=h["lr"],
+                batch_size=h["batch_size"], weight_decay=h["weight_decay"],
+                sgdr_t0=h["sgdr_t0"], seed=h["seed"],
+                max_train=h["max_train"], tbptt=self.tbptt)
+        else:
+            res = lut_trainer.train(
+                self.cfg, data, mappings=self.mappings,
+                steps=h["retrain_steps"], lr=h["lr"],
+                batch_size=h["batch_size"], weight_decay=h["weight_decay"],
+                sgdr_t0=h["sgdr_t0"], seed=h["seed"],
+                max_train=h["max_train"])
         self.data = data
         self.params = res.params
         self._record("retrain", t0, final_loss=res.losses[-1],
@@ -448,13 +482,22 @@ class Toolflow:
                      learned_mappings=self.mappings is not None)
         return self
 
-    def compile(self, *, backend: Optional[str] = None
-                ) -> CompiledLUTNetwork:
-        """Phase 4: exhaustive fold into the deployment artifact."""
+    def compile(self, *, backend: Optional[str] = None):
+        """Phase 4: exhaustive fold into the deployment artifact — a
+        :class:`CompiledLUTNetwork`, or a
+        :class:`~repro.stream.cell.CompiledStreamCell` for stream flows."""
         params = self._require("params", "retrain", "compile")
         t0 = time.time()
-        self.compiled = compile_network(params, self.cfg, backend=backend)
-        self._record("compile", t0, entries=self.compiled.num_entries())
+        if self.cell is not None:
+            from repro.stream import cell as stream_cell
+            self.compiled = stream_cell.compile_cell(params, self.cell,
+                                                     backend=backend)
+            entries = self.compiled.net.num_entries()
+        else:
+            self.compiled = compile_network(params, self.cfg,
+                                            backend=backend)
+            entries = self.compiled.num_entries()
+        self._record("compile", t0, entries=entries)
         return self.compiled
 
     def run(self, data) -> CompiledLUTNetwork:
@@ -489,6 +532,10 @@ class Toolflow:
         data = data if data is not None else self._require(
             "data", "pretrain", "accuracy")
         params = self._require("params", "retrain", "accuracy")
+        if self.cell is not None:
+            return lut_trainer.stream_accuracy(self.cell, params, data,
+                                               folded=folded,
+                                               max_eval=max_eval)
         return lut_trainer.accuracy(self.cfg, params, data, folded=folded,
                                     max_eval=max_eval)
 
@@ -510,7 +557,11 @@ class Toolflow:
             arrays.update(_tree_to_arrays("sparse_", self.params))
             done.append("retrain")
         manifest = {"config": config_to_dict(self.cfg),
-                    "hyper": self.hyper, "done": done}
+                    "hyper": self.hyper, "done": done,
+                    "stream": None if self.cell is None else {
+                        "n_in": self.cell.n_in,
+                        "n_state": self.cell.n_state,
+                        "tbptt": self.tbptt}}
         return _save_npz(path, arrays, "manifest_json", manifest)
 
     @classmethod
@@ -518,7 +569,14 @@ class Toolflow:
         data, manifest = _open_npz(path, "manifest_json")
         with data:
             cfg = config_from_dict(manifest["config"])
-            flow = cls(cfg, **manifest["hyper"])
+            stream = manifest.get("stream")
+            if stream:
+                from repro.stream.cell import StreamCellConfig
+                flow = cls(StreamCellConfig(net=cfg, n_in=stream["n_in"],
+                                            n_state=stream["n_state"]),
+                           tbptt=stream["tbptt"], **manifest["hyper"])
+            else:
+                flow = cls(cfg, **manifest["hyper"])
             rng = jax.random.PRNGKey(flow.hyper["seed"])
             if "prune" in manifest["done"]:
                 flow.mappings = [

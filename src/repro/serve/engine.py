@@ -13,10 +13,10 @@ The multi-chip story is the same code under pjit: the batched cache is
 sharded per dist.sharding.cache_specs and each tick is one jitted
 decode_step — exactly what the decode_* dry-run cells lower.
 
-Known limitation (single scalar ``pos`` shared by all slots): requests are
-assumed to share prompt length per engine instance; per-slot position
-vectors are the listed next step (requires [B]-vector positions through
-``lm.decode_step``).
+Positions are per slot: ``cache["pos"]`` is a [B] vector and
+``cache["slot_pos"]`` is [B, W], so requests with DIFFERENT prompt
+lengths pack into one decode batch — each slot advances its own ring
+cursor and masks against its own absolute position.
 """
 from __future__ import annotations
 
@@ -137,13 +137,12 @@ def _splice_cache(cfg: ArchConfig, batched: dict, single: dict, slot: int
                   ) -> dict:
     """Insert a batch-1 prefill cache into slot ``slot`` of the batched
     cache.  Batch axis positions: kv_k/kv_v [L, B, ...] -> axis 1;
-    rwkv/ssm states [L, B, ...] -> axis 1."""
+    rwkv/ssm states [L, B, ...] -> axis 1; pos [B] / slot_pos [B, W] ->
+    axis 0 (each slot keeps its own decode position)."""
     out = dict(batched)
     for key, val in single.items():
-        if key == "pos":
-            out["pos"] = val  # engine decodes lock-step; see DESIGN.md note
-        elif key == "slot_pos":
-            out["slot_pos"] = val
+        if key in ("pos", "slot_pos"):
+            out[key] = batched[key].at[slot].set(val[0])
         else:
             out[key] = batched[key].at[:, slot].set(val[:, 0])
     return out

@@ -44,6 +44,9 @@ from repro.serve.admission import (AdmissionController, AdmissionDecision,
 from repro.serve.lut_engine import (LATENCY_WINDOW, LUTEngine, LUTRequest)
 from repro.serve.registry import (ArtifactSource, ExecutorCache, Reference,
                                   SwapEvent, TenantRegistry)
+from repro.stream.cell import (CompiledStreamCell, migrate_state_codes,
+                               state_migration_mode)
+from repro.stream.session import StreamSession, StreamStore
 
 
 @dataclasses.dataclass
@@ -98,9 +101,19 @@ class _TenantLane:
         self.stats = FleetStats()
         self.t_first: Optional[float] = None
         self.t_last: Optional[float] = None
+        # stream (stateful) tenants: current cell + per-stream state,
+        # pending steps (row, t_submit), busy set (one step in flight per
+        # stream), sessions (completed steps in order), deferred closes
+        self.cell: Optional[CompiledStreamCell] = None
+        self.store: Optional[StreamStore] = None
+        self.pending: Dict[object, Deque[Tuple[np.ndarray, float]]] = {}
+        self.busy: set = set()
+        self.sessions: Dict[object, StreamSession] = {}
+        self.closing: set = set()
 
     def queue_depth(self) -> int:
         queued = len(self.engine.queue) if self.engine is not None else 0
+        queued += sum(len(p) for p in self.pending.values())
         return queued + len(self.deferred)
 
 
@@ -154,11 +167,19 @@ class LUTFleet:
                  block: Optional[int] = None,
                  backend: Optional[str] = None,
                  mesh=None, placement=None) -> None:
-        """Install version 1 of a tenant and open its serving lane."""
+        """Install version 1 of a tenant and open its serving lane.
+
+        A :class:`~repro.stream.cell.CompiledStreamCell` source (or an
+        ``.npz`` carrying ``stream_cell`` metadata) opens a **stateful
+        stream lane**: the lane's engine runs in cell mode and the
+        stream APIs (:meth:`open_stream` / :meth:`submit_stream` /
+        :meth:`close_stream`) become available."""
         if mesh is not None:
             if placement is not None:
                 raise ValueError("pass either mesh= or placement=, not both")
             placement = backends.Placement(mesh)
+        if isinstance(source, CompiledStreamCell):
+            source = source.net     # extra_meta carries the cell split
         self.registry.register(model_id, source, reference=reference,
                                slo=slo)
         self._lanes[model_id] = _TenantLane(
@@ -169,7 +190,14 @@ class LUTFleet:
                reference: Optional[Reference] = None,
                strict: bool = False) -> SwapEvent:
         """Hot-swap a new artifact version (see TenantRegistry.deploy);
-        the lane adopts a successful swap at its next tick boundary."""
+        the lane adopts a successful swap at its next tick boundary.
+
+        For a stream tenant the lane migrates live per-stream state when
+        it adopts the version (re-quantized or carried; incompatible
+        state widths reset the streams) and stamps the mode onto the
+        recorded :class:`SwapEvent` (``state_migration``)."""
+        if isinstance(source, CompiledStreamCell):
+            source = source.net
         return self.registry.deploy(model_id, source, reference=reference,
                                     strict=strict)
 
@@ -245,6 +273,99 @@ class LUTFleet:
                                           np.asarray(x, np.float32)[None])
         return (reqs[0] if reqs else None), decision
 
+    # -- stateful streams (DESIGN.md §10) ------------------------------------
+    def _stream_lane(self, model_id: str) -> _TenantLane:
+        lane = self._lane(model_id)
+        self._sync_lane(lane)
+        if lane.cell is None:
+            raise ValueError(f"model {model_id!r} is not a stream tenant "
+                             "(register a CompiledStreamCell)")
+        return lane
+
+    def open_stream(self, model_id: str, stream_id) -> StreamSession:
+        """Open a persistent stream: its state (initially the zero state)
+        lives with the lane until :meth:`close_stream`."""
+        lane = self._stream_lane(model_id)
+        lane.store.open(stream_id)
+        lane.sessions[stream_id] = StreamSession(stream_id)
+        lane.pending[stream_id] = collections.deque()
+        return lane.sessions[stream_id]
+
+    def submit_stream(self, model_id: str, stream_id,
+                      xs: np.ndarray) -> StreamSession:
+        """Feed one step (``[n_in]``) or many (``[T, n_in]``) to an open
+        stream.  Steps run strictly in feed order, at most one in flight
+        per stream; steps of different streams batch together."""
+        lane = self._stream_lane(model_id)
+        if stream_id in lane.closing:
+            raise ValueError(f"stream {stream_id!r} is closing")
+        xs = np.asarray(xs, np.float32)
+        if xs.ndim == 1:
+            xs = xs[None]
+        now = time.perf_counter()
+        if lane.t_first is None:
+            lane.t_first = now
+        lane.pending[stream_id].extend((row, now) for row in xs)
+        lane.stats.requests += len(xs)
+        return lane.sessions[stream_id]
+
+    def close_stream(self, model_id: str, stream_id) -> StreamSession:
+        """Mark a stream closed; already-fed steps still complete.  The
+        state is dropped (``session.final_state`` stamped) once idle."""
+        lane = self._stream_lane(model_id)
+        if stream_id not in lane.sessions:
+            raise KeyError(f"unknown stream {stream_id!r}")
+        lane.closing.add(stream_id)
+        self._finalize_closed(lane)
+        return lane.sessions[stream_id]
+
+    def _admit_streams(self, lane: _TenantLane) -> None:
+        """One pending step per non-busy stream into the engine queue,
+        with the stream's current state codes attached."""
+        if lane.cell is None:
+            return
+        for sid, pend in lane.pending.items():
+            if not pend or sid in lane.busy:
+                continue
+            x, t0 = pend.popleft()
+            req = lane.engine.submit(x, state=lane.store.get(sid),
+                                     stream_id=sid)
+            req.t_submit = t0   # latency counts from submit_stream
+            lane.busy.add(sid)
+
+    def _writeback_streams(self, lane: _TenantLane, engine: LUTEngine,
+                           batch: List[LUTRequest]) -> None:
+        """Persist next-state codes after a cell-mode block retires.  A
+        step that ran on a swapped-out engine version has its state
+        mapped onto the CURRENT boundary before writeback (or discarded
+        when the swap reset the streams)."""
+        used = engine.cell
+        for req in batch:
+            sid = req.stream_id
+            if sid is None or req.next_state is None:
+                continue
+            lane.busy.discard(sid)
+            if sid in lane.sessions:
+                lane.sessions[sid].steps.append(req)
+            if sid not in lane.store:
+                continue        # closed mid-flight
+            s = req.next_state
+            if used is not lane.store.cell:
+                if state_migration_mode(used, lane.store.cell) is None:
+                    continue    # swap reset this stream's state
+                s = np.asarray(migrate_state_codes(used, lane.store.cell,
+                                                   s))
+            lane.store.put(sid, s)
+        self._finalize_closed(lane)
+
+    def _finalize_closed(self, lane: _TenantLane) -> None:
+        done = [sid for sid in lane.closing
+                if sid not in lane.busy and not lane.pending.get(sid)]
+        for sid in done:
+            lane.sessions[sid].final_state = lane.store.close(sid)
+            lane.pending.pop(sid, None)
+            lane.closing.discard(sid)
+
     # -- the pump ------------------------------------------------------------
     def tick(self, *, flush: bool = False) -> int:
         """One fleet tick: round-robin one block dispatch per tenant with
@@ -263,6 +384,7 @@ class LUTFleet:
         for lane in lanes:
             self._sync_lane(lane)
             self._drain_deferred(lane)
+            self._admit_streams(lane)
             fill = 1 if flush else min(self.min_fill, lane.block)
             if len(lane.engine.queue) >= fill:
                 batch = lane.engine.dispatch_block()
@@ -315,18 +437,71 @@ class LUTFleet:
 
     def _sync_lane(self, lane: _TenantLane) -> None:
         """Adopt the registry's current version: build the new engine off
-        the LRU executor cache and migrate queued (not in-flight) work."""
+        the LRU executor cache and migrate queued (not in-flight) work.
+
+        Stream lanes additionally migrate live per-stream state (store +
+        queued step requests) onto the new version's in-boundary and stamp
+        the migration mode onto the deploy's SwapEvent; in-flight steps
+        retire on the engine that dispatched them and their next-state is
+        mapped forward at writeback."""
         entry = self.registry.get(lane.model_id)
         if lane.version == entry.version:
             return
-        ex = self.registry.executor(lane.model_id, backend=lane.backend,
-                                    placement=lane.placement)
-        engine = LUTEngine(entry.net, block=lane.block, executor=ex)
+        sc = entry.net.extra_meta.get("stream_cell")
+        if sc is not None:
+            new_cell = CompiledStreamCell.from_network(entry.net,
+                                                       like=lane.cell)
+            # the cell owns its per-(backend, placement) jitted step —
+            # the registry's executor cache only covers feed-forward plans
+            engine = LUTEngine(entry.net, block=lane.block, cell=new_cell,
+                               backend=lane.backend,
+                               placement=lane.placement)
+            if lane.store is None:
+                lane.store = StreamStore(new_cell)
+            else:
+                mode = lane.store.migrate(new_cell)
+                self._record_migration(entry, mode)
+                self._migrate_queued_states(lane, new_cell, mode)
+            lane.cell = new_cell
+        else:
+            ex = self.registry.executor(lane.model_id, backend=lane.backend,
+                                        placement=lane.placement)
+            engine = LUTEngine(entry.net, block=lane.block, executor=ex)
         if lane.engine is not None and lane.engine.queue:
             engine.queue.extend(lane.engine.queue)
             lane.engine.queue.clear()
         lane.engine = engine
         lane.version = entry.version
+
+    def _migrate_queued_states(self, lane: _TenantLane,
+                               new_cell: CompiledStreamCell,
+                               mode: str) -> None:
+        """Queued (admitted, not dispatched) stream steps carry state
+        codes captured on the OLD boundary; map them before they migrate
+        to the new engine's queue."""
+        if lane.engine is None or not lane.engine.queue:
+            return
+        zero = new_cell.cell.zero_state_code()
+        for req in lane.engine.queue:
+            if req.state is None:
+                continue
+            if mode == "drained+reset":
+                req.state = np.full((new_cell.cell.n_state,), zero,
+                                    np.int32)
+            elif mode == "requantized":
+                req.state = np.asarray(migrate_state_codes(
+                    lane.cell, new_cell, req.state))
+
+    @staticmethod
+    def _record_migration(entry, mode: str) -> None:
+        """Stamp the migration mode onto the deploy's SwapEvent (the last
+        successful event that produced the adopted version)."""
+        for i in range(len(entry.history) - 1, -1, -1):
+            ev = entry.history[i]
+            if ev.ok and ev.to_version == entry.version:
+                entry.history[i] = dataclasses.replace(
+                    ev, state_migration=mode)
+                break
 
     @staticmethod
     def _p99_if_budgeted(lane: _TenantLane, slo: Optional[TenantSLO]
@@ -364,6 +539,8 @@ class LUTFleet:
     def _retire_one(self) -> int:
         lane, engine = self._order.popleft()
         batch = engine.retire_oldest()
+        if engine.cell is not None:
+            self._writeback_streams(lane, engine, batch)
         now = time.perf_counter()
         lane.t_last = now
         lane.stats.completed += len(batch)

@@ -49,6 +49,11 @@ class LUTRequest:
     # wall-clock submission time, stamped by callers that track end-to-end
     # request latency (the fleet tier); 0.0 = unstamped
     t_submit: float = 0.0
+    # stream (cell-mode) extras: the state codes this step consumes, the
+    # next-state codes it produced, and the stream the step belongs to
+    state: Optional[np.ndarray] = None       # [n_state] int32
+    next_state: Optional[np.ndarray] = None  # [n_state] int32
+    stream_id: Optional[object] = None
 
 
 # per-tick latency history kept for percentile stats; bounded so a
@@ -98,7 +103,7 @@ class LUTEngine:
 
     def __init__(self, net: CompiledLUTNetwork, *, block: int = 256,
                  backend: Optional[str] = None, mesh=None, depth: int = 1,
-                 executor=None):
+                 executor=None, cell=None, placement=None):
         if depth < 1:
             raise ValueError(f"depth must be >= 1, got {depth}")
         self.net = net
@@ -107,9 +112,34 @@ class LUTEngine:
         self.queue: Deque[LUTRequest] = collections.deque()
         self.stats = LUTEngineStats()
         self._next_rid = 0
-        # (requests, codes device array, logits device array), oldest first
-        self._inflight: Deque[Tuple[List[LUTRequest], object, object]] = \
-            collections.deque()
+        # (requests, codes, logits, next-state-or-None), oldest first
+        self._inflight: Deque[Tuple] = collections.deque()
+        if mesh is not None and placement is not None:
+            raise ValueError("pass either mesh= or placement=, not both")
+        if cell is not None:
+            # stream (cell) mode: the block function is the folded
+            # recurrent step (repro.stream.cell) — each request carries
+            # its state codes in and its next-state codes out.  The cell
+            # owns the per-(backend, placement) jit cache.
+            if executor is not None:
+                raise ValueError("pass either cell= or executor=")
+            if net is not cell.net:
+                raise ValueError("cell= must wrap the engine's net")
+            if mesh is not None:
+                from repro import backends as _b
+                placement = _b.Placement(mesh)
+            self._cell = cell
+            self._cell_backend, self._cell_placement = backend, placement
+            key, _ = cell._key(backend, placement)
+            self._backend = key[0]
+            self._in_features = cell.cell.n_in
+            self._n_state = cell.cell.n_state
+            self._zero_state = cell.cell.zero_state_code()
+            self._executor = None
+            self._fwd = None
+            return
+        self._cell = None
+        self._in_features = net.cfg.in_features
         if executor is not None:
             # fleet hook: a pre-built PlannedExecutor (e.g. from the tenant
             # registry's LRU cache) — the engine never plans or caches
@@ -123,9 +153,15 @@ class LUTEngine:
             self._executor = executor
         else:
             self._executor = net.compile_backend(backend or net.backend,
-                                                 mesh=mesh)
+                                                 mesh=mesh,
+                                                 placement=placement)
         self._backend = self._executor.backend
         self._fwd = self._executor.codes_and_logits
+
+    @property
+    def cell(self):
+        """The CompiledStreamCell in stream mode, else None."""
+        return self._cell
 
     # -- fixed-at-construction attributes ------------------------------------
     # The jitted block function is compiled once for (block, backend, mesh);
@@ -160,16 +196,22 @@ class LUTEngine:
         return len(self._inflight)
 
     # -- queueing ------------------------------------------------------------
-    def submit(self, x: np.ndarray) -> LUTRequest:
-        """Enqueue one input row; returns the request handle."""
-        req = LUTRequest(rid=self._next_rid, x=np.asarray(x, np.float32))
+    def submit(self, x: np.ndarray, *, state: Optional[np.ndarray] = None,
+               stream_id=None) -> LUTRequest:
+        """Enqueue one input row; returns the request handle.  In cell
+        mode ``state`` is the step's state codes (default: initial)."""
+        if self._cell is not None and state is None:
+            state = np.full((self._n_state,), self._zero_state, np.int32)
+        req = LUTRequest(rid=self._next_rid, x=np.asarray(x, np.float32),
+                         state=state, stream_id=stream_id)
         self._next_rid += 1
         self.queue.append(req)
         self.stats.requests += 1
         return req
 
-    def submit_many(self, xs: np.ndarray,
-                    t_submit: float = 0.0) -> List[LUTRequest]:
+    def submit_many(self, xs: np.ndarray, t_submit: float = 0.0, *,
+                    states: Optional[np.ndarray] = None,
+                    stream_ids=None) -> List[LUTRequest]:
         """Enqueue every row of ``xs`` with ONE dtype conversion.
 
         Per-row ``submit`` pays a ``np.asarray`` per request — measurably
@@ -177,11 +219,25 @@ class LUTEngine:
         device compute, unlike the per-tick work).  Handles share row
         views of the converted matrix.  ``t_submit`` stamps every handle
         at construction (the fleet's request-latency clock) instead of a
-        second per-row pass by the caller."""
+        second per-row pass by the caller.  In cell mode ``states``
+        ([n, n_state] int codes, default initial) and ``stream_ids`` ride
+        along the same way."""
         xs = np.asarray(xs, np.float32)
         base = self._next_rid
-        reqs = [LUTRequest(rid=base + i, x=row, t_submit=t_submit)
-                for i, row in enumerate(xs)]
+        if self._cell is not None:
+            if states is None:
+                states = np.full((len(xs), self._n_state),
+                                 self._zero_state, np.int32)
+            else:
+                states = np.asarray(states, np.int32)
+            reqs = [LUTRequest(rid=base + i, x=row, t_submit=t_submit,
+                               state=s,
+                               stream_id=(None if stream_ids is None
+                                          else stream_ids[i]))
+                    for i, (row, s) in enumerate(zip(xs, states))]
+        else:
+            reqs = [LUTRequest(rid=base + i, x=row, t_submit=t_submit)
+                    for i, row in enumerate(xs)]
         self._next_rid += len(reqs)
         self.queue.extend(reqs)
         self.stats.requests += len(reqs)
@@ -201,13 +257,22 @@ class LUTEngine:
             batch.append(self.queue.popleft())
         if not batch:
             return batch
-        xb = np.zeros((self._block, self.net.cfg.in_features), np.float32)
+        xb = np.zeros((self._block, self._in_features), np.float32)
         # one C-level fill, not a per-row python loop: the dispatch path is
         # host-side work the async pipeline hides behind device compute
         xb[:len(batch)] = [req.x for req in batch]
         self.stats.rows_padded += self._block - len(batch)
-        codes, logits = self._fwd(jnp.asarray(xb))
-        self._inflight.append((batch, codes, logits))
+        if self._cell is not None:
+            sb = np.full((self._block, self._n_state), self._zero_state,
+                         np.int32)
+            sb[:len(batch)] = [req.state for req in batch]
+            codes, logits, s_next = self._cell.step(
+                xb, sb, backend=self._cell_backend,
+                placement=self._cell_placement)
+            self._inflight.append((batch, codes, logits, s_next))
+        else:
+            codes, logits = self._fwd(jnp.asarray(xb))
+            self._inflight.append((batch, codes, logits, None))
         self.stats.ticks += 1
         return batch
 
@@ -216,13 +281,16 @@ class LUTEngine:
         the completed requests ([] when nothing is in flight)."""
         if not self._inflight:
             return []
-        batch, codes, logits = self._inflight.popleft()
+        batch, codes, logits, s_next = self._inflight.popleft()
         codes_np, logits_np = np.asarray(codes), np.asarray(logits)
         # list(ndarray) materializes the row views in one C loop
         for req, c, lg in zip(batch, list(codes_np), list(logits_np)):
             req.codes = c
             req.logits = lg
             req.done = True
+        if s_next is not None:
+            for req, s in zip(batch, list(np.asarray(s_next))):
+                req.next_state = s
         return batch
 
     def _dispatch(self) -> int:

@@ -105,11 +105,18 @@ class SwapEvent:
     reason: str
     rows_checked: int
     t: float                 # wall-clock time of the attempt
+    # stateful (stream) tenants only: how live per-stream state moved
+    # across the swap — "carried" / "requantized" / "drained+reset".
+    # Stamped by the fleet lane when it adopts the version (DESIGN.md §10).
+    state_migration: Optional[str] = None
 
     def summary(self) -> dict:
-        return {"from": self.from_version, "to": self.to_version,
-                "ok": self.ok, "reason": self.reason,
-                "rows_checked": self.rows_checked}
+        out = {"from": self.from_version, "to": self.to_version,
+               "ok": self.ok, "reason": self.reason,
+               "rows_checked": self.rows_checked}
+        if self.state_migration is not None:
+            out["state_migration"] = self.state_migration
+        return out
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,21 @@
+"""repro.stream — stateful streaming inference over assembled-LUT
+recurrent cells (DESIGN.md §10).
+
+  * :mod:`repro.stream.cell` — the cell ABI, training forward, and the
+    :class:`CompiledStreamCell` deployment artifact whose folded per-step
+    transition closes the recurrent loop in integer-code space.
+  * :mod:`repro.stream.session` — per-stream persistent state (packed
+    codes keyed by stream id) and the continuous-batching stream router
+    over a cell-mode :class:`~repro.serve.lut_engine.LUTEngine`.
+"""
+from repro.stream.cell import (  # noqa: F401
+    CompiledStreamCell,
+    StreamCellConfig,
+    apply_sequence,
+    apply_sequence_codes,
+    apply_step,
+    compile_cell,
+    migrate_state_codes,
+    state_migration_mode,
+)
+from repro.stream.session import StreamSession, StreamStore  # noqa: F401

@@ -1,0 +1,330 @@
+"""Assembled-LUT recurrent cells (DESIGN.md §10, the stream model layer).
+
+A *cell* is an ordinary :class:`~repro.core.assemble.AssembleConfig` with a
+recurrent wiring convention layered on top:
+
+  * the network input is the concatenation ``[x_t | s_t]`` — ``n_in`` fresh
+    features plus ``n_state`` state positions, all quantized through the ONE
+    shared input boundary (``in_q``);
+  * the final layer emits ``[y_t | s_{t+1}]`` — ``n_out`` logit units plus
+    ``n_state`` next-state units, all quantized through the final-layer
+    boundary (``out_q``).
+
+The recurrent edge is a *re-quantization*: the state slice leaves the cell
+as out-boundary codes and re-enters as in-boundary codes via
+:func:`repro.core.quant.recode`.  During training the state is carried as
+the out-boundary fake-quant *values*, which the next step's input
+fake-quant maps to exactly the same codes — so the folded cell streams
+bit-identically to the quantized training forward, step for step, through
+every registered lookup backend (the per-step identity is the existing
+folding-equivalence guarantee; the state edge adds nothing new to fold).
+
+NeuraLUT's insight that skip paths keep deep LUT cascades trainable
+(arXiv 2403.00849) extends here to the state path: the cell's state slice
+is a state-carrying skip across *time*, trained with truncated BPTT
+(``lut_trainer.train_stream``).
+
+:class:`CompiledStreamCell` is the deployment artifact: a
+:class:`~repro.pipeline.CompiledLUTNetwork` plus the ``(n_in, n_state)``
+split, exposing a per-step folded transition in *code space* and an
+offline full-sequence scan of the very same step (streamed == offline
+bit-identity is by construction, not by test luck — the test then checks
+it anyway).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import backends
+from repro.core import assemble, quant
+from repro.core.assemble import AssembleConfig
+from repro.core.quant import QuantSpec
+from repro.pipeline import CompiledLUTNetwork, compile_network
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamCellConfig:
+    """The cell ABI: an assembled network + the recurrent split."""
+
+    net: AssembleConfig
+    n_in: int       # fresh features per step
+    n_state: int    # state positions (input tail AND output tail)
+
+    def __post_init__(self):
+        if self.n_state < 1:
+            raise ValueError("a cell needs n_state >= 1")
+        if self.net.in_features != self.n_in + self.n_state:
+            raise ValueError(
+                f"cell input split {self.n_in}+{self.n_state} != "
+                f"net.in_features {self.net.in_features}")
+        last = self.net.layers[-1].units
+        if last <= self.n_state:
+            raise ValueError(
+                f"final layer has {last} units; needs > n_state "
+                f"({self.n_state}) to leave room for outputs")
+
+    @property
+    def n_out(self) -> int:
+        return self.net.layers[-1].units - self.n_state
+
+    def in_spec(self) -> QuantSpec:
+        return self.net.input_quant_spec()
+
+    def out_spec(self) -> QuantSpec:
+        return self.net.quant_spec(len(self.net.layers) - 1)
+
+    def zero_state_code(self) -> int:
+        """The in-boundary code of state value 0 (the initial state)."""
+        s = self.in_spec()
+        return int(np.clip(0, s.qmin, s.qmax) - s.qmin)
+
+
+# ---------------------------------------------------------------------------
+# training-side forward (float state, fake-quant boundaries)
+# ---------------------------------------------------------------------------
+
+def init(rng: Array, cell: StreamCellConfig, **kw) -> dict:
+    """Cell parameters are plain assemble parameters of ``cell.net``."""
+    return assemble.init(rng, cell.net, **kw)
+
+
+def apply_step(params: dict, cell: StreamCellConfig, x_t: Array, s: Array,
+               *, training: bool = False, dense: bool = False,
+               bn_batch_stats: bool = True) -> Tuple[Array, Array, dict]:
+    """One training-graph step: ``(x_t [B, n_in], s [B, n_state] float)``
+    -> ``(y [B, n_out], s_next [B, n_state], new_params)``.
+
+    ``s`` carries the out-boundary fake-quant values; the input fake-quant
+    inside :func:`assemble.apply` is the training-time image of the folded
+    state recode.  ``bn_batch_stats=False`` trains with frozen-stats BN
+    (normalize with running statistics, still refreshing the EMA): the
+    folded cell bakes ONE (mean, var) pair into its tables, while
+    per-timestep batch statistics differ across the scan — the trainer
+    switches to frozen stats for the tail of training so the weights
+    settle under the normalization that actually deploys."""
+    inp = jnp.concatenate([x_t, s], axis=-1)
+    out, new_params = assemble.apply(params, cell.net, inp,
+                                     training=training, dense=dense,
+                                     bn_batch_stats=bn_batch_stats)
+    return out[:, :cell.n_out], out[:, cell.n_out:], new_params
+
+
+def apply_sequence(params: dict, cell: StreamCellConfig, xs: Array,
+                   s0: Optional[Array] = None, *, training: bool = False,
+                   dense: bool = False, bn_batch_stats: bool = True
+                   ) -> Tuple[Array, Array, dict]:
+    """Scan :func:`apply_step` over ``xs [B, T, n_in]``.
+
+    Returns ``(ys [B, T, n_out], s_final, new_params)``; with
+    ``training=True`` the BN statistics refreshed at each step are carried
+    through the scan (last step wins)."""
+    b = xs.shape[0]
+    if s0 is None:
+        s0 = jnp.zeros((b, cell.n_state), jnp.float32)
+
+    def body(carry, x_t):
+        p, s = carry
+        y, s_next, p2 = apply_step(p, cell, x_t, s, training=training,
+                                   dense=dense,
+                                   bn_batch_stats=bn_batch_stats)
+        return ((p2 if training else p), s_next), y
+
+    (pf, sf), ys = jax.lax.scan(body, (params, s0),
+                                jnp.swapaxes(xs, 0, 1))
+    return jnp.swapaxes(ys, 0, 1), sf, pf
+
+
+def apply_sequence_codes(params: dict, cell: StreamCellConfig, xs: Array,
+                         s0_codes: Optional[Array] = None) -> Array:
+    """Integer-code reference over the *training* graph: the hard-quantized
+    eval forward scanned with the state edge in code space.  The folded
+    streamed path must match this bit for bit."""
+    in_q, in_spec = params["in_q"], cell.in_spec()
+    last = len(cell.net.layers) - 1
+    out_q, out_spec = params["layers"][last]["out_q"], cell.out_spec()
+    b = xs.shape[0]
+    if s0_codes is None:
+        s0_codes = jnp.full((b, cell.n_state), cell.zero_state_code(),
+                            jnp.int32)
+
+    def body(s_codes, x_t):
+        s_deq = quant.dequantize_codes(in_q, in_spec, s_codes)
+        out = assemble.apply_codes(params, cell.net,
+                                   jnp.concatenate([x_t, s_deq], axis=-1))
+        s_next = quant.recode(out_q, out_spec, in_q, in_spec,
+                              out[:, cell.n_out:])
+        return s_next, out[:, :cell.n_out]
+
+    _, ys = jax.lax.scan(body, s0_codes, jnp.swapaxes(xs, 0, 1))
+    return jnp.swapaxes(ys, 0, 1)
+
+
+# ---------------------------------------------------------------------------
+# the deployment artifact
+# ---------------------------------------------------------------------------
+
+class CompiledStreamCell:
+    """A folded cell: :class:`CompiledLUTNetwork` + the recurrent split.
+
+    The folded transition runs in **code space**: backends consume and
+    produce integer codes, so the step is
+    ``quantize(x) ++ s_codes -> cascade -> split -> recode state``, with
+    no float round-trip on the recurrent edge.  ``step`` is the jitted
+    per-tick function the serving layer drives; :meth:`predict_sequence`
+    scans the identical closure, which is what makes streamed-vs-offline
+    bit-identity structural."""
+
+    def __init__(self, net: CompiledLUTNetwork, n_in: int, n_state: int):
+        self.net = net
+        self.cell = StreamCellConfig(net=net.cfg, n_in=n_in,
+                                     n_state=n_state)
+        net.extra_meta["stream_cell"] = {"n_in": n_in, "n_state": n_state}
+        self._raw: dict = {}    # (backend, placement key) -> step closure
+        self._step: dict = {}   # same key -> jitted step
+        self._seq: dict = {}    # same key -> jitted sequence scan
+
+    # -- construction --------------------------------------------------------
+    @classmethod
+    def from_network(cls, net: CompiledLUTNetwork,
+                     like: Optional["CompiledStreamCell"] = None
+                     ) -> "CompiledStreamCell":
+        """Wrap a loaded/deployed network: split from its ``extra_meta``
+        (written by :meth:`save`), falling back to ``like``'s split."""
+        sc = net.extra_meta.get("stream_cell")
+        if sc is None and like is not None:
+            sc = {"n_in": like.cell.n_in, "n_state": like.cell.n_state}
+        if sc is None:
+            raise ValueError("artifact carries no stream_cell metadata and "
+                             "no reference cell was given")
+        return cls(net, int(sc["n_in"]), int(sc["n_state"]))
+
+    def save(self, path: str) -> str:
+        return self.net.save(path)
+
+    @classmethod
+    def load(cls, path: str) -> "CompiledStreamCell":
+        return cls.from_network(CompiledLUTNetwork.load(path))
+
+    # -- state ---------------------------------------------------------------
+    def init_state_codes(self, batch: int) -> Array:
+        return jnp.full((batch, self.cell.n_state),
+                        self.cell.zero_state_code(), jnp.int32)
+
+    # -- the folded transition ----------------------------------------------
+    def _key(self, backend, placement):
+        be = backends.resolve(backend or self.net.backend)
+        return ((be.name,
+                 None if placement is None else placement.cache_key()), be)
+
+    def raw_step(self, backend: Optional[str] = None, placement=None):
+        """The un-jitted traceable step closure
+        ``(x [B, n_in] f32, s_codes [B, n_state] i32) ->
+        (y_codes, y_logits, s_next_codes)``."""
+        key, be = self._key(backend, placement)
+        if key in self._raw:
+            return self._raw[key]
+        # compile_backend owns planning + plan-staleness; reuse its plan
+        plan = self.net.compile_backend(be.name, placement=placement).plan
+        if placement is None:
+            cascade = lambda codes: be.run(plan, codes)  # noqa: E731
+        else:
+            cascade = backends.place(be, plan, placement)
+        in_q = {"log_scale": jnp.asarray(self.net.in_log_scale)}
+        out_q = {"log_scale": jnp.asarray(self.net.out_log_scale)}
+        in_spec, out_spec = self.cell.in_spec(), self.cell.out_spec()
+        n_out = self.cell.n_out
+
+        def step(x, s_codes):
+            x_codes = quant.quantize_codes(in_q, in_spec, x)
+            out = cascade(jnp.concatenate(
+                [x_codes, s_codes.astype(jnp.int32)], axis=-1))
+            s_next = quant.recode(out_q, out_spec, in_q, in_spec,
+                                  out[:, n_out:])
+            y = quant.dequantize_codes(out_q, out_spec, out[:, :n_out])
+            return out[:, :n_out], y, s_next
+
+        self._raw[key] = step
+        return step
+
+    def step(self, x, s_codes, *, backend: Optional[str] = None,
+             placement=None):
+        """One folded streamed tick (jitted per backend × placement)."""
+        key, _ = self._key(backend, placement)
+        if key not in self._step:
+            self._step[key] = jax.jit(self.raw_step(backend, placement))
+        return self._step[key](jnp.asarray(x), jnp.asarray(s_codes))
+
+    def predict_sequence(self, xs, s0_codes=None, *,
+                         backend: Optional[str] = None, placement=None):
+        """Offline full-sequence eval: ONE ``lax.scan`` of the same step
+        the streamed path runs per tick.
+        ``xs [B, T, n_in]`` -> ``(y_codes [B, T, n_out], y [B, T, n_out],
+        s_final_codes [B, n_state])``."""
+        key, _ = self._key(backend, placement)
+        if key not in self._seq:
+            raw = self.raw_step(backend, placement)
+
+            def seq(xs, s0):
+                def body(s, x_t):
+                    y_codes, y, s_next = raw(x_t, s)
+                    return s_next, (y_codes, y)
+                sf, (yc, yv) = jax.lax.scan(body, s0,
+                                            jnp.swapaxes(xs, 0, 1))
+                return (jnp.swapaxes(yc, 0, 1), jnp.swapaxes(yv, 0, 1),
+                        sf)
+
+            self._seq[key] = jax.jit(seq)
+        xs = jnp.asarray(xs)
+        if s0_codes is None:
+            s0_codes = self.init_state_codes(xs.shape[0])
+        return self._seq[key](xs, jnp.asarray(s0_codes))
+
+
+def compile_cell(params: dict, cell: StreamCellConfig,
+                 *, backend: Optional[str] = None) -> CompiledStreamCell:
+    """Fold trained cell params into the deployable stream artifact."""
+    net = compile_network(params, cell.net, backend=backend)
+    return CompiledStreamCell(net, cell.n_in, cell.n_state)
+
+
+# ---------------------------------------------------------------------------
+# hot-swap state migration (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+def state_migration_mode(old: CompiledStreamCell,
+                         new: CompiledStreamCell) -> Optional[str]:
+    """How live per-stream state moves across a version swap.
+
+    ``"carried"``   — identical in-boundary (bits, signedness, scale):
+                      codes transfer verbatim.
+    ``"requantized"`` — same ``n_state``, different boundary: codes are
+                      re-quantized through :func:`quant.recode`.
+    ``None``        — incompatible state width: streams must drain (the
+                      fleet resets state; ``SwapEvent`` records it).
+    """
+    if old.cell.n_state != new.cell.n_state:
+        return None
+    same = (old.cell.in_spec() == new.cell.in_spec()
+            and old.net.in_log_scale == new.net.in_log_scale)
+    return "carried" if same else "requantized"
+
+
+def migrate_state_codes(old: CompiledStreamCell, new: CompiledStreamCell,
+                        s_codes: Array) -> Array:
+    """Map in-boundary state codes of ``old`` onto ``new``'s in-boundary."""
+    mode = state_migration_mode(old, new)
+    if mode is None:
+        raise ValueError("state widths differ; drain instead of migrating")
+    if mode == "carried":
+        return jnp.asarray(s_codes, jnp.int32)
+    return quant.recode({"log_scale": jnp.asarray(old.net.in_log_scale)},
+                        old.cell.in_spec(),
+                        {"log_scale": jnp.asarray(new.net.in_log_scale)},
+                        new.cell.in_spec(), jnp.asarray(s_codes))

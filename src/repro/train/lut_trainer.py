@@ -79,6 +79,114 @@ def train(cfg: AssembleConfig, data: Dataset, *, steps: int = 200,
 
 
 # ---------------------------------------------------------------------------
+# Sequential tasks — truncated BPTT over repro.stream cells (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+
+def train_stream(cell, data, *, steps: int = 200, lr: float = 5e-3,
+                 batch_size: int = 64, dense: bool = False,
+                 mappings: Optional[Sequence] = None, lasso: float = 0.0,
+                 weight_decay: float = 1e-4, sgdr_t0: int = 0, seed: int = 0,
+                 max_train: int = 2048, tbptt: int = 0,
+                 bn_freeze_frac: float = 0.25) -> TrainResult:
+    """Train a :class:`~repro.stream.cell.StreamCellConfig` on ``[N, T,
+    n_in]`` sequence data (``data.synthetic.SeqDataset``) labelled per
+    sequence.
+
+    The scan carries the *fake-quantized* state values between steps — the
+    exact training-graph image of the folded cell's code-space recurrence.
+    With ``tbptt=k > 0`` the gradient is cut (``stop_gradient`` on the
+    carried state) every ``k`` steps, and the classification loss is read
+    at the last step of EVERY truncation window (averaged) so each window
+    receives a learning signal; ``tbptt=0`` backprops through the whole
+    sequence with the loss at the final step only.
+
+    The last ``bn_freeze_frac`` of the steps train with frozen-stats BN
+    (normalize with the by-then-converged running statistics instead of
+    per-timestep batch statistics, see ``quant.batchnorm_apply``): the
+    folded cell deploys ONE (mean, var) pair, and recurrent per-timestep
+    batch stats differ from it, so the tail phase settles the weights
+    under the exact normalization the deployed cell will use.  Frozen
+    stats from scratch diverge (the EMA/activation feedback loop has no
+    anchor) — hence the warm phase first.
+    """
+    from repro.stream import cell as cell_mod
+    rng = jax.random.PRNGKey(seed)
+    params = cell_mod.init(rng, cell, dense=dense, mappings=mappings)
+    schedule = optim.sgdr_schedule(sgdr_t0) if sgdr_t0 else None
+    ocfg = optim.AdamWConfig(lr=lr, weight_decay=weight_decay,
+                             schedule=schedule)
+    opt = optim.adamw_init(params)
+    x = jnp.asarray(data.x_train[:max_train])
+    y = jnp.asarray(data.y_train[:max_train])
+    t = x.shape[1]
+    win = tbptt if 0 < tbptt < t else t
+    window_starts = tuple(range(0, t, win))
+    binary = cell.n_out == 1
+
+    @functools.partial(jax.jit, static_argnames=("batch_stats",))
+    def step(params, opt, xb, yb, batch_stats=True):
+        def loss_fn(p):
+            s = jnp.zeros((xb.shape[0], cell.n_state), xb.dtype)
+            p_run, total = p, 0.0
+            for lo in window_starts:
+                ys, s, p_run = cell_mod.apply_sequence(
+                    p_run, cell, xb[:, lo:lo + win], s,
+                    training=True, dense=dense,
+                    bn_batch_stats=batch_stats)
+                logits = ys[:, -1]
+                total = total + (losses.binary_cross_entropy(logits, yb)
+                                 if binary else
+                                 losses.softmax_cross_entropy(logits, yb))
+                s = jax.lax.stop_gradient(s)
+            l = total / len(window_starts)
+            if lasso:
+                l = l + lasso * assemble.group_lasso(p, cell.net)
+            return l, p_run
+        (l, new_p), g = jax.value_and_grad(loss_fn, has_aux=True,
+                                           allow_int=True)(params)
+        new_p2, opt2, _ = optim.adamw_update(ocfg, g, opt, new_p)
+        return new_p2, opt2, l
+
+    n = x.shape[0]
+    bs = min(batch_size, n)
+    freeze_from = steps - int(steps * bn_freeze_frac)
+    hist = []
+    for i in range(steps):
+        lo = (i * bs) % (n - bs + 1)
+        params, opt, l = step(params, opt, x[lo:lo + bs], y[lo:lo + bs],
+                              batch_stats=i < freeze_from)
+        hist.append(float(l))
+    return TrainResult(params=params, losses=hist)
+
+
+def stream_accuracy(cell, params: dict, data, *, folded: bool = False,
+                    max_eval: int = 1024, backend: Optional[str] = None
+                    ) -> float:
+    """Sequence-classification accuracy (logits read at the last step).
+
+    ``folded=True`` evaluates the compiled cell's integer-code recurrence
+    (``CompiledStreamCell.predict_sequence``) — the deployed semantics —
+    instead of the fake-quant training graph."""
+    from repro.stream import cell as cell_mod
+    x = np.asarray(data.x_test[:max_eval], np.float32)
+    y = np.asarray(data.y_test[:max_eval])
+    if folded:
+        comp = cell_mod.compile_cell(params, cell, backend=backend)
+        _, logits_seq, _ = comp.predict_sequence(x)
+        logits = np.asarray(logits_seq)[:, -1]
+    else:
+        ys, _, _ = cell_mod.apply_sequence(params, cell, jnp.asarray(x),
+                                           training=False)
+        logits = np.asarray(ys)[:, -1]
+    if cell.n_out == 1:
+        pred = (logits[:, 0] > 0).astype(np.int32)
+    else:
+        pred = logits.argmax(-1)
+    return float((pred == y).mean())
+
+
+# ---------------------------------------------------------------------------
 # Population training (assembly search, DESIGN.md §8)
 # ---------------------------------------------------------------------------
 #

@@ -94,7 +94,11 @@ def test_smoke_prefill_decode(arch):
     assert logits.shape == (b, cfg.padded_vocab)
     assert logits2.shape == (b, cfg.padded_vocab)
     assert bool(jnp.isfinite(logits2).all()), arch
-    assert int(cache["pos"]) == s + 1
+    if cfg.is_enc_dec:
+        assert int(cache["pos"]) == s + 1          # whisper: lock-step scalar
+    else:
+        assert cache["pos"].shape == (b,)          # per-slot positions
+        assert all(int(p) == s + 1 for p in cache["pos"])
     # padded vocab entries are masked out
     if cfg.padded_vocab != cfg.vocab:
         assert float(logits2[:, cfg.vocab:].max()) < -1e20

@@ -56,6 +56,25 @@ def test_engine_greedy_matches_manual_decode(engine_setup):
     assert got == want
 
 
+def test_engine_mixed_prompt_lengths_match_solo(engine_setup):
+    """Requests with DIFFERENT prompt lengths share one decode batch and
+    still reproduce their solo greedy decodes — per-slot [B] positions
+    keep each row's rope/ring-cursor/mask at its own absolute position."""
+    cfg, params = engine_setup
+    p1 = np.arange(4, dtype=np.int32) + 3
+    p2 = np.arange(9, dtype=np.int32) + 1
+    want = {}
+    for rid, prompt in [(0, p1), (1, p2)]:
+        eng = ServeEngine(cfg, params, slots=1, context=32)
+        done = eng.run([Request(rid=rid, prompt=prompt, max_tokens=5)])
+        want[rid] = done[0].out_tokens
+    eng = ServeEngine(cfg, params, slots=2, context=32)
+    done = eng.run([Request(rid=0, prompt=p1, max_tokens=5),
+                    Request(rid=1, prompt=p2, max_tokens=5)])
+    got = {r.rid: r.out_tokens for r in done}
+    assert got == want
+
+
 def test_engine_eos_frees_slot(engine_setup):
     cfg, params = engine_setup
     eng = ServeEngine(cfg, params, slots=1, context=32)

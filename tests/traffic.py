@@ -90,3 +90,93 @@ def make_inputs(trace: Sequence[TrafficEvent], in_features: Dict[str, int],
                         (ev.batch, in_features[ev.model_id])
                         ).astype(np.float32)
             for ev in trace]
+
+
+# ---------------------------------------------------------------------------
+# Stream churn — open / feed / close events for stateful serving
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamEvent:
+    """One stream-lifecycle event for a stateful tenant.
+
+    ``action`` is ``"open"`` (a new stream appears mid-trace), ``"feed"``
+    (``steps`` recurrent steps queued for an open stream — a burst when
+    ``steps > 1``), or ``"close"`` (the stream ends mid-trace; its state
+    is dropped once in-flight steps drain)."""
+
+    model_id: str
+    stream_id: int
+    action: str
+    steps: int = 0
+    gap_ticks: int = 0
+
+
+def stream_churn_trace(model_ids: Sequence[str], *, n_events: int = 60,
+                       seed: int = 0, max_open: int = 12,
+                       open_prob: float = 0.25, close_prob: float = 0.15,
+                       max_steps: int = 6, gap_prob: float = 0.15,
+                       max_gap: int = 3, close_remaining: bool = True
+                       ) -> List[StreamEvent]:
+    """Deterministic stream-churn trace: streams open, burst-feed, and
+    close *mid-trace* (the shapes that break engines which assume a fixed
+    stream population).  Stream ids are unique across the whole trace.
+    With ``close_remaining`` every stream still open at the end gets a
+    trailing close event, so replay tests can compare complete sequences.
+    Same (arguments, seed) -> identical trace, always."""
+    if not model_ids:
+        raise ValueError("model_ids must be non-empty")
+    rng = np.random.default_rng(seed)
+    live: List[tuple] = []                 # (model_id, stream_id)
+    trace: List[StreamEvent] = []
+    next_id = 0
+    for _ in range(n_events):
+        gap = (int(rng.integers(1, max_gap + 1))
+               if rng.random() < gap_prob else 0)
+        r = rng.random()
+        if not live or (r < open_prob and len(live) < max_open):
+            mid = model_ids[int(rng.integers(len(model_ids)))]
+            sid, next_id = next_id, next_id + 1
+            live.append((mid, sid))
+            trace.append(StreamEvent(mid, sid, "open", gap_ticks=gap))
+        elif r < open_prob + close_prob and len(live) > 1:
+            mid, sid = live.pop(int(rng.integers(len(live))))
+            trace.append(StreamEvent(mid, sid, "close", gap_ticks=gap))
+        else:
+            mid, sid = live[int(rng.integers(len(live)))]
+            steps = int(rng.integers(1, max_steps + 1))
+            trace.append(StreamEvent(mid, sid, "feed", steps=steps,
+                                     gap_ticks=gap))
+    if close_remaining:
+        for mid, sid in live:
+            trace.append(StreamEvent(mid, sid, "close"))
+    return trace
+
+
+def make_stream_inputs(trace: Sequence[StreamEvent],
+                       n_in: Dict[str, int], *, seed: int = 0,
+                       low: float = 0.0, high: float = 1.0) -> List:
+    """Deterministic per-event step inputs: ``[steps, n_in[model]]``
+    float32 for every feed event, ``None`` for open/close."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for ev in trace:
+        if ev.action != "feed":
+            out.append(None)
+            continue
+        out.append(rng.uniform(low, high, (ev.steps, n_in[ev.model_id])
+                               ).astype(np.float32))
+    return out
+
+
+def stream_sequences(trace: Sequence[StreamEvent], inputs: Sequence
+                     ) -> Dict[tuple, np.ndarray]:
+    """Full per-stream sequences — feeds concatenated in trace order —
+    keyed by ``(model_id, stream_id)``.  Streams that never got a feed
+    are omitted (nothing to compare)."""
+    seqs: Dict[tuple, List[np.ndarray]] = {}
+    for ev, x in zip(trace, inputs):
+        if ev.action == "feed":
+            seqs.setdefault((ev.model_id, ev.stream_id), []).append(x)
+    return {k: np.concatenate(v) for k, v in seqs.items()}
