@@ -7,6 +7,13 @@ its own metric extraction, baseline file, tolerance, and comparison mode:
     ``BENCH_lut_throughput.json`` + ``BENCH_lut_backends.json`` vs
     ``experiments/BENCH_baseline.json``; RELATIVE tolerance (default ±30%).
     The CI ``perf-gate`` job runs this on every PR.
+  * ``kernel`` — raw streaming throughput per backend x block from the
+    ``kernel`` section of ``BENCH_lut_throughput.json`` vs
+    ``experiments/KERNEL_baseline.json``; RELATIVE tolerance (default
+    ±30%), plus the headline contract as a hard violation: the fused
+    cascade must be the fastest backend at every serving block size
+    (block >= 256).  Runs in the CI ``perf-gate`` job alongside
+    ``throughput`` (docs/PERF_TUNING.md explains how to read it).
   * ``accuracy`` — per-task best frontier accuracy from
     ``BENCH_assembly_search.json`` vs ``experiments/ACC_baseline.json``;
     ABSOLUTE accuracy-drop tolerance (default 0.03).  The CI
@@ -55,6 +62,7 @@ from typing import Callable, Dict, List, Tuple
 
 EXPERIMENTS = os.path.join(os.path.dirname(__file__), "..", "experiments")
 BASELINE = os.path.join(EXPERIMENTS, "BENCH_baseline.json")
+KERNEL_BASELINE = os.path.join(EXPERIMENTS, "KERNEL_baseline.json")
 ACC_BASELINE = os.path.join(EXPERIMENTS, "ACC_baseline.json")
 FLEET_BASELINE = os.path.join(EXPERIMENTS, "FLEET_baseline.json")
 STREAM_BASELINE = os.path.join(EXPERIMENTS, "STREAM_baseline.json")
@@ -111,6 +119,33 @@ def extract_throughput(experiments: str = EXPERIMENTS
                     violations.append(
                         f"backends/{task}/batch{cell['batch']}/{name}: "
                         "not bit-identical")
+    return metrics, violations
+
+
+def extract_kernel(experiments: str = EXPERIMENTS
+                   ) -> Tuple[Metrics, List[str]]:
+    """Flatten the raw-stream kernel cells -> (metrics, violations).
+
+    One rows/s metric per backend x block (relative tolerance), and the
+    fused-is-fastest contract at serving blocks (>= 256) as a hard
+    violation — a tuning or dispatch change that quietly hands the crown
+    back to a layered backend must fail CI even when every individual
+    cell stays inside the drift tolerance.  ``fused_fastest`` is judged
+    by the benchmark at its parity noise floor (the fused and ``take``
+    programs compile to the same HLO on CPU, so "fastest" means "at least
+    parity"; see ``lut_throughput.NOISE_FLOOR``).
+    """
+    metrics: Metrics = {}
+    violations: List[str] = []
+    tp = _load(os.path.join(experiments, "BENCH_lut_throughput.json"))
+    for c in tp["kernel"]:
+        metrics[f"kernel/{c['backend']}/block{c['block']}"
+                "/stream_rows_per_s"] = (c["rows_per_s"], True)
+        if (c["backend"] == "fused" and c["block"] >= 256
+                and not c["fused_fastest"]):
+            violations.append(
+                f"kernel/fused/block{c['block']}: fused cascade is not the "
+                "fastest backend at a serving block size")
     return metrics, violations
 
 
@@ -239,6 +274,8 @@ class Suite:
 SUITES: Dict[str, Suite] = {
     "throughput": Suite("throughput", extract_throughput, BASELINE,
                         tolerance=0.30, mode="relative"),
+    "kernel": Suite("kernel", extract_kernel, KERNEL_BASELINE,
+                    tolerance=0.30, mode="relative"),
     "accuracy": Suite("accuracy", extract_accuracy, ACC_BASELINE,
                       tolerance=0.03, mode="absolute"),
     # wider than throughput: fleet cells layer scheduler timing on top of

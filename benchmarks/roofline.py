@@ -18,6 +18,14 @@ MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) for training; 2*N*D per
 generated/prefilled token for inference cells.  The ratio
 MODEL_FLOPS / HLO_FLOPs shows how much compiled compute is "useful"
 (catching remat/dispatch waste).
+
+``--lut`` switches to the LUT-cascade roofline (docs/KERNELS.md §5): it
+prints the autotuner's modeled candidate grid — (mode, block_b,
+unit_tile) x {compute roof, memory roof, VMEM feasibility} from
+``repro.kernels.autotune.roofline_candidates`` — for each paper task, and
+writes the per-(task, device) choice table to
+``experiments/AUTOTUNE_choices.json`` (the nightly CI uploads it as the
+autotuner audit artifact).  Pure model output: no training, no timing.
 """
 from __future__ import annotations
 
@@ -171,12 +179,89 @@ def markdown_table(results_dir: Optional[str] = None) -> str:
     return "\n".join(lines)
 
 
+# ---------------------------------------------------------------------------
+# LUT-cascade roofline (--lut): the kernel autotuner's model, printed
+# ---------------------------------------------------------------------------
+
+LUT_CHOICES_OUT = os.path.join(os.path.dirname(__file__), "..",
+                               "experiments", "AUTOTUNE_choices.json")
+
+
+def print_lut_candidates(task: str = "nid", device: str = "cpu",
+                         batch: int = 4096) -> List[dict]:
+    """Print the modeled candidate grid for one task's fused cascade."""
+    from repro.configs import paper_tasks
+    from repro.kernels import autotune
+
+    cfg = paper_tasks.task_config(task)
+    layers, off = [], 0
+    for l, spec in enumerate(cfg.layers):
+        layers.append((cfg.prev_width(l), spec.units,
+                       2 ** (cfg.in_bits(l) * spec.fan_in), off,
+                       spec.fan_in, cfg.in_bits(l), int(spec.assemble)))
+        off += spec.units
+    rows = autotune.roofline_candidates(layers, batch=batch, device=device)
+    pick = autotune.pick_tuning(layers, batch=batch, device=device)
+    hdr = (f"{'mode':<9} {'block_b':>7} {'tile':>5} {'comp us':>8} "
+           f"{'mem us':>8} {'bound':>7} {'rows/s':>12} {'vmem KiB':>9} "
+           f"{'fits':>5}")
+    print(f"\n=== {task} @ {device} (batch {batch}) ===")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        star = " *" if (r["mode"] == pick.mode
+                        and r["block_b"] == pick.block_b
+                        and (r["mode"] == "resident"
+                             or r["unit_tile"] == pick.unit_tile)) else ""
+        print(f"{r['mode']:<9} {r['block_b']:>7} "
+              f"{r['unit_tile'] or '-':>5} {r['t_compute_us']:>8.2f} "
+              f"{r['t_memory_us']:>8.2f} {r['bound']:>7} "
+              f"{r['rows_per_s']:>12,.0f} {r['vmem_bytes'] / 1024:>9.0f} "
+              f"{'y' if r['fits_vmem'] else 'N':>5}{star}")
+    print(f"pick: mode={pick.mode} block_b={pick.block_b} "
+          f"unit_tile={pick.unit_tile} (source={pick.source})")
+    return rows
+
+
+def write_lut_choices(out: str = LUT_CHOICES_OUT) -> str:
+    """Write the per-(task, device) autotuner choice table (nightly CI)."""
+    from repro.kernels import autotune
+
+    doc = autotune.choice_table()
+    out = os.path.abspath(out)
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    return out
+
+
+def lut_main(out: str, tasks=None, devices=("cpu", "tpu")) -> None:
+    from repro.configs import paper_tasks
+
+    for task in tasks or sorted(paper_tasks.TASKS):
+        for dev in devices:
+            print_lut_candidates(task, dev)
+    print(f"\nwrote {write_lut_choices(out)}")
+
+
 def main() -> None:
-    import sys
-    results_dir = sys.argv[1] if len(sys.argv) > 1 else None
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("results_dir", nargs="?", default=None,
+                    help="dry-run records dir (LM roofline mode)")
+    ap.add_argument("--lut", action="store_true",
+                    help="LUT-cascade autotuner roofline instead of the "
+                         "LM dry-run table")
+    ap.add_argument("--out", default=LUT_CHOICES_OUT,
+                    help="--lut: where to write the choice table JSON")
+    args = ap.parse_args()
+    if args.lut:
+        lut_main(args.out)
+        return
     for mesh in ("single", "multi"):
         print(f"\n=== mesh: {mesh} ===")
-        print_table(mesh, results_dir)
+        print_table(mesh, args.results_dir)
 
 
 if __name__ == "__main__":

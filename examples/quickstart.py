@@ -204,6 +204,28 @@ def main() -> None:
           f"{s['completed']}/{s['requests']} steps served, "
           f"streamed == offline: {identical}")
 
+    print("== phase 8: autotuning the fused cascade (docs/PERF_TUNING.md)")
+    # Every fused plan carries a KernelTuning: fresh plans get the roofline
+    # model's pick (source="default"); autotune_plan measures the candidate
+    # grid on THIS machine and stamps the winner into the plan, where it
+    # survives save/load inside the artifact.
+    fused = backends.get("fused")
+    t0 = fused_plan.meta["tuning"]
+    tuned_plan = fused.autotune_plan(compiled.compile_backend("fused").plan,
+                                     rows=1024, reps=2)
+    t1 = tuned_plan.meta["tuning"]
+    report = tuned_plan.meta["tuning_report"]
+    print(f"   default (roofline): mode={t0['mode']} block_b={t0['block_b']}"
+          f"  ->  measured: mode={t1['mode']} block_b={t1['block_b']} "
+          f"impl={t1['impl']} ({len(report)} candidates timed)")
+    cin = np.random.default_rng(3).integers(
+        0, fused_plan.meta["input_span"],
+        (64, cfg.in_features)).astype(np.int32)
+    same = bool(np.array_equal(np.asarray(fused.run(tuned_plan, cin)),
+                               np.asarray(fused.run(fused_plan, cin))))
+    print(f"   tuned plan bit-identical: {same} "
+          f"(tuning changes WHERE the cascade runs, never WHAT it returns)")
+
 
 if __name__ == "__main__":
     main()

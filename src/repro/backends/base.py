@@ -81,7 +81,7 @@ class LookupBackend(abc.ABC):
 
     @abc.abstractmethod
     def capabilities(self) -> BackendCapabilities:
-        ...
+        """Static :class:`BackendCapabilities` description (no planning)."""
 
     @abc.abstractmethod
     def plan(self, net: "FoldedNetwork") -> ExecutionPlan:
@@ -96,6 +96,19 @@ class LookupBackend(abc.ABC):
         """Execute the cascade: input codes [batch, in_features] int32 ->
         final-layer codes [batch, units_last] int32.  Must be jit-traceable
         (plan buffers are closed-over constants)."""
+
+    def migrate_plan(self, plan: ExecutionPlan,
+                     net: "FoldedNetwork") -> "ExecutionPlan | None":
+        """Upgrade a persisted plan from an older ``plan_format``.
+
+        Called by ``CompiledLUTNetwork.compile_backend`` when a restored
+        plan's ``meta["plan_format"]`` mismatches this backend, BEFORE
+        falling back to a fresh :meth:`plan`.  Return the upgraded plan
+        (buffers may be reused verbatim so predictions stay bit-identical)
+        or ``None`` when the plan is unrecognizable — the default: only
+        backends with a schema history need to override this.
+        """
+        return None
 
     def unit_sharded_runner(self, plan: ExecutionPlan, mesh, axes):
         """Unit-sharded execution over mesh ``axes`` (placement.py).

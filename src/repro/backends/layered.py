@@ -28,10 +28,13 @@ class LayeredBackend(LookupBackend):
     supports_unit_sharding = True  # per-layer boundaries to all-gather at
 
     def __init__(self, impl: str):
+        """``impl`` is the ``ops.lut_lookup`` kernel name; also the
+        registry name this backend serves under."""
         self._impl = impl
         self.name = impl
 
     def capabilities(self) -> BackendCapabilities:
+        """Describe this per-layer execution strategy for sweeps."""
         desc = {
             "take": "vectorized table[u, addr] gather (pure jnp oracle)",
             "onehot": "one-hot x table MXU matmul in pure jnp",
@@ -42,6 +45,8 @@ class LayeredBackend(LookupBackend):
                                    description=desc, unit_shardable=True)
 
     def plan(self, net) -> ExecutionPlan:
+        """Verbatim extraction of the per-layer tables + mappings (no
+        repacking; that is why these plans are not persisted)."""
         require_mappings(net, f"{self.name}.plan")
         cfg = net.cfg
         layers = []
@@ -58,6 +63,8 @@ class LayeredBackend(LookupBackend):
                              buffers=buffers)
 
     def run(self, plan: ExecutionPlan, codes: Any):
+        """Replay the cascade layer by layer: mapping gather ->
+        ``quant.pack_address`` -> one ``ops.lut_lookup`` per layer."""
         from repro.core import quant
         from repro.kernels import ops
         codes = jnp.asarray(codes)

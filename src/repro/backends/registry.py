@@ -46,6 +46,7 @@ def register(name: str,
 
 
 def unregister(name: str) -> None:
+    """Drop a registered backend (tests; no-op for unknown names)."""
     _FACTORIES.pop(name, None)
     _INSTANCES.pop(name, None)
 

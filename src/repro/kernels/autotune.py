@@ -1,0 +1,293 @@
+"""Roofline-driven autotuner for the fused L-LUT cascade kernels.
+
+The fused cascade (`kernels.lut_cascade`) has three knobs that matter for
+throughput — which implementation runs (compiled Pallas vs the pure-jnp
+flat-gather path), how the Pallas kernel tiles (``mode`` resident vs
+streamed, ``block_b`` batch tile, ``unit_tile`` streamed tile width) — and
+the right answers depend on (table size, beta, device).  This module owns
+that decision:
+
+  * :class:`KernelTuning` — the chosen knobs, serialized into
+    ``ExecutionPlan.meta["tuning"]`` by the fused backend so the choice
+    survives ``save``/``load`` and mesh placement (docs/KERNELS.md §5).
+  * :func:`pick_tuning` — the *model-driven* tuner: a per-candidate
+    roofline (compute time vs memory-movement time against the device's
+    peak flops / HBM bandwidth, VMEM-feasibility filtered) picked without
+    running anything.  This is what planning uses by default.
+  * :func:`measure_tuning` — the *measurement-driven* tuner: times a
+    caller-supplied runner over the candidate grid and returns the fastest
+    (``source="measured"``).  ``FusedCascadeBackend.autotune_plan`` wires
+    it to a real plan; docs/PERF_TUNING.md shows the workflow.
+  * :func:`roofline_candidates` / :func:`choice_table` — the modeled
+    candidate grid, as data: ``benchmarks/roofline.py --lut`` prints it
+    and the nightly CI job uploads :func:`choice_table` over every paper
+    task as an artifact.
+
+The model is deliberately small: lookup tables admit no data reuse beyond
+what fits in VMEM, so the only real questions are "do the tables fit?"
+(picks resident vs streamed) and "how big a batch tile keeps the one-hot
+intermediate inside the VMEM budget?" (picks ``block_b``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.kernels.lut_gather import VMEM_TILE_BUDGET
+
+# peak flops / HBM-equivalent bandwidth per device family.  TPU numbers
+# match benchmarks/roofline.py (v5p-class); the CPU row models the host
+# streaming from LLC/DRAM — coarse on purpose, the model only has to rank
+# candidates, not predict wall-clock.
+DEVICE_MODELS: Dict[str, Dict[str, float]] = {
+    "tpu": {"peak_flops": 197e12, "hbm_bw": 819e9, "vmem_bytes": 64 * 2**20},
+    "gpu": {"peak_flops": 60e12, "hbm_bw": 1.5e12, "vmem_bytes": 48 * 2**20},
+    "cpu": {"peak_flops": 2e11, "hbm_bw": 4e10, "vmem_bytes": 8 * 2**20},
+}
+
+BLOCK_B_CANDIDATES = (64, 128, 256, 512, 1024)
+UNIT_TILE_CANDIDATES = (8, 16, 32)
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelTuning:
+    """One fused-cascade tuning choice, persisted in the ExecutionPlan.
+
+    ``impl`` ``None`` means auto: compiled Pallas on TPU, the jnp
+    flat-gather path wherever Pallas would run interpreted (``ops``
+    resolves it per process, so one artifact serves both device kinds).
+    ``source`` records provenance: ``default`` (schema migration),
+    ``roofline`` (modeled) or ``measured`` (timed on this host).
+    """
+
+    impl: Optional[str] = None          # None=auto | "xla" | "pallas"
+    mode: str = "resident"              # "resident" | "streamed"
+    block_b: int = 256
+    unit_tile: int = 8
+    table_dtype: Optional[str] = None   # narrowest that fits when None
+    source: str = "default"
+
+    def to_meta(self) -> Dict[str, Any]:
+        """JSON-serializable form for ``ExecutionPlan.meta['tuning']``."""
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_meta(cls, meta: Optional[Dict[str, Any]]) -> "KernelTuning":
+        """Rebuild from plan meta; unknown keys (from a newer schema) are
+        dropped rather than erroring so old code can run newer plans."""
+        if not meta:
+            return cls()
+        fields = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in meta.items() if k in fields})
+
+
+def device_kind(name: Optional[str] = None) -> str:
+    """Normalize a jax backend name to a DEVICE_MODELS key (default: the
+    current process backend)."""
+    if name is None:
+        import jax
+        name = jax.default_backend()
+    return name if name in DEVICE_MODELS else "cpu"
+
+
+# ---------------------------------------------------------------------------
+# the roofline model
+# ---------------------------------------------------------------------------
+
+def _layer_dims(layers: Sequence[Sequence[int]]):
+    l4 = [(int(p), int(u), int(e), int(o)) for p, u, e, o, *_ in layers]
+    total_units = sum(u for _, u, _, _ in l4)
+    max_prev = max(p for p, _, _, _ in l4)
+    max_entries = max(e for _, _, e, _ in l4)
+    return l4, total_units, max_prev, max_entries
+
+
+def resident_bytes(layers: Sequence[Sequence[int]],
+                   table_itemsize: int) -> int:
+    """VMEM bytes the resident kernel must hold for the whole cascade
+    (packed tables + address matrices)."""
+    _, total_units, max_prev, max_entries = _layer_dims(layers)
+    return (total_units * max_entries * table_itemsize
+            + max_prev * total_units * 4)
+
+
+def roofline_candidates(layers: Sequence[Sequence[int]], *,
+                        table_itemsize: int = 4, batch: int = 4096,
+                        device: Optional[str] = None) -> List[Dict[str, Any]]:
+    """The modeled candidate grid: one row per (mode, block_b[, unit_tile])
+    with compute time, memory time, the binding roof, and VMEM feasibility.
+
+    Rows are plain dicts so ``benchmarks/roofline.py`` can print them and
+    the nightly choice-table artifact can serialize them verbatim.
+    """
+    # local import keeps this module importable without pulling kernels in
+    from repro.kernels.lut_cascade import (_phase_layout, cascade_bytes,
+                                           cascade_flops, layers_v1)
+    dev = device_kind(device)
+    m = DEVICE_MODELS[dev]
+    l4 = layers_v1(layers)
+    flops = cascade_flops(l4, batch)
+    rows: List[Dict[str, Any]] = []
+    for mode in ("resident", "streamed"):
+        for block_b in BLOCK_B_CANDIDATES:
+            for unit_tile in (UNIT_TILE_CANDIDATES if mode == "streamed"
+                              else (0,)):
+                if mode == "resident":
+                    worst = max(u * e for _, u, e, _ in l4)
+                    vmem = (resident_bytes(l4, table_itemsize)
+                            + block_b * worst * 4)
+                else:
+                    _, _, _, _, _, a_dim = _phase_layout(l4, unit_tile)
+                    max_e = max(e for _, _, e, _ in l4)
+                    vmem = (block_b * (unit_tile * max_e + 2 * a_dim) * 4
+                            + 2 * unit_tile * (max_e * table_itemsize
+                                               + a_dim * 4))
+                byts = cascade_bytes(l4, batch, table_itemsize, mode=mode,
+                                     block_b=block_b)
+                t_comp = flops / m["peak_flops"]
+                t_mem = byts / m["hbm_bw"]
+                rows.append({
+                    "device": dev, "mode": mode, "block_b": block_b,
+                    "unit_tile": unit_tile or None,
+                    "flops": flops, "bytes": byts,
+                    "t_compute_us": round(t_comp * 1e6, 3),
+                    "t_memory_us": round(t_mem * 1e6, 3),
+                    "bound": "compute" if t_comp >= t_mem else "memory",
+                    "t_us": round(max(t_comp, t_mem) * 1e6, 3),
+                    "rows_per_s": round(batch / max(t_comp, t_mem), 1),
+                    "vmem_bytes": vmem,
+                    "fits_vmem": vmem <= m["vmem_bytes"],
+                })
+    return rows
+
+
+def pick_tuning(layers: Sequence[Sequence[int]], *,
+                table_itemsize: int = 4, batch: int = 4096,
+                device: Optional[str] = None,
+                table_dtype: Optional[str] = None) -> KernelTuning:
+    """Model-driven choice: the fastest VMEM-feasible roofline candidate.
+
+    Ties break toward resident mode (no re-streaming) and larger batch
+    tiles (fewer grid steps).  ``impl`` stays ``None`` (auto) so the same
+    persisted plan runs compiled Pallas on TPU and the jnp flat-gather
+    path on interpret-mode hosts.
+    """
+    rows = [r for r in roofline_candidates(
+        layers, table_itemsize=table_itemsize, batch=batch, device=device)
+        if r["fits_vmem"]]
+    if not rows:  # nothing fits the model's VMEM budget: stream, smallest
+        return KernelTuning(mode="streamed", block_b=BLOCK_B_CANDIDATES[0],
+                            unit_tile=UNIT_TILE_CANDIDATES[0],
+                            table_dtype=table_dtype, source="roofline")
+    rows.sort(key=lambda r: (r["t_us"],
+                             0 if r["mode"] == "resident" else 1,
+                             -r["block_b"]))
+    best = rows[0]
+    return KernelTuning(mode=best["mode"], block_b=best["block_b"],
+                        unit_tile=best["unit_tile"] or 8,
+                        table_dtype=table_dtype, source="roofline")
+
+
+def default_tuning(layers: Sequence[Sequence[int]], *,
+                   table_itemsize: int = 4,
+                   table_dtype: Optional[str] = None) -> KernelTuning:
+    """The tuning stamped on plans that never ran the tuner (fresh plans
+    before planning-time tuning, v1 plans migrated across the schema
+    bump): the roofline pick for the current device, ``source="default"``
+    so tooling can tell it apart from an explicit tuner run."""
+    t = pick_tuning(layers, table_itemsize=table_itemsize,
+                    table_dtype=table_dtype)
+    return dataclasses.replace(t, source="default")
+
+
+# ---------------------------------------------------------------------------
+# measurement-driven tuning
+# ---------------------------------------------------------------------------
+
+def measure_tuning(run_factory: Callable[[KernelTuning], Callable[[], Any]],
+                   candidates: Sequence[KernelTuning], *,
+                   reps: int = 3) -> Tuple[KernelTuning, List[Dict[str, Any]]]:
+    """Time each candidate and return (fastest, per-candidate report).
+
+    ``run_factory(tuning)`` returns a nullary callable that executes one
+    full cascade pass with that tuning and blocks until done (the caller
+    owns data/jit setup; the first call per candidate is discarded as
+    compile warm-up).  Reps are interleaved across candidates so a slow
+    host phase hits all of them equally; best-of is kept (noise on a
+    loaded host is one-sided).
+    """
+    if not candidates:
+        raise ValueError("measure_tuning: empty candidate list")
+    runners = [run_factory(t) for t in candidates]
+    for r in runners:
+        r()  # warm-up / compile, excluded from timing
+    best = [math.inf] * len(candidates)
+    for _ in range(max(1, reps)):
+        for i, r in enumerate(runners):
+            t0 = time.perf_counter()
+            r()
+            best[i] = min(best[i], time.perf_counter() - t0)
+    report = [{"tuning": t.to_meta(), "best_s": round(b, 6)}
+              for t, b in zip(candidates, best)]
+    winner = dataclasses.replace(
+        candidates[min(range(len(best)), key=best.__getitem__)],
+        source="measured")
+    return winner, report
+
+
+def measurement_grid(layers: Sequence[Sequence[int]], *,
+                     table_itemsize: int = 4,
+                     table_dtype: Optional[str] = None,
+                     max_candidates: int = 6) -> List[KernelTuning]:
+    """A small measurement grid seeded by the roofline ranking: the model
+    orders the VMEM-feasible candidates, measurement confirms the top few
+    (model-guided search instead of brute force)."""
+    rows = [r for r in roofline_candidates(layers,
+                                           table_itemsize=table_itemsize)
+            if r["fits_vmem"]]
+    rows.sort(key=lambda r: r["t_us"])
+    grid = [KernelTuning(mode=r["mode"], block_b=r["block_b"],
+                         unit_tile=r["unit_tile"] or 8,
+                         table_dtype=table_dtype, source="roofline")
+            for r in rows[:max_candidates]]
+    return grid or [KernelTuning(table_dtype=table_dtype)]
+
+
+# ---------------------------------------------------------------------------
+# the nightly choice-table artifact
+# ---------------------------------------------------------------------------
+
+def choice_table(tasks: Optional[Sequence[str]] = None,
+                 devices: Sequence[str] = ("cpu", "tpu"),
+                 batch: int = 4096) -> Dict[str, Any]:
+    """Per-(task, device) autotuner choices over the paper configs.
+
+    Pure model output (no training, no timing): layer shapes come from
+    the task configs alone, so this runs in seconds and is uploaded by
+    the nightly CI as the autotuner audit artifact."""
+    from repro.configs import paper_tasks
+    tasks = list(tasks or sorted(paper_tasks.TASKS))
+    out: Dict[str, Any] = {"batch": batch, "choices": []}
+    for task in tasks:
+        cfg = paper_tasks.task_config(task)
+        layers, off = [], 0
+        for l, spec in enumerate(cfg.layers):
+            entries = 2 ** (cfg.in_bits(l) * spec.fan_in)
+            layers.append((cfg.prev_width(l), spec.units, entries, off,
+                           spec.fan_in, cfg.in_bits(l),
+                           int(spec.assemble)))
+            off += spec.units
+        max_bits = max(spec.bits for spec in cfg.layers)
+        itemsize = 1 if max_bits <= 7 else (2 if max_bits <= 15 else 4)
+        for dev in devices:
+            t = pick_tuning(layers, table_itemsize=itemsize, batch=batch,
+                            device=dev)
+            out["choices"].append({
+                "task": task, "device": dev,
+                "table_itemsize": itemsize,
+                "resident_bytes": resident_bytes(layers, itemsize),
+                "tuning": t.to_meta(),
+            })
+    return out

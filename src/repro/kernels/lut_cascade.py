@@ -1,46 +1,141 @@
-"""Pallas TPU kernel: the ENTIRE folded L-LUT cascade in one launch.
+"""Fused L-LUT cascade kernels: the ENTIRE folded network in one launch.
 
 The per-layer path (`lut_gather`) pays one kernel dispatch per layer and
-re-reads the activations from HBM between layers.  The folded networks the
-paper deploys are tiny (all tables together are a few hundred KiB), so the
-whole network fits in VMEM at once; this kernel executes every layer inside
-a single ``pallas_call`` with the grid tiled over batch only:
+re-reads the activations from HBM between layers.  This module executes
+every layer of the folded cascade inside a single launch, in one of three
+implementations selected by the autotuner (`kernels.autotune`) via
+``ops.lut_cascade``:
+
+  * :func:`lut_cascade_xla` — pure-jnp gather cascade.  One fused XLA
+    program: per layer, gather the fan-in codes, pack the address with an
+    integer weight sum, and gather ``tab[u, addr]`` from a static
+    (constant-folded) slice of the bit-packed table buffer.  Bit-exact,
+    no Pallas; the fastest path on CPU/GPU where Pallas would run in
+    interpret mode.
+  * :func:`lut_cascade_pallas` ``mode="resident"`` — single ``pallas_call``,
+    grid over batch only, every layer's table VMEM-resident for the whole
+    cascade.  Right when all tables together fit comfortably in VMEM (the
+    common case: paper configs total a few hundred KiB).
+  * :func:`lut_cascade_pallas` ``mode="streamed"`` — 2-D grid over
+    (batch-tile x layer-unit-tile).  Tables and address matrices are cut
+    into per-phase ``unit_tile``-wide tiles and streamed HBM->VMEM by the
+    Pallas pipeline (the next phase's tiles DMA while the current phase
+    runs on the MXU — automatic double buffering), with the per-phase
+    write offsets scalar-prefetched via ``PrefetchScalarGridSpec`` and the
+    activation carried across phases in VMEM scratch guarded by
+    ``pl.when``.  Right when the packed tables outgrow the VMEM budget.
+
+Shared algebra (docs/KERNELS.md has the full walkthrough):
 
   * **Tables** for all layers are bit-packed into ONE buffer
     ``[total_units, max_entries]`` (int8/int16 when the largest beta
-    allows, e.g. the 1-bit MNIST layers pack 4x denser than int32), each
-    layer a static row-slice — resident in VMEM across the cascade.
+    allows, e.g. 1-bit layers pack 4x denser than int32), each layer a
+    static row-slice.
   * **Mapping gathers + address formation** collapse into one MXU matmul
     per layer: with ``A_l[p, u] = sum_f 2^{bits*(F-1-f)} [map_l[u,f] = p]``
     the packed address is ``addr = codes @ A_l`` (assemble layers are the
     contiguous mapping, duplicate fan-in indices just sum their weights).
     All values are integers below 2^24, so f32 MXU arithmetic is exact —
     planning enforces ``bits*F <= 24`` (paper configs max out at 12).
-  * **Lookup** is the one-hot x table contraction of `lut_gather`, per
-    layer, on the VMEM-resident table slice.
+  * **Lookup** is a one-hot x table contraction on the MXU (Pallas modes)
+    or a flat gather (XLA mode); padded rows/columns are zero everywhere,
+    so full-width padded matmuls stay exact.
 
-Intermediate activations never leave VMEM.  Validated bit-exact against the
-per-layer 'take' oracle over every paper task config by tests/test_backends.
+Every ``pallas_call`` carries a :func:`cascade_cost_estimate` so XLA's
+scheduler sees the kernel's true arithmetic intensity.  All three paths
+are validated bit-exact against the per-layer 'take' oracle over every
+paper task config by tests/test_backends and tests/test_kernels.
 """
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+import math
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.lut_gather import fit_block_b
 
 Array = jax.Array
 
-# static per-layer plan entry: (prev_width, units, entries, row_offset)
+# static per-layer plan entry, two generations:
+#   v1 (resident kernel):  (prev_width, units, entries, row_offset)
+#   v2 (all paths):        (prev_width, units, entries, row_offset,
+#                           fan_in, in_bits, assemble)
+# v2 is a superset; helpers below accept either and slice what they need.
 LayerMeta = Tuple[int, int, int, int]
 
 
-def _cascade_kernel(codes_ref, amat_ref, tables_ref, out_ref, *,
-                    layers: Tuple[LayerMeta, ...]):
+def layers_v1(layers: Sequence[Sequence[int]]) -> Tuple[LayerMeta, ...]:
+    """Project layer metadata (v1 or v2 tuples) to the kernel 4-tuples."""
+    return tuple((int(p), int(u), int(e), int(o))
+                 for p, u, e, o, *_ in layers)
+
+
+def is_v2_layers(layers: Sequence[Sequence[int]]) -> bool:
+    """True when every layer entry carries the v2 ``(fan_in, in_bits,
+    assemble)`` tail the XLA path needs."""
+    return all(len(l) >= 7 for l in layers)
+
+
+# ---------------------------------------------------------------------------
+# cost model shared by both Pallas modes
+# ---------------------------------------------------------------------------
+
+def cascade_flops(layers: Sequence[Sequence[int]], batch: int) -> int:
+    """MXU flops of one cascade pass: per layer, the address-formation
+    matmul (2*B*prev*units) plus the one-hot lookup contraction
+    (2*B*units*entries)."""
+    f = 0
+    for prev, units, entries, _, *_ in layers:
+        f += 2 * batch * prev * units + 2 * batch * units * entries
+    return f
+
+
+def cascade_bytes(layers: Sequence[Sequence[int]], batch: int,
+                  table_itemsize: int, *, mode: str = "resident",
+                  block_b: int = 256) -> int:
+    """HBM bytes of one cascade pass.
+
+    Resident mode reads the packed buffers once; streamed mode re-streams
+    the table/amat tiles for every batch tile (that re-read is the price
+    of never holding the full table set in VMEM)."""
+    l4 = layers_v1(layers)
+    total_units = sum(u for _, u, _, _ in l4)
+    max_prev = max(p for p, _, _, _ in l4)
+    max_entries = max(e for _, _, e, _ in l4)
+    w0 = l4[0][0]
+    n_out = l4[-1][1]
+    const = max_prev * total_units * 4 + total_units * max_entries * table_itemsize
+    io = batch * w0 * 4 + batch * n_out * 4
+    if mode == "streamed":
+        n_bt = max(1, math.ceil(batch / block_b))
+        return io + n_bt * const
+    return io + const
+
+
+def cascade_cost_estimate(layers: Sequence[Sequence[int]], batch: int,
+                          table_itemsize: int, *, mode: str = "resident",
+                          block_b: int = 256) -> pl.CostEstimate:
+    """``pl.CostEstimate`` for one fused-cascade launch (both modes)."""
+    return pl.CostEstimate(
+        flops=cascade_flops(layers, batch),
+        bytes_accessed=cascade_bytes(layers, batch, table_itemsize,
+                                     mode=mode, block_b=block_b),
+        transcendentals=0)
+
+
+# ---------------------------------------------------------------------------
+# mode "resident": grid over batch, all tables VMEM-resident
+# ---------------------------------------------------------------------------
+
+def _resident_kernel(codes_ref, amat_ref, tables_ref, out_ref, *,
+                     layers: Tuple[LayerMeta, ...]):
+    """One batch tile through every layer; tables stay resident."""
     h = codes_ref[...].astype(jnp.float32)               # [BB, W0]
     for prev, units, entries, off in layers:
         a = amat_ref[0:prev, off:off + units]            # [prev, U] f32
@@ -62,10 +157,148 @@ def _cascade_kernel(codes_ref, amat_ref, tables_ref, out_ref, *,
     out_ref[...] = h.astype(jnp.int32)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("layers", "block_b", "interpret"))
+# ---------------------------------------------------------------------------
+# mode "streamed": 2-D grid (batch-tile x phase), tiles streamed HBM->VMEM
+# ---------------------------------------------------------------------------
+
+def _phase_layout(layers: Tuple[LayerMeta, ...], unit_tile: int):
+    """Static phase plan for the streamed kernel.
+
+    A *phase* is one (layer, unit-tile) pair; phases run sequentially on
+    the inner grid axis.  Returns the per-phase scalar-prefetch arrays
+    (within-layer column offset + start/end/output flags) and the padded
+    activation width ``a_dim`` (max of the input width and every layer's
+    tile-rounded unit count — the VMEM scratch that carries activations
+    between phases)."""
+    cols, starts, ends, outs = [], [], [], []
+    src = []                                 # (row_lo, row_hi) per phase
+    last = len(layers) - 1
+    for li, (_, units, _, off) in enumerate(layers):
+        n_t = math.ceil(units / unit_tile)
+        for c in range(n_t):
+            cols.append(c * unit_tile)
+            starts.append(1 if c == 0 else 0)
+            ends.append(1 if c == n_t - 1 else 0)
+            outs.append(1 if li == last else 0)
+            lo = off + c * unit_tile
+            src.append((lo, min(lo + unit_tile, off + units)))
+    a_dim = max([layers[0][0]] +
+                [math.ceil(u / unit_tile) * unit_tile
+                 for _, u, _, _ in layers])
+    return (np.asarray(cols, np.int32), np.asarray(starts, np.int32),
+            np.asarray(ends, np.int32), np.asarray(outs, np.int32),
+            src, a_dim)
+
+
+def _streamed_kernel(col_ref, start_ref, end_ref, emit_ref,  # scalar prefetch
+                     codes_ref, amat_ref, tab_ref, out_ref,
+                     h_ref, hn_ref, *, w0: int, block_b: int,
+                     a_dim: int, unit_tile: int, max_entries: int):
+    """One (batch-tile, phase) grid step.
+
+    ``h_ref`` holds the current layer's *input* codes (f32, zero-padded to
+    ``a_dim``); ``hn_ref`` accumulates the layer's output tile by tile.
+    Both live in VMEM scratch and persist across the sequential phase
+    axis.  ``amat_ref``/``tab_ref`` see only this phase's tile — the
+    Pallas pipeline fetches phase j+1's tiles while phase j computes."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _load_input():                        # first phase of the cascade
+        h_ref[...] = jnp.zeros((block_b, a_dim), jnp.float32)
+        h_ref[:, 0:w0] = codes_ref[...].astype(jnp.float32)
+
+    @pl.when(start_ref[j] == 1)
+    def _layer_start():                       # fresh accumulator per layer
+        hn_ref[...] = jnp.zeros((block_b, a_dim), jnp.float32)
+
+    # address formation over the FULL padded width: padded h columns and
+    # padded amat rows are both zero, so the wide matmul is exact.
+    a = amat_ref[0]                                      # [A, U_t] f32
+    addr = jnp.dot(h_ref[...], a, preferred_element_type=jnp.float32,
+                   precision=jax.lax.Precision.HIGHEST)
+    addr_i = jnp.round(addr).astype(jnp.int32)           # [BB, U_t]
+    tab = tab_ref[0].astype(jnp.float32)                 # [U_t, E] f32
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, max_entries), 2)
+    onehot = (addr_i[..., None] == iota).astype(jnp.float32)
+    out = jax.lax.dot_general(                           # [U_t, BB, 1]
+        onehot.transpose(1, 0, 2), tab[..., None],
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+        precision=jax.lax.Precision.HIGHEST)
+    codes_out = jnp.round(out[..., 0].T)                 # [BB, U_t] f32
+
+    col = col_ref[j]
+    hn_ref[:, pl.ds(col, unit_tile)] = codes_out
+
+    @pl.when(end_ref[j] == 1)
+    def _layer_end():                         # output becomes next input
+        h_ref[...] = hn_ref[...]
+
+    @pl.when(emit_ref[j] == 1)
+    def _emit():                              # final layer: write codes out
+        out_ref[:, pl.ds(col, unit_tile)] = codes_out.astype(jnp.int32)
+
+
+def _streamed_call(codes_p: Array, amat: Array, tables: Array,
+                   layers: Tuple[LayerMeta, ...], block_b: int,
+                   unit_tile: int, interpret: bool) -> Array:
+    bb, w0 = codes_p.shape
+    cols, starts, ends, outs, src, a_dim = _phase_layout(layers, unit_tile)
+    n_phases = len(cols)
+    max_entries = tables.shape[1]
+    n_out = layers[-1][1]
+    n_out_pad = math.ceil(n_out / unit_tile) * unit_tile
+
+    # cut the flat plan buffers into per-phase tiles (static slices; this
+    # runs inside jit so XLA fuses the restacking into the launch prologue)
+    amat_p = jnp.pad(amat, ((0, a_dim - amat.shape[0]), (0, 0)))
+    a_tiles = jnp.stack([
+        jnp.pad(amat_p[:, lo:hi], ((0, 0), (0, unit_tile - (hi - lo))))
+        for lo, hi in src])                              # [P, A, U_t]
+    t_tiles = jnp.stack([
+        jnp.pad(tables[lo:hi], ((0, unit_tile - (hi - lo)), (0, 0)))
+        for lo, hi in src])                              # [P, U_t, E]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(bb // block_b, n_phases),
+        in_specs=[
+            pl.BlockSpec((block_b, w0), lambda i, j, *_: (i, 0)),
+            pl.BlockSpec((1, a_dim, unit_tile), lambda i, j, *_: (j, 0, 0)),
+            pl.BlockSpec((1, unit_tile, max_entries),
+                         lambda i, j, *_: (j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, n_out_pad), lambda i, j, *_: (i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_b, a_dim), jnp.float32),   # h (layer input)
+            pltpu.VMEM((block_b, a_dim), jnp.float32),   # h_next (output acc)
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_streamed_kernel, w0=w0, block_b=block_b,
+                          a_dim=a_dim, unit_tile=unit_tile,
+                          max_entries=max_entries),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bb, n_out_pad), jnp.int32),
+        cost_estimate=cascade_cost_estimate(
+            layers, bb, tables.dtype.itemsize, mode="streamed",
+            block_b=block_b),
+        interpret=interpret,
+    )(jnp.asarray(cols), jnp.asarray(starts), jnp.asarray(ends),
+      jnp.asarray(outs), codes_p, a_tiles, t_tiles)
+    return out[:, :n_out]
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("layers", "block_b", "mode",
+                                             "unit_tile", "interpret"))
 def lut_cascade_pallas(codes: Array, amat: Array, tables: Array, *,
                        layers: Tuple[LayerMeta, ...], block_b: int = 256,
+                       mode: str = "resident", unit_tile: int = 8,
                        interpret: bool = True) -> Array:
     """Run the whole folded cascade in a single ``pallas_call``.
 
@@ -74,26 +307,45 @@ def lut_cascade_pallas(codes: Array, amat: Array, tables: Array, *,
             matrices packed block-wise (layer l occupies rows [0:prev_l],
             cols [off_l : off_l+units_l]).
     tables: [total_units, max_entries] int — per-layer tables packed along
-            rows at the same offsets.
-    layers: static ``(prev, units, entries, off)`` per layer.
+            rows at the same offsets (narrow dtype allowed).
+    layers: static per-layer metadata, ``(prev, units, entries, off)``
+            4-tuples or the v2 7-tuples (extra fields ignored here).
+    mode:   "resident" (1-D batch grid, tables VMEM-resident) or
+            "streamed" (2-D batch x phase grid, tiles streamed HBM->VMEM
+            with scalar-prefetched offsets).  ``unit_tile`` sets the
+            streamed tile width; the autotuner picks both.
     """
+    if mode not in ("resident", "streamed"):
+        raise ValueError(f"unknown lut_cascade mode {mode!r}")
+    layers = layers_v1(layers)
     batch = codes.shape[0]
     # never tile wider than the batch itself (rounded up to a power of two,
     # floored at the sublane count): under batch-sharded placement each
     # device sees batch/n rows, and padding those to a full 256-row tile
     # would waste most of the kernel's work
     block_b = min(block_b, max(8, 1 << (batch - 1).bit_length()))
-    # the one-hot tile is the VMEM high-water mark; shrink block_b to fit
-    worst = max(u * t for _, u, t, _ in layers)
-    block_b = fit_block_b(block_b, worst * 4)
+    if mode == "resident":
+        # the one-hot tile is the VMEM high-water mark; shrink to fit
+        worst = max(u * t for _, u, t, _ in layers)
+        block_b = fit_block_b(block_b, worst * 4)
+    else:
+        # high-water: one-hot [BB, U_t, E] + the two activation scratches
+        _, _, _, _, _, a_dim = _phase_layout(layers, unit_tile)
+        per_row = (unit_tile * tables.shape[1] + 2 * a_dim) * 4
+        block_b = fit_block_b(block_b, per_row)
 
     pb = (-batch) % block_b
     codes_p = jnp.pad(codes, ((0, pb), (0, 0)))  # zero rows: valid addresses
     bb = codes_p.shape[0]
     n_out = layers[-1][1]
 
+    if mode == "streamed":
+        out = _streamed_call(codes_p, amat, tables, layers, block_b,
+                             unit_tile, interpret)
+        return out[:batch]
+
     out = pl.pallas_call(
-        functools.partial(_cascade_kernel, layers=layers),
+        functools.partial(_resident_kernel, layers=layers),
         grid=(bb // block_b,),
         in_specs=[
             pl.BlockSpec((block_b, codes.shape[1]), lambda i: (i, 0)),
@@ -102,6 +354,55 @@ def lut_cascade_pallas(codes: Array, amat: Array, tables: Array, *,
         ],
         out_specs=pl.BlockSpec((block_b, n_out), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((bb, n_out), jnp.int32),
+        cost_estimate=cascade_cost_estimate(
+            layers, bb, tables.dtype.itemsize, mode="resident",
+            block_b=block_b),
         interpret=interpret,
     )(codes_p, amat, tables)
     return out[:batch]
+
+
+@functools.partial(jax.jit, static_argnames=("layers",))
+def lut_cascade_xla(codes: Array, tables: Array,
+                    mappings: Tuple[Optional[Array], ...], *,
+                    layers: Tuple[Tuple[int, ...], ...]) -> Array:
+    """Pure-jnp fused cascade: per-layer gathers on the packed table buffer.
+
+    The whole cascade lowers to ONE XLA program with, per layer, a gather
+    of the fan-in codes, an integer weight-sum address pack, and a
+    row-indexed table gather ``tab[u, addr[b, u]]`` — no one-hot
+    materialization, so it is the fastest fused path wherever Pallas would
+    run interpreted (CPU/GPU).  Bit-exact vs the Pallas modes and the
+    per-layer oracle.
+
+    Each layer's table is a *static* slice ``tables[off:off+units,
+    :entries]`` of the packed buffer, which XLA constant-folds, so the hot
+    program is op-for-op the per-layer oracle's gather (a flat 1-D
+    ``jnp.take`` over the whole packed buffer measures ~10% slower on CPU:
+    its clip-mode clamp and base-offset add survive into the optimized
+    HLO as extra compare/select/broadcast chains per layer).
+
+    codes:    [batch, in_features] int32.
+    tables:   [total_units, max_entries] packed tables (narrow dtype ok).
+    mappings: per layer, the [units, fan_in] int32 mapping — or ``None``
+              for assemble layers (their mapping is the identity reshape).
+    layers:   static v2 7-tuples
+              ``(prev, units, entries, off, fan_in, in_bits, assemble)``.
+    """
+    if not is_v2_layers(layers):
+        raise ValueError("lut_cascade_xla needs v2 layer metadata "
+                         "(prev, units, entries, off, fan_in, in_bits, "
+                         "assemble); re-plan with the current backend")
+    h = codes.astype(jnp.int32)
+    for (prev, units, entries, off, fan_in, bits, asm), mp in zip(
+            layers, mappings):
+        if asm:
+            ci = h.reshape(h.shape[0], units, fan_in)
+        else:
+            ci = h[:, mp]                                # [B, U, F]
+        w = jnp.asarray(2 ** (bits * np.arange(fan_in - 1, -1, -1)),
+                        jnp.int32)
+        addr = jnp.sum(ci * w, axis=-1, dtype=jnp.int32)  # [B, U]
+        tab = tables[off:off + units, :entries].astype(jnp.int32)
+        h = jax.vmap(lambda a, t=tab: t[jnp.arange(t.shape[0]), a])(addr)
+    return h

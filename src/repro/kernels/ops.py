@@ -29,7 +29,8 @@ import jax
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.lut_cascade import lut_cascade_pallas
+from repro.kernels.lut_cascade import (is_v2_layers, lut_cascade_pallas,
+                                       lut_cascade_xla)
 from repro.kernels.lut_gather import lut_lookup_pallas
 from repro.kernels.subnet_mlp import unit_affine_pallas
 
@@ -88,12 +89,39 @@ def lut_lookup(table: Array, addr: Array, *, impl: str = "take") -> Array:
 
 
 def lut_cascade(codes: Array, amat: Array, tables: Array, *,
-                layers, block_b: int = 256) -> Array:
-    """Whole-network fused L-LUT cascade (single ``pallas_call``); see
-    ``kernels.lut_cascade``.  Interpret mode resolved here, like the rest
-    of the Pallas wrappers."""
+                layers, mappings=None, tuning=None,
+                block_b: Optional[int] = None) -> Array:
+    """Whole-network fused L-LUT cascade; see ``kernels.lut_cascade``.
+
+    Dispatches between the implementations on the plan's persisted
+    :class:`~repro.kernels.autotune.KernelTuning` (``tuning`` may be the
+    dataclass or its ``meta`` dict):
+
+      * ``tuning.impl`` pins "pallas" or "xla" explicitly;
+      * ``impl=None`` (auto) runs the compiled Pallas kernel when
+        :func:`pallas_interpret` is off (TPU), else the pure-jnp
+        flat-gather path — interpret-mode Pallas is a debugging tool, not
+        a serving path.  The auto rule needs v2 layer metadata +
+        ``mappings``; legacy 4-tuple callers always get Pallas.
+
+    ``block_b`` overrides the tuned batch tile (benchmark sweeps)."""
+    from repro.kernels.autotune import KernelTuning
+    t = tuning if isinstance(tuning, KernelTuning) \
+        else KernelTuning.from_meta(tuning)
+    layers = tuple(tuple(int(v) for v in l) for l in layers)
+    can_xla = is_v2_layers(layers) and mappings is not None
+    impl = t.impl or ("xla" if pallas_interpret() and can_xla else "pallas")
+    if impl == "xla":
+        if not can_xla:
+            raise ValueError("lut_cascade: impl='xla' needs v2 layer "
+                             "metadata and mappings (re-plan the backend)")
+        return lut_cascade_xla(codes, tables, tuple(mappings), layers=layers)
+    if impl != "pallas":
+        raise ValueError(f"unknown lut_cascade impl {impl!r}")
     return lut_cascade_pallas(codes, amat, tables, layers=layers,
-                              block_b=block_b, interpret=pallas_interpret())
+                              block_b=block_b or t.block_b, mode=t.mode,
+                              unit_tile=t.unit_tile,
+                              interpret=pallas_interpret())
 
 
 def unit_affine(x: Array, w: Array, b: Array, *, activate: bool = False,

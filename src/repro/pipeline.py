@@ -151,6 +151,17 @@ class PlannedExecutor:
             cascade = lambda codes: backend.run(plan, codes)  # noqa: E731
         else:
             cascade = backends.place(backend, plan, placement)
+        # pre-place batch-sharded inputs: without this, an input committed
+        # to device 0 is resharded by XLA inside EVERY jitted call, which
+        # costs more than the sharded cascade saves (the 1.75M -> 613k
+        # rows/s mesh cliff).  See Placement.input_sharding.
+        self._in_sharding = None
+        self._n_shards = 1
+        if (placement is not None
+                and placement.resolved_strategy() == "batch"
+                and placement.num_shards() > 1):
+            self._in_sharding = placement.input_sharding()
+            self._n_shards = placement.num_shards()
 
         def both(x):
             codes = quant.quantize_codes(in_q, in_spec, x)
@@ -159,15 +170,25 @@ class PlannedExecutor:
 
         self._both = jax.jit(both)
 
+    def _prepare(self, x) -> Array:
+        if (self._in_sharding is not None
+                and x.shape[0] % self._n_shards == 0):
+            # put the raw (host) array straight onto the per-shard layout
+            # — jnp.asarray first would commit it to device 0 and turn
+            # this into the exact device0->mesh reshard being avoided;
+            # ragged batches fall through to the in-jit pad + reshard path
+            return jax.device_put(x, self._in_sharding)
+        return jnp.asarray(x)
+
     def predict_codes(self, x) -> Array:
-        return self._both(jnp.asarray(x))[0]
+        return self._both(self._prepare(x))[0]
 
     def predict(self, x) -> Array:
-        return self._both(jnp.asarray(x))[1]
+        return self._both(self._prepare(x))[1]
 
     def codes_and_logits(self, x) -> tuple:
         """Both outputs from the single jitted cascade (serving hot path)."""
-        return self._both(jnp.asarray(x))
+        return self._both(self._prepare(x))
 
     __call__ = predict
 
@@ -257,11 +278,16 @@ class CompiledLUTNetwork:
         if key not in self._executors:
             plan = self._plans.get(be.name)
             if plan is None or plan.meta.get("plan_format") != be.plan_format:
-                # no plan yet, or a restored plan whose buffer layout was
-                # produced by a different implementation now shadowing this
-                # name (plugins can do that) — re-plan rather than handing
-                # foreign buffers to run()
-                plan = self._plans[be.name] = backends.make_plan(
+                # no plan yet, or a restored plan whose buffer layout
+                # predates this backend (schema bump) or was produced by a
+                # different implementation shadowing the name.  Offer the
+                # backend a migration first — an upgraded plan keeps its
+                # packed buffers (bit-identical predictions) and gains the
+                # new metadata (e.g. the fused tuning block) — then fall
+                # back to a fresh re-plan.
+                migrated = None if plan is None else be.migrate_plan(
+                    plan, self.folded())
+                plan = self._plans[be.name] = migrated or backends.make_plan(
                     self.folded(), be)
             self._executors[key] = PlannedExecutor(self, be, plan,
                                                    placement=placement)

@@ -137,7 +137,7 @@ def test_plans_round_trip_through_artifact(tmp_path):
     assert set(loaded._plans) == {"fused"}  # take: persist_plan=False
     fused_plan = loaded._plans["fused"]
     assert fused_plan.meta["table_dtype"] in ("int8", "int16", "int32")
-    assert fused_plan.meta["plan_format"] == "fused-packed-v1"
+    assert fused_plan.meta["plan_format"] == "fused-packed-v2"
     x = _x(cfg, 21, seed=11)
     np.testing.assert_array_equal(
         np.asarray(loaded.predict_codes(x, backend="fused")),
@@ -162,7 +162,7 @@ def test_restored_plan_replanned_when_backend_shadowed(tmp_path):
     backends.register("fused", ShadowFused)
     try:
         loaded = CompiledLUTNetwork.load(path)
-        assert loaded._plans["fused"].meta["plan_format"] == "fused-packed-v1"
+        assert loaded._plans["fused"].meta["plan_format"] == "fused-packed-v2"
         ex = loaded.compile_backend("fused")   # format mismatch -> re-plan
         assert ex.plan.meta["plan_format"] == "shadow-v1"
         x = _x(cfg, 13, seed=21)

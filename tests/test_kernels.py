@@ -157,3 +157,80 @@ def test_flash_gradient_flows():
     for gr in grads:
         assert bool(jnp.isfinite(gr).all())
         assert float(jnp.abs(gr).max()) > 0
+
+
+# ---------------------------------------------------------------------------
+# lut_cascade: every execution path vs the per-layer take oracle
+# ---------------------------------------------------------------------------
+
+def _fused_fixture(task="nid", seed=0):
+    """(plan, take_plan, cascade pieces) for a random-init paper config."""
+    from repro import backends, pipeline
+    from repro.configs import paper_tasks
+    from repro.core import assemble
+
+    cfg = paper_tasks.reduced(task)
+    params = assemble.init(jax.random.PRNGKey(seed), cfg)
+    compiled = pipeline.compile_network(params, cfg)
+    plan = compiled.compile_backend("fused").plan
+    layers = tuple(tuple(int(v) for v in lm) for lm in plan.meta["layers"])
+    mappings = tuple(jnp.asarray(plan.buffers[f"map_{l}"], jnp.int32)
+                     if f"map_{l}" in plan.buffers else None
+                     for l in range(len(layers)))
+    codes = jnp.asarray(np.random.RandomState(seed + 1).randint(
+        0, plan.meta["input_span"], size=(33, cfg.in_features)), jnp.int32)
+    ref_out = np.asarray(
+        backends.get("take").run(compiled.compile_backend("take").plan,
+                                 codes))
+    return plan, layers, mappings, codes, ref_out
+
+
+@pytest.mark.parametrize("task", ["nid", "jsc"])
+def test_lut_cascade_xla_matches_oracle(task):
+    from repro.kernels.lut_cascade import lut_cascade_xla
+
+    plan, layers, mappings, codes, ref_out = _fused_fixture(task)
+    got = np.asarray(lut_cascade_xla(
+        codes, jnp.asarray(plan.buffers["tables"]), mappings, layers=layers))
+    np.testing.assert_array_equal(got, ref_out)
+
+
+@pytest.mark.parametrize("mode,unit_tile", [
+    ("resident", 8), ("streamed", 4), ("streamed", 8), ("streamed", 16),
+])
+def test_lut_cascade_pallas_modes_match_oracle(mode, unit_tile):
+    """Resident and streamed Pallas tilings (interpret mode), ragged batch
+    (33 is off every block size, forcing the padded tail)."""
+    from repro.kernels.lut_cascade import lut_cascade_pallas
+
+    plan, layers, mappings, codes, ref_out = _fused_fixture()
+    got = np.asarray(lut_cascade_pallas(
+        codes, jnp.asarray(plan.buffers["amat"]),
+        jnp.asarray(plan.buffers["tables"]), layers=layers,
+        block_b=16, mode=mode, unit_tile=unit_tile, interpret=True))
+    np.testing.assert_array_equal(got, ref_out)
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas", None])
+def test_lut_cascade_dispatch_honors_pinned_impl(impl):
+    """ops.lut_cascade must honor tuning.impl (and auto-resolve None)
+    with identical results on every route."""
+    from repro.kernels.autotune import KernelTuning
+
+    plan, layers, mappings, codes, ref_out = _fused_fixture()
+    tuning = KernelTuning(impl=impl, block_b=16)
+    got = np.asarray(ops.lut_cascade(
+        codes, jnp.asarray(plan.buffers["amat"]),
+        jnp.asarray(plan.buffers["tables"]), layers=layers,
+        mappings=mappings, tuning=tuning))
+    np.testing.assert_array_equal(got, ref_out)
+
+
+def test_lut_cascade_xla_requires_v2_metadata():
+    plan, layers, mappings, codes, _ = _fused_fixture()
+    with pytest.raises(ValueError, match="v2|mappings"):
+        ops.lut_cascade(codes, jnp.asarray(plan.buffers["amat"]),
+                        jnp.asarray(plan.buffers["tables"]),
+                        layers=tuple(lm[:4] for lm in layers),
+                        mappings=None,
+                        tuning={"impl": "xla"})
