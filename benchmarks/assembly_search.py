@@ -12,12 +12,25 @@ registered lookup backends; any mismatch is recorded and fails the CLI.
 smoke budget.  ``--task NAME`` runs one task on the full default budget
 (the nightly workflow's frontier drift probe).
 
+``--dist-compare`` additionally runs every task through the distributed
+engine (``run_search(mesh=...)`` over all visible devices — CI forces a
+4-way host mesh with ``--xla_force_host_platform_device_count=4``) and
+through the legacy single-device engine, recording per task the two wall
+times, their ratio, and ``survivors_match``: whether the mesh run and a
+single-device run of the *same slice programs* picked bit-identical rung
+survivors.  ``check_regression --suite search`` gates that section —
+a survivor mismatch is a hard violation.  ``--require-speedup`` (the
+nightly full-budget sweep) exits non-zero unless the distributed sweep
+beat the single-device one in aggregate wall-clock.
+
     PYTHONPATH=src python -m benchmarks.assembly_search [--fast]
-        [--task NAME] [--out PATH]
+        [--task NAME] [--tasks A,B,...] [--dist-compare]
+        [--require-speedup] [--out PATH]
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import tempfile
@@ -96,6 +109,94 @@ def sweep(tasks=FAST_TASKS, budget=None, *, smoke: bool = True) -> dict:
     return results
 
 
+def dist_compare(tasks=FAST_TASKS, budget=None, *, smoke: bool = True
+                 ) -> dict:
+    """Per task: the distributed engine vs the legacy single-device engine.
+
+    The dist run serves double duty: its frontier populates the normal
+    ``tasks`` section (so the accuracy suite gates the same document),
+    and a promotion-free single-device re-run of its exact slice programs
+    provides the ``survivors_match`` bit-identity check the search suite
+    gates.  Requires >= 2 visible devices for a real mesh; on one device
+    the "dist" leg degrades to the sliced single-device engine (still the
+    rolled path — recorded in ``mode``).
+    """
+    import jax
+    from jax.sharding import Mesh
+
+    from repro.configs import paper_tasks
+    from repro.data import synthetic
+    from repro.search import (DistributedSearchBudget, SearchBudget,
+                              run_search)
+
+    base_budget = budget or (SearchBudget.smoke() if smoke
+                             else SearchBudget())
+    devices = jax.devices()
+    mesh = (Mesh(np.array(devices), ("search",)) if len(devices) > 1
+            else None)
+    dist_budget = DistributedSearchBudget.from_budget(
+        base_budget, population_slices=max(len(devices), 2))
+
+    results = {"schema_version": SCHEMA_VERSION,
+               "budget": {"rungs": list(base_budget.rungs),
+                          "n_candidates": base_budget.n_candidates,
+                          "promote": base_budget.promote,
+                          "min_frontier": base_budget.min_frontier,
+                          "retrain_steps": base_budget.retrain_steps},
+               "devices": len(devices),
+               "tasks": {}, "dist_compare": {"tasks": {}}}
+    for task in tasks:
+        data = synthetic.load(paper_tasks.task_dataset(task),
+                              n_train=max(base_budget.train_rows, 2048),
+                              n_test=max(base_budget.eval_rows * 2, 2048))
+        single = run_search(task, base_budget, data=data)
+        dist = run_search(task, dist_budget, data=data, mesh=mesh)
+        # survivor bit-identity: same slice programs, one device, no
+        # promotions (survivors are fixed before promotion ever runs)
+        ref_budget = dataclasses.replace(dist_budget, promote=0,
+                                         max_promote_extra=0,
+                                         min_frontier=0)
+        ref = run_search(task, ref_budget, data=data)
+        survivors_match = ([r["survivors"] for r in ref.rungs]
+                           == [r["survivors"] for r in dist.rungs])
+
+        frontier = dist.summary()
+        bit = {p["name"]: _artifact_contract(pt)
+               for p, pt in zip(frontier, dist.frontier)}
+        results["tasks"][task] = {
+            "frontier": frontier,
+            "best_accuracy": max((p["accuracy"] for p in frontier),
+                                 default=0.0),
+            "frontier_points": len(frontier),
+            "bit_identical": bit,
+            "n_candidates": len(dist.evaluated),
+            "n_rejected": len(dist.rejected),
+            "evaluated": dist.evaluated,
+            "rungs": dist.rungs,
+            "seconds": round(dist.seconds, 1),
+        }
+        results["dist_compare"]["tasks"][task] = {
+            "single_seconds": round(single.seconds, 1),
+            "dist_seconds": round(dist.seconds, 1),
+            "speedup": round(single.seconds / max(dist.seconds, 1e-9), 3),
+            "survivors_match": survivors_match,
+            "mode": dist.dist["mode"],
+            "slices": dist.dist["slices"],
+            "partial": dist.dist["partial"],
+            "n_straggler_events": len(dist.dist["straggler_events"]),
+            "n_remesh_events": len(dist.dist["remesh_events"]),
+            "wider_on_frontier": any(p["additive"] or p["learned_beta"]
+                                     for p in frontier),
+        }
+    dc = results["dist_compare"]
+    total_single = sum(t["single_seconds"] for t in dc["tasks"].values())
+    total_dist = sum(t["dist_seconds"] for t in dc["tasks"].values())
+    dc["total_single_seconds"] = round(total_single, 1)
+    dc["total_dist_seconds"] = round(total_dist, 1)
+    dc["speedup"] = round(total_single / max(total_dist, 1e-9), 3)
+    return results
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
@@ -104,16 +205,39 @@ def main() -> None:
     ap.add_argument("--task", default=None,
                     help="run ONE task on the full default budget "
                          "(nightly frontier probe)")
+    ap.add_argument("--tasks", default=None,
+                    help="comma list of tasks (or 'all' / 'reduced'); "
+                         "full budget unless --fast")
+    ap.add_argument("--dist-compare", action="store_true",
+                    help="run the distributed engine against the legacy "
+                         "single-device engine per task (search suite)")
+    ap.add_argument("--require-speedup", action="store_true",
+                    help="fail unless the distributed sweep beat the "
+                         "single-device sweep in total wall-clock "
+                         "(nightly gate; implies --dist-compare)")
     ap.add_argument("--out", default=DEFAULT_OUT)
     args = ap.parse_args()
 
-    if args.task:
-        results = sweep(tasks=(args.task,), smoke=False)
+    if args.tasks:
+        from repro.configs import paper_tasks
+        if args.tasks == "all":
+            tasks = paper_tasks.task_names()
+        elif args.tasks == "reduced":
+            tasks = paper_tasks.reduced_task_names()
+        else:
+            tasks = tuple(args.tasks.split(","))
+    elif args.task:
+        tasks = (args.task,)
     elif args.fast:
-        results = sweep()
+        tasks = FAST_TASKS
     else:
-        results = sweep(tasks=("nid_reduced", "jsc_reduced",
-                               "mnist_reduced"), smoke=False)
+        tasks = ("nid_reduced", "jsc_reduced", "mnist_reduced")
+    smoke = args.fast and not args.task
+
+    if args.dist_compare or args.require_speedup:
+        results = dist_compare(tasks=tasks, smoke=smoke)
+    else:
+        results = sweep(tasks=tasks, smoke=smoke)
     out = write_results(results, args.out)
 
     print("task,point,accuracy,luts,adp,bit_identical")
@@ -129,6 +253,20 @@ def main() -> None:
         if t["frontier_points"] < min_frontier:
             bad.append((task, f"frontier has {t['frontier_points']} < "
                               f"{min_frontier} points"))
+    dc = results.get("dist_compare")
+    if dc:
+        for task, t in dc["tasks"].items():
+            print(f"dist,{task},single={t['single_seconds']}s,"
+                  f"dist={t['dist_seconds']}s,speedup={t['speedup']},"
+                  f"survivors_match={t['survivors_match']}")
+            if not t["survivors_match"]:
+                bad.append((task, "sharded rung survivors differ from the "
+                                  "single-device run"))
+        print(f"dist,total,single={dc['total_single_seconds']}s,"
+              f"dist={dc['total_dist_seconds']}s,speedup={dc['speedup']}")
+        if args.require_speedup and dc["speedup"] <= 1.0:
+            bad.append(("total", f"distributed sweep not faster: speedup "
+                                 f"{dc['speedup']} <= 1.0"))
     if bad:
         raise SystemExit(f"assembly-search contract violations: {bad}")
     print(f"wrote {out}")

@@ -31,6 +31,17 @@ its own metric extraction, baseline file, tolerance, and comparison mode:
     bit-identity on every backend, zero dropped steps, stateful hot swaps
     with zero wrong answers and the recorded migration mode).  Runs in
     the CI ``perf-gate`` job alongside ``throughput`` and ``fleet``.
+  * ``search`` — the distributed-search section of
+    ``BENCH_assembly_search.json`` (written by ``assembly_search
+    --dist-compare``) vs ``experiments/SEARCH_baseline.json``: frontier
+    size and best frontier accuracy per task plus the aggregate
+    sharded-vs-single wall-clock ratio, RELATIVE tolerance (default
+    ±35%).  Hard violations: any task whose sharded rung survivors differ
+    from the single-device run (bit-identity is the distributed engine's
+    core contract), a wider-space frontier point failing the RTL
+    cross-check, and — across the whole sweep — no frontier point using
+    an additive unit or learned beta at all (the wider space silently
+    collapsing).  The CI ``accuracy-gate`` job runs this on every PR.
 
 Shared gate semantics (both suites):
 
@@ -66,6 +77,7 @@ KERNEL_BASELINE = os.path.join(EXPERIMENTS, "KERNEL_baseline.json")
 ACC_BASELINE = os.path.join(EXPERIMENTS, "ACC_baseline.json")
 FLEET_BASELINE = os.path.join(EXPERIMENTS, "FLEET_baseline.json")
 STREAM_BASELINE = os.path.join(EXPERIMENTS, "STREAM_baseline.json")
+SEARCH_BASELINE = os.path.join(EXPERIMENTS, "SEARCH_baseline.json")
 SCHEMA_VERSION = 1
 
 Metrics = Dict[str, Tuple[float, bool]]  # name -> (value, higher_is_better)
@@ -258,6 +270,52 @@ def extract_stream(experiments: str = EXPERIMENTS
     return metrics, stream_serving.contract_violations(doc)
 
 
+def extract_search(experiments: str = EXPERIMENTS
+                   ) -> Tuple[Metrics, List[str]]:
+    """Flatten the distributed-search comparison -> (metrics, violations).
+
+    Per task: frontier size + best frontier accuracy (the dist engine's
+    frontier — the accuracy suite gates the same numbers, this suite
+    pins them to the *distributed* path) and the per-task speedup; one
+    aggregate sharded-vs-single wall-clock ratio.  Hard violations:
+    survivor mismatch, a wider-space frontier point whose RTL calibration
+    drifted, and a sweep with no wider-space frontier point anywhere.
+    """
+    metrics: Metrics = {}
+    violations: List[str] = []
+    doc = _load(os.path.join(experiments, "BENCH_assembly_search.json"))
+    dc = doc.get("dist_compare")
+    if not dc:
+        raise SystemExit(
+            "BENCH_assembly_search.json has no dist_compare section; run "
+            "benchmarks.assembly_search --dist-compare first")
+    wider_anywhere = False
+    for task, t in dc["tasks"].items():
+        st = doc["tasks"][task]
+        metrics[f"search/{task}/frontier_points"] = (
+            float(st["frontier_points"]), True)
+        metrics[f"search/{task}/best_frontier_acc"] = (
+            st["best_accuracy"], True)
+        if not t["survivors_match"]:
+            violations.append(
+                f"search/{task}: sharded rung survivors differ from the "
+                "single-device run")
+        for p in st["frontier"]:
+            if p.get("additive") or p.get("learned_beta"):
+                wider_anywhere = True
+                if abs(p["calibration"] - 1.0) > 0.05:
+                    violations.append(
+                        f"search/{task}/{p['name']}: wider-space point "
+                        f"fails the RTL cross-check "
+                        f"(calibration {p['calibration']})")
+    metrics["search/dist/speedup"] = (dc["speedup"], True)
+    if not wider_anywhere:
+        violations.append(
+            "search: no frontier point uses an additive unit or learned "
+            "beta — the wider space collapsed out of the search")
+    return metrics, violations
+
+
 # ---------------------------------------------------------------------------
 # Suites
 # ---------------------------------------------------------------------------
@@ -284,6 +342,9 @@ SUITES: Dict[str, Suite] = {
                    tolerance=0.35, mode="relative"),
     # same width as fleet: stream cells stack router + engine timing
     "stream": Suite("stream", extract_stream, STREAM_BASELINE,
+                    tolerance=0.35, mode="relative"),
+    # wall-clock ratios on a shared CI runner wobble like the fleet cells
+    "search": Suite("search", extract_search, SEARCH_BASELINE,
                     tolerance=0.35, mode="relative"),
 }
 

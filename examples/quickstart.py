@@ -10,9 +10,12 @@ and emitted as synthesizable Verilog.  No training params cross the
 deployment boundary.  The final phases run the hardware-aware assembly
 search and then serve three of its frontier artifacts as tenants of one
 ``LUTFleet`` — registry, SLOs, and a zero-downtime hot swap included.
-The last phase goes sequential: a SeqMNIST recurrent cell trained with
+Later phases go sequential (a SeqMNIST recurrent cell trained with
 truncated BPTT streams statefully through the fleet, surviving a
-mid-stream hot swap with its per-stream state carried (DESIGN.md §10).
+mid-stream hot swap with its per-stream state carried, DESIGN.md §10),
+autotune the fused cascade on this machine, and finish by re-running the
+assembly search SLICED — the mesh-distributed engine whose rung survivors
+are bit-identical at any mesh width (DESIGN.md §8).
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -225,6 +228,44 @@ def main() -> None:
                                np.asarray(fused.run(fused_plan, cin))))
     print(f"   tuned plan bit-identical: {same} "
           f"(tuning changes WHERE the cascade runs, never WHAT it returns)")
+
+    print("== phase 9: sharded assembly search (DESIGN.md §8)")
+    # The phase-5 search also runs SLICED: each shape group's vmapped
+    # population is split into contiguous slices of rolled fori_loop
+    # programs, and a mesh spreads the slices over devices with
+    # straggler-aware rung promotion and elastic remesh.  Slicing is what
+    # fixes the slice programs, so a 4-way mesh and this run pick
+    # bit-identical rung survivors (proved in a 4-device subprocess by
+    # tests/test_search.py; run this script under
+    # XLA_FLAGS=--xla_force_host_platform_device_count=4 to watch the mesh
+    # path itself).  The wider space rides along: "add2" candidates are
+    # PolyLUT-Add additive units, "lbeta" learns per-layer bit-widths.
+    import dataclasses
+
+    import jax
+
+    from repro.search import DistributedSearchBudget, run_search
+
+    budget = DistributedSearchBudget.from_budget(
+        dataclasses.replace(SearchBudget.smoke(), rungs=(8,), promote=1,
+                            min_frontier=1, max_promote_extra=0,
+                            pretrain_steps=16, retrain_steps=24),
+        population_slices=4)
+    mesh = None
+    if jax.device_count() > 1:
+        from jax.sharding import Mesh
+        mesh = Mesh(np.array(jax.devices()), ("pop",))
+    sharded = run_search("nid_reduced", budget, mesh=mesh)
+    d = sharded.dist
+    print(f"   engine: mode={d['mode']} slices={d['slices']} "
+          f"devices={d['devices']} stragglers={len(d['straggler_events'])} "
+          f"remeshes={len(d['remesh_events'])}")
+    for rung in sharded.rungs:
+        print(f"   rung @{rung['steps']} steps -> survivors: "
+              f"{', '.join(rung['survivors'])}")
+    top = sharded.frontier[0]
+    print(f"   promoted {top.name}: acc={top.accuracy:.3f} "
+          f"LUTs={top.luts} (same survivors on any mesh width)")
 
 
 if __name__ == "__main__":

@@ -109,6 +109,12 @@ def task_names():
     return tuple(TASKS)
 
 
+def reduced_task_names():
+    """The CPU-fast reduced surrogates (CI smoke / distributed-search
+    smoke jobs iterate these, never the full Table-II designs)."""
+    return tuple(n for n in TASKS if n.endswith("_reduced"))
+
+
 def task_config(name: str) -> AssembleConfig:
     """Base architecture of a registered task (``TASKS``)."""
     if name not in TASKS:

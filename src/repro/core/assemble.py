@@ -42,6 +42,15 @@ class LayerSpec:
     fan_in: int       # F_l (inputs per unit)
     bits: int         # beta_l (output bit-width of this layer)
     assemble: bool    # a_l
+    # Additive wide-input units (PolyLUT-Add-style, arXiv 2406.04910):
+    # add_terms > 1 gives every unit that many independent F-input LUT
+    # subnets ("branches") whose outputs are quantized to add_bits and
+    # summed PRE-activation — an effective fan-in of add_terms*F without a
+    # 2^(b*A*F)-entry table.  Hardware-wise this lowers to a branch layer
+    # plus a small assemble combiner (see lower_additive); training-wise it
+    # is one extra quantization boundary inside the layer.
+    add_terms: int = 1
+    add_bits: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,8 +73,23 @@ class AssembleConfig:
                     raise ValueError(
                         f"layer {i}: assemble needs units*fan_in == prev "
                         f"({l.units}*{l.fan_in} != {prev})")
+                if l.add_terms > 1:
+                    raise ValueError(
+                        f"layer {i}: additive units need a mapping layer "
+                        "(assemble layers have fixed regular sparsity)")
             elif l.fan_in > prev:
                 raise ValueError(f"layer {i}: fan_in {l.fan_in} > prev {prev}")
+            if l.add_terms > 1:
+                if l.add_bits < 1:
+                    raise ValueError(
+                        f"layer {i}: add_terms={l.add_terms} needs "
+                        "add_bits >= 1 (the branch-sum boundary width)")
+                if not self.tree_skips:
+                    # the lowered branch layer relies on the inner-tree
+                    # activation-free rule; without tree_skips the lowering
+                    # would insert a ReLU the training graph never saw
+                    raise ValueError(
+                        f"layer {i}: additive units require tree_skips=True")
             prev = l.units
 
     # ---- static helpers -------------------------------------------------
@@ -104,7 +128,55 @@ class AssembleConfig:
         return self.input_bits if l == 0 else self.layers[l - 1].bits
 
     def lut_addr_bits(self, l: int) -> int:
+        """Address bits of layer ``l``'s physical LUTs (the *branch* LUTs
+        for additive layers; the combiner is accounted by lowering)."""
         return self.in_bits(l) * self.layers[l].fan_in
+
+    def mapping_rows(self, l: int) -> int:
+        """Rows of layer ``l``'s mapping / subnet unit count: one per
+        (unit, branch) pair for additive layers, one per unit otherwise."""
+        return self.layers[l].units * max(self.layers[l].add_terms, 1)
+
+    def add_quant_spec(self, l: int) -> QuantSpec:
+        """The branch-sum boundary of an additive layer: branch outputs are
+        pre-activation values, hence signed."""
+        return QuantSpec(self.layers[l].add_bits, signed=True)
+
+    def has_additive(self) -> bool:
+        return any(l.add_terms > 1 for l in self.layers)
+
+
+def lower_additive(cfg: AssembleConfig) -> AssembleConfig:
+    """Rewrite additive layers into the standard two-layer hardware form.
+
+    Each additive layer ``(U units, F fan-in, A terms, add_bits ab)``
+    becomes a *branch* mapping layer ``LayerSpec(U*A, F, ab)`` followed by
+    an *assemble combiner* ``LayerSpec(U, A, bits, assemble=True)`` whose
+    table is enumerated directly from the dequantize-sum-activate-quantize
+    semantics (folding.py).  The lowered config is what every hardware
+    surface sees — folding, hwcost, RTL emission, the backends registry and
+    the saved artifact — so additive units change NOTHING downstream of the
+    fold.  Identity (returns ``cfg`` itself) when no layer is additive.
+
+    The branch layer lands under the inner-tree activation rule
+    (``tree_skips`` and the combiner being an assemble layer make it
+    activation-free and signed), which is exactly the training-time branch
+    semantics — ``AssembleConfig`` enforces ``tree_skips`` for additive
+    configs for this reason.
+    """
+    if not cfg.has_additive():
+        return cfg
+    layers: List[LayerSpec] = []
+    for spec in cfg.layers:
+        if spec.add_terms > 1:
+            layers.append(LayerSpec(units=spec.units * spec.add_terms,
+                                    fan_in=spec.fan_in, bits=spec.add_bits,
+                                    assemble=False))
+            layers.append(LayerSpec(units=spec.units, fan_in=spec.add_terms,
+                                    bits=spec.bits, assemble=True))
+        else:
+            layers.append(spec)
+    return dataclasses.replace(cfg, layers=tuple(layers))
 
 
 # ---------------------------------------------------------------------------
@@ -126,16 +198,19 @@ def init(rng: Array, cfg: AssembleConfig, *, dense: bool = False,
         "layers": [],
     }
     for l, spec in enumerate(cfg.layers):
+        # additive layers instantiate one subnet per (unit, branch) pair
         sn = subnet.init_subnet(keys[l], cfg.subnet_spec(l, dense=dense),
-                                spec.units)
+                                cfg.mapping_rows(l))
         layer = {
             "subnet": sn,
             "out_q": quant.init_quant(cfg.quant_spec(l)),
         }
+        if spec.add_terms > 1:
+            layer["add_q"] = quant.init_quant(cfg.add_quant_spec(l))
         if not dense and not spec.assemble:
             if mappings is not None and mappings[l] is not None:
                 idx = jnp.asarray(mappings[l], jnp.int32)
-                assert idx.shape == (spec.units, spec.fan_in), idx.shape
+                assert idx.shape == (cfg.mapping_rows(l), spec.fan_in), idx.shape
             else:  # random fallback (the "w/o Learned Mappings" ablation)
                 # per-layer key: distinct layers with equal (units, fan_in,
                 # prev) must not get identical mappings
@@ -150,7 +225,7 @@ def random_mapping(rng: Array, cfg: AssembleConfig, l: int) -> Array:
     spec = cfg.layers[l]
     prev = cfg.prev_width(l)
     rows = []
-    for u in range(spec.units):
+    for u in range(cfg.mapping_rows(l)):
         rng, k = jax.random.split(rng)
         rows.append(jax.random.choice(k, prev, (spec.fan_in,),
                                       replace=prev < spec.fan_in))
@@ -170,11 +245,12 @@ def gather_layer_inputs(cfg: AssembleConfig, params_l: dict, l: int,
     spec = cfg.layers[l]
     if spec.assemble:
         return h.reshape(h.shape[0], spec.units, spec.fan_in)
+    rows = cfg.mapping_rows(l)
     if dense:
         return jnp.broadcast_to(h[:, None, :],
-                                (h.shape[0], spec.units, h.shape[-1]))
-    idx = params_l["mapping"]  # [units, fan_in]
-    return h[:, idx]  # fancy-index -> [batch, units, fan_in]
+                                (h.shape[0], rows, h.shape[-1]))
+    idx = params_l["mapping"]  # [mapping_rows, fan_in]
+    return h[:, idx]  # fancy-index -> [batch, mapping_rows, fan_in]
 
 
 def apply(params: dict, cfg: AssembleConfig, x: Array, *,
@@ -189,11 +265,19 @@ def apply(params: dict, cfg: AssembleConfig, x: Array, *,
     for l, spec in enumerate(cfg.layers):
         pl = params["layers"][l]
         xi = gather_layer_inputs(cfg, pl, l, h, dense=dense)
+        additive = spec.add_terms > 1
         out, new_sn = subnet.apply_subnet(
             pl["subnet"], cfg.subnet_spec(l, dense=dense), xi,
-            activation=cfg.has_activation(l), training=training,
-            bn_batch_stats=bn_batch_stats)
+            activation=False if additive else cfg.has_activation(l),
+            training=training, bn_batch_stats=bn_batch_stats)
         out = out[..., 0]  # out_dim == 1
+        if additive:
+            # PolyLUT-Add boundary: quantize each branch, sum pre-activation
+            out = quant.fake_quant(pl["add_q"], cfg.add_quant_spec(l), out)
+            out = out.reshape(out.shape[0], spec.units, spec.add_terms)
+            out = out.sum(axis=-1)
+            if cfg.has_activation(l):
+                out = jax.nn.relu(out)
         h = quant.fake_quant(pl["out_q"], cfg.quant_spec(l), out)
         nl = dict(pl)
         nl["subnet"] = new_sn
@@ -212,10 +296,22 @@ def apply_codes(params: dict, cfg: AssembleConfig, x: Array) -> Array:
     for l, spec in enumerate(cfg.layers):
         pl = params["layers"][l]
         xi = gather_layer_inputs(cfg, pl, l, h, dense=False)
+        additive = spec.add_terms > 1
         out, _ = subnet.apply_subnet(
             pl["subnet"], cfg.subnet_spec(l), xi,
-            activation=cfg.has_activation(l), training=False)
+            activation=False if additive else cfg.has_activation(l),
+            training=False)
         out = out[..., 0]
+        if additive:
+            # integer-exact branch boundary (mirrors fold_network's branch
+            # tables: branch outputs pass through the add_q code grid)
+            aqs = cfg.add_quant_spec(l)
+            bc = quant.quantize_codes(pl["add_q"], aqs, out)
+            out = quant.dequantize_codes(pl["add_q"], aqs, bc)
+            out = out.reshape(out.shape[0], spec.units, spec.add_terms)
+            out = out.sum(axis=-1)
+            if cfg.has_activation(l):
+                out = jax.nn.relu(out)
         qs = cfg.quant_spec(l)
         codes = quant.quantize_codes(pl["out_q"], qs, out)
         h = quant.dequantize_codes(pl["out_q"], qs, codes)

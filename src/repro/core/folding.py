@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import quant, subnet
+from repro.core import assemble, quant, subnet
 from repro.core.assemble import AssembleConfig
 
 Array = jax.Array
@@ -80,12 +80,83 @@ def fold_layer(params: dict, cfg: AssembleConfig, l: int) -> Array:
     return table.T.astype(jnp.int32)            # [units, n_codes]
 
 
+def _fold_branch(params: dict, cfg: AssembleConfig, l: int) -> Array:
+    """Branch tables of an additive layer: [units*add_terms, 2^(b_in*F)].
+
+    Same enumeration as :func:`fold_layer` but activation-free (branches are
+    pre-activation) and quantized through the ``add_q`` boundary — exactly
+    the lowered branch layer's spec (``assemble.lower_additive``)."""
+    spec = cfg.layers[l]
+    b_in = cfg.in_bits(l)
+    n_codes = 2 ** (b_in * spec.fan_in)
+    in_spec = (cfg.input_quant_spec() if l == 0
+               else cfg.quant_spec(l - 1))
+    in_q = params["in_q"] if l == 0 else params["layers"][l - 1]["out_q"]
+    pl = params["layers"][l]
+    rows = cfg.mapping_rows(l)
+    add_spec = cfg.add_quant_spec(l)
+
+    def eval_chunk(addr: Array) -> Array:
+        codes = quant.unpack_address(addr, b_in, spec.fan_in)
+        x = quant.dequantize_codes(in_q, in_spec, codes)
+        xi = jnp.broadcast_to(x[:, None, :],
+                              (x.shape[0], rows, spec.fan_in))
+        out, _ = subnet.apply_subnet(
+            pl["subnet"], cfg.subnet_spec(l), xi,
+            activation=False, training=False)
+        return quant.quantize_codes(pl["add_q"], add_spec, out[..., 0])
+
+    eval_chunk = jax.jit(eval_chunk)
+    pieces = []
+    for start in range(0, n_codes, _ENUM_CHUNK):
+        addr = jnp.arange(start, min(start + _ENUM_CHUNK, n_codes),
+                          dtype=jnp.int32)
+        pieces.append(eval_chunk(addr))
+    table = jnp.concatenate(pieces, axis=0)
+    return table.T.astype(jnp.int32)
+
+
+def _fold_combiner(params: dict, cfg: AssembleConfig, l: int) -> Array:
+    """Combiner table of an additive layer: [units, 2^(add_bits*add_terms)].
+
+    No subnet to enumerate — the table IS the dequantize-sum-activate-
+    quantize semantics of the branch boundary, so the row is identical for
+    every unit (the per-unit behaviour lives entirely in the branch LUTs)."""
+    spec = cfg.layers[l]
+    add_spec = cfg.add_quant_spec(l)
+    pl = params["layers"][l]
+    n_codes = 2 ** (spec.add_bits * spec.add_terms)
+    addr = jnp.arange(n_codes, dtype=jnp.int32)
+    codes = quant.unpack_address(addr, spec.add_bits, spec.add_terms)
+    out = quant.dequantize_codes(pl["add_q"], add_spec, codes).sum(axis=-1)
+    if cfg.has_activation(l):
+        out = jax.nn.relu(out)
+    row = quant.quantize_codes(pl["out_q"], cfg.quant_spec(l), out)
+    return jnp.tile(row[None, :], (spec.units, 1)).astype(jnp.int32)
+
+
 def fold_network(params: dict, cfg: AssembleConfig) -> FoldedNetwork:
-    tables = [fold_layer(params, cfg, l) for l in range(len(cfg.layers))]
-    mappings = [None if spec.assemble
-                else jnp.asarray(params["layers"][l]["mapping"], jnp.int32)
-                for l, spec in enumerate(cfg.layers)]
-    return FoldedNetwork(cfg=cfg, tables=tables, in_q=params["in_q"],
+    """Fold every layer.  Additive layers are *lowered* here: the returned
+    ``FoldedNetwork`` carries ``assemble.lower_additive(cfg)`` with one
+    branch table + one combiner table per additive layer, so every hardware
+    surface downstream (backends, RTL, hwcost calibration, save/load) sees
+    only standard mapping/assemble layers."""
+    tables: List[Array] = []
+    mappings: List[Optional[Array]] = []
+    for l, spec in enumerate(cfg.layers):
+        if spec.add_terms > 1:
+            tables.append(_fold_branch(params, cfg, l))
+            tables.append(_fold_combiner(params, cfg, l))
+            mappings.append(jnp.asarray(params["layers"][l]["mapping"],
+                                        jnp.int32))
+            mappings.append(None)
+        else:
+            tables.append(fold_layer(params, cfg, l))
+            mappings.append(None if spec.assemble
+                            else jnp.asarray(params["layers"][l]["mapping"],
+                                             jnp.int32))
+    return FoldedNetwork(cfg=assemble.lower_additive(cfg), tables=tables,
+                         in_q=params["in_q"],
                          out_q=params["layers"][-1]["out_q"],
                          mappings=mappings)
 

@@ -146,6 +146,11 @@ class HwReport:
 
 
 def report(cfg: AssembleConfig, pipeline_every: int = 3) -> HwReport:
+    # cost is a property of the *hardware* form: additive layers are priced
+    # as their lowered branch + combiner pair (matches what rtl.py receives,
+    # since fold_network emits a lowered FoldedNetwork)
+    from repro.core import assemble
+    cfg = assemble.lower_additive(cfg)
     luts = network_luts(cfg)
     ffs = network_ffs(cfg, pipeline_every)
     period = clock_period_ns(cfg, pipeline_every)

@@ -83,6 +83,38 @@ def fake_quant_dynamic(params: dict, qmin: Array, qmax: Array,
     return q * s
 
 
+def beta_bounds(beta: Array, signed: bool) -> Tuple[Array, Array]:
+    """Differentiable clip bounds for a *traced* bit-width ``beta``.
+
+    The HGQ-LUT-style relaxation (arXiv 2604.22293): instead of enumerating
+    integer bit-widths as discrete search knobs, treat beta as a continuous
+    trainable scalar and derive the clip range ``2**beta`` levels wide.  Fed
+    into :func:`fake_quant_dynamic` this makes the quantization *range*
+    differentiable — gradients reach beta through the clip saturation — so a
+    vmapped search population can learn per-layer precision by SGD.  The
+    signedness stays static (it follows the activation pattern, exactly as
+    ``QuantSpec``): signed boundaries get ``[-2^(b-1), 2^(b-1)-1]``, unsigned
+    ``[0, 2^b - 1]``.  Promotion rounds beta back to the integer grid
+    (:func:`round_beta`) — deployed designs always have enumerable tables.
+    """
+    levels = 2.0 ** beta
+    if signed:
+        return -levels / 2.0, levels / 2.0 - 1.0
+    return jnp.zeros_like(levels), levels - 1.0
+
+
+def round_beta(beta, lo: int = 1, hi: int = 8):
+    """Snap learned bit-widths back onto the enumerated integer grid.
+
+    Returns an int numpy array; the search applies it to the candidate's
+    config at promotion time and re-validates the K budget / folding cap
+    (``search.space.round_and_validate``) — a rounded width that violates
+    the hardware rules is a *recorded* rejection, never silent.
+    """
+    import numpy as np
+    return np.clip(np.rint(np.asarray(beta)), lo, hi).astype(np.int64)
+
+
 def quantize_codes(params: dict, spec: QuantSpec, x: Array) -> Array:
     """Hard-quantize to integer *codes* in [0, 2^bits) (the LUT address bits).
 

@@ -36,6 +36,25 @@ def _devices(shape: Tuple[int, ...]) -> int:
     return n
 
 
+def plan_search_remesh(old_devices: int, new_devices: int, *,
+                       population: int) -> RemeshPlan:
+    """Go/no-go for re-assigning assembly-search population slices after a
+    device vanishes mid-rung (``search.driver``).
+
+    Slice programs carry no cross-device collective state — each is an
+    independent vmapped program over explicitly-passed init keys — so the
+    only structural requirement is a surviving device: any alive device
+    replays a lost slice bit-identically.  ``population`` is recorded for
+    the event log (the rebalanced load is population / new_devices)."""
+    if new_devices < 1:
+        return RemeshPlan(ok=False, old_devices=old_devices,
+                          new_devices=new_devices,
+                          reason=(f"no devices left to host the "
+                                  f"{population}-candidate population"))
+    return RemeshPlan(ok=True, old_devices=old_devices,
+                      new_devices=new_devices)
+
+
 def plan_remesh(cfg, old_shape: Tuple[int, ...], new_shape: Tuple[int, ...],
                 *, hbm_budget: int = HBM_STATE_BUDGET) -> RemeshPlan:
     """Validate resuming ``cfg`` from mesh ``old_shape`` on ``new_shape``.

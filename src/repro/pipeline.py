@@ -401,7 +401,8 @@ class Toolflow:
                  pretrain_lr: Optional[float] = None,
                  batch_size: int = 256, lasso: float = 1e-4,
                  weight_decay: float = 1e-4, sgdr_t0: int = 100,
-                 seed: int = 0, max_train: int = 4096, tbptt: int = 8):
+                 seed: int = 0, max_train: int = 4096, tbptt: int = 8,
+                 rolled_training: bool = False):
         # A StreamCellConfig (repro.stream) routes the flow through the
         # sequential-task paths: TBPTT training, last-step accuracy, and
         # compile -> CompiledStreamCell.  Duck-typed so this module never
@@ -413,6 +414,10 @@ class Toolflow:
             self.cell = None
         self.cfg = cfg
         self.tbptt = tbptt
+        # rolled_training runs the pretrain/retrain step loops as single
+        # fori_loop programs (lut_trainer.train(rolled=True)): no per-step
+        # host sync.  The distributed search promotes survivors this way.
+        self.rolled_training = rolled_training and self.cell is None
         self.hyper = dict(pretrain_steps=pretrain_steps,
                           retrain_steps=retrain_steps, lr=lr,
                           pretrain_lr=pretrain_lr,
@@ -462,7 +467,8 @@ class Toolflow:
                 lr=h["pretrain_lr"] if h["pretrain_lr"] is not None
                 else h["lr"],
                 batch_size=h["batch_size"], weight_decay=h["weight_decay"],
-                seed=h["seed"], max_train=h["max_train"])
+                seed=h["seed"], max_train=h["max_train"],
+                rolled=self.rolled_training)
         self.data = data
         self.dense_params = res.params
         self._record("pretrain", t0, final_loss=res.losses[-1],
@@ -500,7 +506,7 @@ class Toolflow:
                 steps=h["retrain_steps"], lr=h["lr"],
                 batch_size=h["batch_size"], weight_decay=h["weight_decay"],
                 sgdr_t0=h["sgdr_t0"], seed=h["seed"],
-                max_train=h["max_train"])
+                max_train=h["max_train"], rolled=self.rolled_training)
         self.data = data
         self.params = res.params
         self._record("retrain", t0, final_loss=res.losses[-1],
@@ -532,7 +538,7 @@ class Toolflow:
 
     # -- hardware-aware assembly search --------------------------------------
     @classmethod
-    def search(cls, task: str, budget=None, *, data=None):
+    def search(cls, task: str, budget=None, *, data=None, mesh=None):
         """Search the assembly space of a registered task (DESIGN.md §8).
 
         Explores fan-in / unit-width / depth / beta / skip-placement
@@ -547,9 +553,13 @@ class Toolflow:
 
         ``budget`` is a :class:`repro.search.SearchBudget` (default: the
         standard budget; ``SearchBudget.smoke()`` for CI-sized runs).
+        ``mesh`` (a ``jax.sharding.Mesh``, e.g. ``launch.mesh.
+        make_serving_mesh()``) distributes the population slices over the
+        mesh devices with straggler-aware rung promotion and elastic
+        remesh — see :class:`repro.search.DistributedSearchBudget`.
         """
         from repro.search import run_search
-        return run_search(task, budget=budget, data=data)
+        return run_search(task, budget=budget, data=data, mesh=mesh)
 
     # -- evaluation ----------------------------------------------------------
     def accuracy(self, data=None, *, folded: bool = False,

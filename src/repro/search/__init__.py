@@ -12,13 +12,14 @@ artifacts scored by calibrated area-delay product.  DESIGN.md §8.
         print(p.name, p.accuracy, p.luts, p.adp)
         p.compiled.save(f"frontier_{p.name}.npz")
 """
-from repro.search.driver import (FrontierPoint, SearchResult, pareto_frontier,
-                                 pareto_order, run_search)
+from repro.search.driver import (DistributedSearchBudget, FrontierPoint,
+                                 SearchResult, pareto_frontier, pareto_order,
+                                 run_search)
 from repro.search.space import (Candidate, SearchBudget, generate_candidates,
-                                shape_signature, validate)
+                                round_and_validate, shape_signature, validate)
 
 __all__ = [
-    "Candidate", "FrontierPoint", "SearchBudget", "SearchResult",
-    "generate_candidates", "pareto_frontier", "pareto_order", "run_search",
-    "shape_signature", "validate",
+    "Candidate", "DistributedSearchBudget", "FrontierPoint", "SearchBudget",
+    "SearchResult", "generate_candidates", "pareto_frontier", "pareto_order",
+    "round_and_validate", "run_search", "shape_signature", "validate",
 ]

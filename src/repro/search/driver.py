@@ -5,10 +5,13 @@ The paper's method — not one design point — is *choosing* the assembly
 choice as a search:
 
   1. `generate_candidates` (space.py) enumerates valid variants of the
-     task's base design;
-  2. candidates are grouped by *shape signature* and each group trains as
-     ONE vmapped program (`lut_trainer.train_population`) for the rung's
-     short horizon; validation accuracy is read per candidate;
+     task's base design — including the wider-space moves: additive
+     wide-input units (PolyLUT-Add) and learned-beta relaxation (HGQ-LUT);
+  2. candidates are grouped by *(shape signature, learn_beta)* and each
+     group trains as ONE vmapped program (`lut_trainer.train_population`)
+     for the rung's short horizon; validation accuracy is read per
+     candidate (learned-beta groups are scored on ROUNDED widths — the
+     honest promotable number);
   3. survivors are picked by Pareto rank over (rung accuracy, analytic
      area-delay product from `core.hwcost`), so the cheap-but-weak and the
      big-but-strong both stay alive — selection on accuracy alone would
@@ -17,7 +20,10 @@ choice as a search:
      full Toolflow (dense pre-train -> prune -> sparse retrain -> fold),
      producing a `CompiledLUTNetwork` per survivor; promotion continues
      past `budget.promote` (up to `max_promote_extra`) while the frontier
-     has fewer than `budget.min_frontier` points;
+     has fewer than `budget.min_frontier` points.  Learned-beta survivors
+     are first snapped to the integer grid and re-validated
+     (`space.round_and_validate`) — a rounding that breaks the K budget is
+     a recorded rejection;
   5. the returned frontier holds the non-dominated promoted points, each
      scored with the *calibrated* ADP (`hwcost.calibrated_report`: the
      analytic model cross-checked against actual `rtl.emit_verilog`
@@ -26,17 +32,47 @@ choice as a search:
 Scorer contract: rung training uses random mappings and no lasso phase —
 it ranks architectures, it does not produce deployable weights.  Every
 deployable artifact on the frontier comes from the full Toolflow.
+
+Distributed path (``mesh=`` / ``DistributedSearchBudget``)
+----------------------------------------------------------
+Each group's population is cut into ``population_slices`` contiguous
+slices; every slice is an independent rolled program
+(``lut_trainer.train_population_rolled``) over an explicit slice of the
+group's init keys.  Mesh mode executes the slices on per-device worker
+threads (job j -> device j % D, each wrapped in ``jax.default_device``);
+single-device mode executes the *same* slice programs sequentially.  Bit
+identity of rung survivors between the two is structural: the slice
+programs — shapes, init keys, batch schedule — are byte-for-byte the same,
+and the devices of a host platform are identical.  (Identity is NOT
+claimed against unsliced training: vmapped training is not bitwise
+width-invariant on XLA, so the slicing itself defines the reference.)
+
+Straggler/remesh semantics (``dist/straggler.py``, ``dist/elastic.py``):
+after the first worker drains its queue, a deadline of
+``straggler_factor x max(job time) + straggler_grace_s`` arms; slices
+still unfinished at the deadline are reported as PARTIAL — their
+candidates keep the previous rung's accuracy and are flagged in the rung
+log — instead of stalling the halving barrier.  A worker whose device
+fails mid-rung consults ``elastic.plan_search_remesh`` and re-enqueues its
+slices on the next alive worker; because slice programs carry no
+cross-device state, the replay is bit-identical and the rung converges to
+the same survivors.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import math
+import threading
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 from repro.core import hwcost
 from repro.core.assemble import AssembleConfig
 from repro.search.space import (Candidate, SearchBudget, generate_candidates,
-                                shape_signature)
+                                round_and_validate, shape_signature)
 
 
 # ---------------------------------------------------------------------------
@@ -76,6 +112,34 @@ def pareto_order(points: Sequence[Tuple[float, float]]) -> List[int]:
 
 
 # ---------------------------------------------------------------------------
+# Budgets
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DistributedSearchBudget(SearchBudget):
+    """`SearchBudget` plus the mesh-execution knobs (module docstring)."""
+
+    straggler_factor: float = 4.0   # deadline = factor * max(job dt) + grace
+    straggler_grace_s: float = 5.0
+    max_slice_retries: int = 2      # re-enqueues per slice before giving up
+
+    @classmethod
+    def from_budget(cls, budget: SearchBudget, **kw
+                    ) -> "DistributedSearchBudget":
+        base = {f.name: getattr(budget, f.name)
+                for f in dataclasses.fields(SearchBudget)}
+        base.update(kw)
+        return cls(**base)
+
+
+# Test-only fault injection for the executor (tests/test_search.py):
+#   {"delay": {device_idx: seconds}}  — sleep before that device's first job
+#                                       (interruptible by the deadline);
+#   {"fail_once": {device_idx, ...}}  — raise on that device's first job.
+_TEST_HOOKS: dict = {}
+
+
+# ---------------------------------------------------------------------------
 # Results
 # ---------------------------------------------------------------------------
 
@@ -92,6 +156,7 @@ class FrontierPoint:
     calibration: float       # rtl-parsed / analytic LUT ratio (1.0 = exact)
     rung_accuracy: float     # last short-horizon score (diagnostic)
     compiled: object         # CompiledLUTNetwork (kept untyped: no cycle)
+    learned_beta: bool = False  # widths came from the rounded relaxation
 
 
 @dataclasses.dataclass
@@ -102,6 +167,12 @@ class SearchResult:
     evaluated: List[dict]              # every candidate's rung trajectory
     rejected: List[Tuple[str, str]]    # (name, validity reason)
     seconds: float
+    # per-rung log: {"steps", "survivors" (ordered names), "partial"}
+    rungs: List[dict] = dataclasses.field(default_factory=list)
+    # distributed-execution bookkeeping (None on the legacy unsliced path):
+    # {"mode", "devices", "slices", "straggler_events", "remesh_events",
+    #  "partial"}
+    dist: Optional[dict] = None
 
     def summary(self) -> List[dict]:
         """JSON-ready frontier rows (benchmarks/assembly_search.py)."""
@@ -113,42 +184,361 @@ class SearchResult:
             "calibration": round(p.calibration, 4),
             "layers": [[l.units, l.fan_in, l.bits, l.assemble]
                        for l in p.cfg.layers],
+            "additive": any(l.add_terms > 1 for l in p.cfg.layers),
+            "learned_beta": p.learned_beta,
         } for p in self.frontier]
 
 
 # ---------------------------------------------------------------------------
-# The search
+# Rung training
 # ---------------------------------------------------------------------------
 
 def _analytic_adp(cfg: AssembleConfig, pipeline_every: int) -> float:
     return hwcost.report(cfg, pipeline_every=pipeline_every).area_delay
 
 
-def _rung(candidates: List[Candidate], data, budget: SearchBudget,
-          steps: int) -> Dict[str, float]:
-    """Short-horizon accuracy of every candidate, vmapped per group."""
-    from repro.train import lut_trainer
-
+def _group_candidates(candidates: List[Candidate]
+                      ) -> Dict[tuple, List[Candidate]]:
+    """Group by (shape signature, learn_beta): beta-relaxed candidates need
+    a different traced program (trainable bounds), so they never share a
+    vmapped group with statically-bounded ones."""
     groups: Dict[tuple, List[Candidate]] = {}
     for c in candidates:
-        groups.setdefault(shape_signature(c.cfg), []).append(c)
+        groups.setdefault((shape_signature(c.cfg), c.learn_beta), []).append(c)
+    return groups
+
+
+def _beta0_of(members: List[Candidate]) -> np.ndarray:
+    """Init widths of a learn_beta group: each candidate's hidden bits."""
+    n_hidden = len(members[0].cfg.layers) - 1
+    return np.array([[m.cfg.layers[l].bits for l in range(n_hidden)]
+                     for m in members], np.float32)
+
+
+def _rung(candidates: List[Candidate], data, budget: SearchBudget,
+          steps: int) -> Tuple[Dict[str, float], Dict[str, np.ndarray]]:
+    """Short-horizon accuracy of every candidate, vmapped per group
+    (legacy single-program path).  Returns (accs, learned betas)."""
+    from repro.train import lut_trainer
+
     accs: Dict[str, float] = {}
-    for members in groups.values():
+    betas: Dict[str, np.ndarray] = {}
+    for (_, learn_beta), members in _group_candidates(candidates).items():
+        cfg = members[0].cfg
         bounds = lut_trainer.stack_bounds([m.cfg for m in members])
-        res = lut_trainer.train_population(
-            members[0].cfg, bounds, data, steps=steps, lr=budget.lr,
-            batch_size=budget.batch_size, seed=budget.seed,
-            max_train=budget.train_rows)
+        if learn_beta:
+            res = lut_trainer.train_population_rolled(
+                cfg, bounds, data, steps=steps, lr=budget.lr,
+                batch_size=budget.batch_size, seed=budget.seed,
+                max_train=budget.train_rows, learn_beta=True,
+                beta0=_beta0_of(members),
+                beta_penalty=budget.beta_penalty, beta_lr=budget.beta_lr)
+            eval_bounds = lut_trainer.bounds_with_rounded_beta(
+                cfg, bounds, res.beta)
+            for i, m in enumerate(members):
+                betas[m.name] = res.beta[i]
+        else:
+            res = lut_trainer.train_population(
+                cfg, bounds, data, steps=steps, lr=budget.lr,
+                batch_size=budget.batch_size, seed=budget.seed,
+                max_train=budget.train_rows)
+            eval_bounds = bounds
         acc = lut_trainer.population_accuracy(
-            members[0].cfg, res.params, bounds, data,
-            max_eval=budget.eval_rows)
+            cfg, res.params, eval_bounds, data, max_eval=budget.eval_rows)
         for m, a in zip(members, acc):
             accs[m.name] = float(a)
-    return accs
+    return accs, betas
 
+
+@dataclasses.dataclass
+class _SliceJob:
+    """One population slice: an independent rolled training program."""
+    members: List[Candidate]
+    bounds: dict
+    keys: object                 # [width, 2] uint32 slice of the group keys
+    learn_beta: bool
+    beta0: Optional[np.ndarray]
+    steps: int
+
+
+def _run_slice(job: _SliceJob, data, budget: SearchBudget
+               ) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+    from repro.train import lut_trainer
+
+    cfg = job.members[0].cfg
+    res = lut_trainer.train_population_rolled(
+        cfg, job.bounds, data, steps=job.steps, lr=budget.lr,
+        batch_size=budget.batch_size, max_train=budget.train_rows,
+        init_keys=job.keys, learn_beta=job.learn_beta, beta0=job.beta0,
+        beta_penalty=budget.beta_penalty, beta_lr=budget.beta_lr)
+    eval_bounds = job.bounds
+    if job.learn_beta:
+        eval_bounds = lut_trainer.bounds_with_rounded_beta(
+            cfg, job.bounds, res.beta)
+    acc = lut_trainer.population_accuracy(
+        cfg, res.params, eval_bounds, data, max_eval=budget.eval_rows)
+    return np.asarray(acc), res.beta
+
+
+def _slice_jobs(candidates: List[Candidate], budget: SearchBudget,
+                steps: int) -> List[_SliceJob]:
+    """Deterministic slice plan: per group, ONE full-width key split sliced
+    contiguously into ceil(n/S)-wide pieces.
+
+    The full split + explicit slicing is load-bearing for bit identity:
+    ``jax.random.split(key, n)`` is not prefix-stable across counts, so
+    giving each slice its own split would change every candidate's init."""
+    import jax
+
+    S = max(budget.population_slices, 1)
+    jobs: List[_SliceJob] = []
+    for (_, learn_beta), members in _group_candidates(candidates).items():
+        from repro.train import lut_trainer
+        bounds = lut_trainer.stack_bounds([m.cfg for m in members])
+        keys = jax.random.split(jax.random.PRNGKey(budget.seed),
+                                len(members))
+        beta0 = _beta0_of(members) if learn_beta else None
+        n = len(members)
+        w = math.ceil(n / S)
+        for s0 in range(0, n, w):
+            s1 = min(s0 + w, n)
+            jobs.append(_SliceJob(
+                members=members[s0:s1],
+                bounds=jax.tree.map(lambda a: a[s0:s1], bounds),
+                keys=keys[s0:s1],
+                learn_beta=learn_beta,
+                beta0=None if beta0 is None else beta0[s0:s1],
+                steps=steps))
+    return jobs
+
+
+class _SliceExecutor:
+    """Per-device worker threads with deterministic job assignment.
+
+    Job j belongs to device j % D; each worker drains its own queue in
+    order, so the set of programs a device runs is a pure function of the
+    job list — not of timing.  Three departures from plain thread-pooling,
+    all for the search's semantics:
+
+      * straggler deadline — once the first worker finishes, jobs still
+        queued after ``straggler_factor * max(job dt) + grace`` seconds are
+        abandoned as PARTIAL (their candidates keep the previous rung's
+        score) instead of stalling the halving barrier;
+      * device loss — a worker whose job raises marks its device dead,
+        consults ``elastic.plan_search_remesh``, and re-enqueues its
+        remaining jobs (including the failed one) on the next alive worker;
+        identical host devices replay the same programs bit-identically;
+      * per-job timing feeds a ``dist.straggler.StragglerDetector`` so
+        slow-but-finishing slices are observable in the event log too.
+    """
+
+    def __init__(self, devices: Sequence, budget: "DistributedSearchBudget"):
+        self.devices = list(devices)
+        self.budget = budget
+        # On a forced-host CPU mesh the "devices" are identical threads of
+        # one backend, but jax keys the jit cache by placement — pinning
+        # with default_device would compile every program once PER DEVICE
+        # (measured: full recompile per TFRT_CPU_*, persistent cache does
+        # not dedupe).  Host meshes therefore share the unpinned executable
+        # and device affinity stays scheduling metadata; real accelerator
+        # meshes pin, where per-device caches are the point.
+        self.pin = any(getattr(d, "platform", "cpu") != "cpu"
+                       for d in self.devices)
+        # a device lost in one rung stays lost for the rest of the search
+        self.dead: set = set()
+        hooks = dict(_TEST_HOOKS)
+        self.delay = dict(hooks.get("delay", {}))
+        self.fail_once = set(hooks.get("fail_once", ()))
+
+    def run(self, jobs: List[_SliceJob], data
+            ) -> Tuple[List[Optional[tuple]], dict, set]:
+        import jax
+        from repro.dist import elastic, straggler
+
+        D = len(self.devices)
+        lock = threading.Lock()
+        dead = self.dead
+        alive0 = [d for d in range(D) if d not in dead]
+        if not alive0:
+            raise RuntimeError("no devices left for the population")
+        # deterministic assignment over the devices still alive at rung
+        # start; mid-rung failures re-route through next_alive below
+        queues: Dict[int, List[int]] = {d: [] for d in range(D)}
+        for j in range(len(jobs)):
+            queues[alive0[j % len(alive0)]].append(j)
+        results: List[Optional[tuple]] = [None] * len(jobs)
+        running: List[Optional[int]] = [None] * D
+        partial: set = set()
+        retries = [0] * len(jobs)
+        errors: List[BaseException] = []
+        stop = threading.Event()
+        first_done = threading.Event()
+        done_times: List[float] = []
+        detector = straggler.StragglerDetector(
+            warmup=3, factor=self.budget.straggler_factor)
+        events = {"straggler": [], "remesh": []}
+        delay = self.delay
+        fail_once = self.fail_once
+        population = sum(len(j.members) for j in jobs)
+
+        def next_alive(d: int) -> Optional[int]:
+            for k in range(1, D + 1):
+                cand = (d + k) % D
+                if cand not in dead:
+                    return cand
+            return None
+
+        def abandon(d: int, job_idx: Optional[int]) -> None:
+            # caller holds the lock
+            left = ([job_idx] if job_idx is not None else []) + queues[d]
+            partial.update(left)
+            if left:
+                events["straggler"].append(
+                    {"device": d, "partial_jobs": sorted(left)})
+            queues[d].clear()
+
+        def worker(d: int) -> None:
+            dev = self.devices[d]
+            while True:
+                with lock:
+                    if d in dead or errors:
+                        return
+                    if stop.is_set():
+                        abandon(d, None)
+                        return
+                    if queues[d]:
+                        job_idx = queues[d].pop(0)
+                        running[d] = job_idx
+                    else:
+                        if (all(not q for q in queues.values())
+                                and all(r is None or r == running[d]
+                                        for r in running)):
+                            return  # globally drained, nothing in flight
+                        job_idx = None
+                if job_idx is None:
+                    time.sleep(0.01)  # may still receive remesh re-enqueues
+                    continue
+                try:
+                    if d in delay:
+                        # injected straggler: interruptible sleep, so the
+                        # deadline abandons the DELAY, never real compute
+                        t_end = time.perf_counter() + delay.pop(d)
+                        while (time.perf_counter() < t_end
+                               and not stop.is_set()):
+                            time.sleep(0.01)
+                        if stop.is_set():
+                            with lock:
+                                abandon(d, job_idx)
+                                running[d] = None
+                            return
+                    if d in fail_once:
+                        fail_once.discard(d)
+                        raise RuntimeError(
+                            f"injected device loss on device {d}")
+                    ctx = (jax.default_device(dev) if self.pin
+                           else contextlib.nullcontext())
+                    with straggler.StepTimer() as t:
+                        with ctx:
+                            out = _run_slice(jobs[job_idx], data,
+                                             self.budget)
+                    with lock:
+                        results[job_idx] = out
+                        running[d] = None
+                        done_times.append(t.dt)
+                        detector.observe(job_idx, t.dt)
+                        if not queues[d]:
+                            first_done.set()
+                except Exception as e:  # noqa: BLE001 — device loss path
+                    with lock:
+                        running[d] = None
+                        dead.add(d)
+                        alive = D - len(dead)
+                        plan = elastic.plan_search_remesh(
+                            D, alive, population=population)
+                        events["remesh"].append({
+                            "device": d, "ok": plan.ok,
+                            "new_devices": plan.new_devices,
+                            "reason": plan.reason or str(e)})
+                        retries[job_idx] += 1
+                        if (not plan.ok or retries[job_idx]
+                                > self.budget.max_slice_retries):
+                            errors.append(e)
+                            return
+                        tgt = next_alive(d)
+                        queues[tgt].extend([job_idx] + queues[d])
+                        queues[d].clear()
+                    return
+
+        threads = [threading.Thread(target=worker, args=(d,), daemon=True)
+                   for d in range(D)]
+        for t in threads:
+            t.start()
+        deadline = None
+        while True:
+            with lock:
+                pending = any(results[j] is None and j not in partial
+                              for j in range(len(jobs)))
+                failed = bool(errors)
+            if not pending or failed:
+                break
+            if first_done.is_set() and deadline is None:
+                with lock:
+                    base = max(done_times) if done_times else 0.0
+                deadline = (time.perf_counter()
+                            + self.budget.straggler_factor * base
+                            + self.budget.straggler_grace_s)
+            if deadline is not None and time.perf_counter() > deadline:
+                stop.set()
+                break
+            time.sleep(0.02)
+        for t in threads:
+            t.join()
+        if errors:
+            raise errors[0]
+        with lock:
+            partial.update(j for j in range(len(jobs))
+                           if results[j] is None)
+            events["straggler"].extend(detector.events)
+        return results, events, partial
+
+
+def _rung_sliced(candidates: List[Candidate], data,
+                 budget: SearchBudget, steps: int,
+                 executor: Optional[_SliceExecutor]
+                 ) -> Tuple[Dict[str, float], Dict[str, np.ndarray],
+                            List[str], dict]:
+    """One rung on the slice plan.  ``executor=None`` runs the identical
+    slice programs sequentially (the single-device identity reference).
+
+    Returns (accs, betas, partial candidate names, events)."""
+    jobs = _slice_jobs(candidates, budget, steps)
+    if executor is None:
+        results = [_run_slice(job, data, budget) for job in jobs]
+        events = {"straggler": [], "remesh": []}
+        partial_idx: set = set()
+    else:
+        results, events, partial_idx = executor.run(jobs, data)
+    accs: Dict[str, float] = {}
+    betas: Dict[str, np.ndarray] = {}
+    partial_names: List[str] = []
+    for j, job in enumerate(jobs):
+        if j in partial_idx or results[j] is None:
+            partial_names.extend(m.name for m in job.members)
+            continue
+        acc, beta = results[j]
+        for i, m in enumerate(job.members):
+            accs[m.name] = float(acc[i])
+            if beta is not None:
+                betas[m.name] = beta[i]
+    return accs, betas, partial_names, events
+
+
+# ---------------------------------------------------------------------------
+# Promotion
+# ---------------------------------------------------------------------------
 
 def _promote(cand: Candidate, data, budget: SearchBudget,
-             rung_acc: float) -> FrontierPoint:
+             rung_acc: float, *, rolled: bool = False) -> FrontierPoint:
     """Full Toolflow training + compilation + calibrated hardware scoring."""
     from repro import pipeline
     from repro.train import lut_trainer
@@ -157,7 +547,8 @@ def _promote(cand: Candidate, data, budget: SearchBudget,
         cand.cfg, pretrain_steps=budget.pretrain_steps,
         retrain_steps=budget.retrain_steps, lr=budget.lr,
         batch_size=budget.batch_size, lasso=budget.lasso,
-        seed=budget.seed, max_train=budget.train_rows)
+        seed=budget.seed, max_train=budget.train_rows,
+        rolled_training=rolled)
     compiled = flow.run(data)
     acc = lut_trainer.accuracy(cand.cfg, flow.params, data, folded=True,
                                max_eval=budget.eval_rows)
@@ -171,21 +562,97 @@ def _promote(cand: Candidate, data, budget: SearchBudget,
         name=cand.name, cfg=cand.cfg, accuracy=acc, luts=rep.luts,
         adp=rep.area_delay, latency_ns=rep.latency_ns,
         fmax_mhz=rep.fmax_mhz, calibration=cal["ratio"],
-        rung_accuracy=rung_acc, compiled=compiled)
+        rung_accuracy=rung_acc, compiled=compiled,
+        learned_beta=cand.learn_beta)
 
+
+def _resolve_promotable(cand: Candidate, betas: Dict[str, np.ndarray],
+                        budget: SearchBudget,
+                        rejected: List[Tuple[str, str]]
+                        ) -> Optional[Candidate]:
+    """Snap a learn_beta candidate onto the integer grid before promotion;
+    identity for static candidates.  Failures are recorded, never silent."""
+    if not cand.learn_beta:
+        return cand
+    beta = betas.get(cand.name)
+    if beta is None:
+        rejected.append((cand.name, "post-rounding: no learned beta "
+                         "recorded (rung never completed)"))
+        return None
+    new_cfg, reason = round_and_validate(cand.cfg, beta, budget)
+    if new_cfg is None:
+        rejected.append((cand.name, reason))
+        return None
+    return dataclasses.replace(cand, cfg=new_cfg)
+
+
+def _promote_parallel(items: List[Tuple[Candidate, float]], data,
+                      budget: SearchBudget, devices: Sequence
+                      ) -> List[FrontierPoint]:
+    """Phase-A promotions across the mesh devices (item i -> device i % D).
+    Promotions are independent seeded programs, so thread scheduling cannot
+    change the results — only the wall-clock."""
+    import jax
+
+    results: List[Optional[FrontierPoint]] = [None] * len(items)
+    errors: List[BaseException] = []
+
+    pin = any(getattr(d, "platform", "cpu") != "cpu" for d in devices)
+
+    def work(i: int) -> None:
+        cand, acc = items[i]
+        try:
+            ctx = (jax.default_device(devices[i % len(devices)]) if pin
+                   else contextlib.nullcontext())
+            with ctx:
+                results[i] = _promote(cand, data, budget, acc, rolled=True)
+        except Exception as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=work, args=(i,), daemon=True)
+               for i in range(len(items))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    if errors:
+        raise errors[0]
+    return [p for p in results if p is not None]
+
+
+# ---------------------------------------------------------------------------
+# The search
+# ---------------------------------------------------------------------------
 
 def run_search(task: str, budget: Optional[SearchBudget] = None, *,
-               data=None) -> SearchResult:
+               data=None, mesh=None) -> SearchResult:
     """Hardware-aware assembly search for one registered task.
 
     ``task`` names an entry of ``configs.paper_tasks.TASKS``; ``data``
-    overrides the synthetic dataset (tests).  See the module docstring for
-    the schedule; `pipeline.Toolflow.search` is the public entry point.
+    overrides the synthetic dataset (tests).  ``mesh`` (a
+    ``jax.sharding.Mesh``) turns on the distributed path: population
+    slices execute on the mesh devices with straggler-aware rung promotion
+    and elastic remesh.  ``budget.population_slices > 1`` without a mesh
+    runs the same slice programs sequentially — the single-device identity
+    reference for the mesh run (module docstring).  See
+    `pipeline.Toolflow.search` for the public entry point.
     """
     from repro.configs import paper_tasks
     from repro.data import synthetic
 
     budget = budget or SearchBudget()
+    devices = None
+    if mesh is not None:
+        devices = [d for d in mesh.devices.flat]
+        if not isinstance(budget, DistributedSearchBudget):
+            budget = DistributedSearchBudget.from_budget(budget)
+        if budget.population_slices <= 1:
+            budget = dataclasses.replace(budget,
+                                         population_slices=len(devices))
+    sliced = mesh is not None or budget.population_slices > 1
+    executor = (_SliceExecutor(devices, budget) if mesh is not None
+                else None)
+
     t0 = time.time()
     base = paper_tasks.task_config(task)
     if data is None:
@@ -198,11 +665,34 @@ def run_search(task: str, budget: Optional[SearchBudget] = None, *,
                   round(_analytic_adp(c.cfg, budget.pipeline_every), 2),
                   "rungs": {}} for c in candidates]
     by_name = {e["name"]: e for e in evaluated}
+    dist_info = None
+    if sliced:
+        dist_info = {"mode": "mesh" if mesh is not None else "sliced",
+                     "devices": len(devices) if devices else 1,
+                     "slices": budget.population_slices,
+                     "straggler_events": [], "remesh_events": [],
+                     "partial": []}
 
     alive = list(candidates)
     accs: Dict[str, float] = {c.name: 0.0 for c in alive}
+    betas: Dict[str, np.ndarray] = {}
+    rung_log: List[dict] = []
     for steps in budget.rungs:
-        accs = _rung(alive, data, budget, steps)
+        if sliced:
+            new_accs, new_betas, partial, events = _rung_sliced(
+                alive, data, budget, steps, executor)
+            dist_info["straggler_events"].extend(events["straggler"])
+            dist_info["remesh_events"].extend(events["remesh"])
+            dist_info["partial"].extend(partial)
+            # partial slices: keep the previous rung's score (the halving
+            # barrier does not wait for stragglers)
+            accs = {c.name: new_accs.get(c.name, accs.get(c.name, 0.0))
+                    for c in alive}
+            betas.update(new_betas)
+        else:
+            accs, new_betas = _rung(alive, data, budget, steps)
+            betas.update(new_betas)
+            partial = []
         for name, a in accs.items():
             by_name[name]["rungs"][str(steps)] = round(a, 4)
         n_keep = max(min(budget.promote, len(alive)),
@@ -212,15 +702,50 @@ def run_search(task: str, budget: Optional[SearchBudget] = None, *,
                   for c in alive]
         keep_idx = pareto_order(points)[:n_keep]
         alive = [alive[i] for i in keep_idx]
+        rung_log.append({"steps": steps,
+                         "survivors": [c.name for c in alive],
+                         "partial": sorted(partial)})
 
-    # Promotion phase A: the rung survivors, in Pareto order.
+    # Promotion phase A: the rung survivors, in Pareto order.  Learned-beta
+    # survivors are rounded + re-validated first; failures are recorded and
+    # the queue moves on.
     points = [(accs.get(c.name, 0.0),
                _analytic_adp(c.cfg, budget.pipeline_every)) for c in alive]
     queue = [alive[i] for i in pareto_order(points)]
-    promoted: List[FrontierPoint] = []
-    for cand in queue[:budget.promote]:
-        promoted.append(_promote(cand, data, budget,
-                                 accs.get(cand.name, 0.0)))
+
+    def _wider(c: Candidate) -> bool:
+        return c.learn_beta or any(l.add_terms > 1 for l in c.cfg.layers)
+
+    # Diversity slot: rung scores systematically undersell the wider-space
+    # candidates (additive units and the beta relaxation pay their training
+    # cost up front), so if none made the Pareto queue, the best-scoring
+    # wider candidate still gets ONE promotion — the wider space is always
+    # explored at full-Toolflow fidelity, never written off on a 16-step
+    # score.  Deterministic, and identical across execution modes.
+    def _traj_acc(name: str) -> float:
+        rungs = by_name[name]["rungs"]
+        return list(rungs.values())[-1] if rungs else 0.0
+
+    if not any(_wider(c) for c in queue[:budget.promote]):
+        wider = [c for c in candidates if _wider(c)]
+        if wider:
+            pick = max(wider, key=lambda c: _traj_acc(c.name))
+            at = max(budget.promote - 1, 0)
+            queue = ([c for c in queue[:at] if c.name != pick.name] + [pick]
+                     + [c for c in queue[at:] if c.name != pick.name])
+
+    phase_a: List[Tuple[Candidate, float]] = []
+    for cand in queue:
+        if len(phase_a) >= budget.promote:
+            break
+        resolved = _resolve_promotable(cand, betas, budget, rejected)
+        if resolved is not None:
+            phase_a.append((resolved, _traj_acc(cand.name)))
+    if mesh is not None and len(phase_a) > 1:
+        promoted = _promote_parallel(phase_a, data, budget, devices)
+    else:
+        promoted = [_promote(c, data, budget, a, rolled=sliced)
+                    for c, a in phase_a]
 
     # Promotion phase B: if full training left the frontier short (rung
     # scores are noisy; mid-range survivors can all come back dominated),
@@ -233,13 +758,13 @@ def run_search(task: str, budget: Optional[SearchBudget] = None, *,
         return list(rungs.values())[-1] if rungs else 0.0
 
     max_promote = budget.promote + budget.max_promote_extra
+    attempted = {c.name for c, _ in phase_a}
     while len(promoted) < max_promote:
         frontier_n = len(pareto_frontier(
             [(p.accuracy, p.adp) for p in promoted]))
         if frontier_n >= budget.min_frontier:
             break
-        done = {p.name for p in promoted}
-        remaining = [c for c in candidates if c.name not in done]
+        remaining = [c for c in candidates if c.name not in attempted]
         if not remaining:
             break
         lo = min(p.adp for p in promoted) if promoted else 0.0
@@ -250,12 +775,17 @@ def run_search(task: str, budget: Optional[SearchBudget] = None, *,
         above = [c for c in remaining if adp_of[c.name] > hi]
         pool = below or above or remaining
         cand = max(pool, key=lambda c: _last_rung_acc(c.name))
-        promoted.append(_promote(cand, data, budget,
-                                 _last_rung_acc(cand.name)))
+        attempted.add(cand.name)
+        resolved = _resolve_promotable(cand, betas, budget, rejected)
+        if resolved is None:
+            continue
+        promoted.append(_promote(resolved, data, budget,
+                                 _last_rung_acc(cand.name), rolled=sliced))
 
     front_idx = pareto_frontier([(p.accuracy, p.adp) for p in promoted])
     frontier = sorted((promoted[i] for i in front_idx),
                       key=lambda p: -p.accuracy)
     return SearchResult(task=task, frontier=frontier, promoted=promoted,
                         evaluated=evaluated, rejected=rejected,
-                        seconds=time.time() - t0)
+                        seconds=time.time() - t0, rungs=rung_log,
+                        dist=dist_info)

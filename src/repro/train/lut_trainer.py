@@ -40,7 +40,15 @@ def train(cfg: AssembleConfig, data: Dataset, *, steps: int = 200,
           lr: float = 5e-3, batch_size: int = 256, dense: bool = False,
           mappings: Optional[Sequence] = None, lasso: float = 0.0,
           weight_decay: float = 1e-4, sgdr_t0: int = 0, seed: int = 0,
-          max_train: int = 4096) -> TrainResult:
+          max_train: int = 4096, rolled: bool = False) -> TrainResult:
+    """Single-model training.
+
+    ``rolled=True`` runs the whole step loop as ONE jitted ``fori_loop``
+    program with a *traced* step count: no per-step host round-trip (the
+    ``float(l)`` sync below) and no recompile when the step budget changes.
+    The loss history then has a single entry (the final step's loss).  The
+    distributed search promotes survivors this way — promotion training
+    dominates its wall-clock (DESIGN.md §8)."""
     rng = jax.random.PRNGKey(seed)
     params = assemble.init(rng, cfg, dense=dense, mappings=mappings)
     schedule = optim.sgdr_schedule(sgdr_t0) if sgdr_t0 else None
@@ -50,9 +58,10 @@ def train(cfg: AssembleConfig, data: Dataset, *, steps: int = 200,
     x = jnp.asarray(data.x_train[:max_train])
     y = jnp.asarray(data.y_train[:max_train])
     binary = cfg.layers[-1].units == 1
+    n = x.shape[0]
+    bs = min(batch_size, n)
 
-    @jax.jit
-    def step(params, opt, xb, yb):
+    def step_fn(params, opt, xb, yb):
         def loss_fn(p):
             logits, new_p = assemble.apply(p, cfg, xb, training=True,
                                            dense=dense)
@@ -68,8 +77,21 @@ def train(cfg: AssembleConfig, data: Dataset, *, steps: int = 200,
         new_p2, opt2, _ = optim.adamw_update(ocfg, g, opt, new_p)
         return new_p2, opt2, l
 
-    n = x.shape[0]
-    bs = min(batch_size, n)
+    if rolled:
+        @jax.jit
+        def run(params, opt, x, y, n_steps):
+            def body(i, carry):
+                p, o, _ = carry
+                lo = (i * bs) % (n - bs + 1)
+                xb = jax.lax.dynamic_slice_in_dim(x, lo, bs)
+                yb = jax.lax.dynamic_slice_in_dim(y, lo, bs)
+                return step_fn(p, o, xb, yb)
+            return jax.lax.fori_loop(0, n_steps, body,
+                                     (params, opt, jnp.float32(0.0)))
+        params, opt, l = run(params, opt, x, y, jnp.int32(steps))
+        return TrainResult(params=params, losses=[float(l)])
+
+    step = jax.jit(step_fn)
     hist = []
     for i in range(steps):
         lo = (i * bs) % (n - bs + 1)
@@ -210,12 +232,18 @@ def quant_bounds(cfg: AssembleConfig) -> dict:
     across a group; bit-widths may vary.
     """
     in_spec = cfg.input_quant_spec()
-    return {
+    out = {
         "in": (jnp.float32(in_spec.qmin), jnp.float32(in_spec.qmax)),
         "layers": [(jnp.float32(cfg.quant_spec(l).qmin),
                     jnp.float32(cfg.quant_spec(l).qmax))
                    for l in range(len(cfg.layers))],
     }
+    add = {str(l): (jnp.float32(cfg.add_quant_spec(l).qmin),
+                    jnp.float32(cfg.add_quant_spec(l).qmax))
+           for l in range(len(cfg.layers)) if cfg.layers[l].add_terms > 1}
+    if add:  # keyed by layer so the pytree structure is signature-stable
+        out["add"] = add
+    return out
 
 
 def stack_bounds(cfgs: Sequence[AssembleConfig]) -> dict:
@@ -235,13 +263,22 @@ def population_forward(params: dict, cfg: AssembleConfig, bounds: dict,
     h = quant.fake_quant_dynamic(params["in_q"], bounds["in"][0],
                                  bounds["in"][1], x)
     new_layers = []
-    for l in range(len(cfg.layers)):
+    for l, spec in enumerate(cfg.layers):
         pl = params["layers"][l]
         xi = assemble.gather_layer_inputs(cfg, pl, l, h)
+        additive = spec.add_terms > 1
         out, new_sn = subnet.apply_subnet(
             pl["subnet"], cfg.subnet_spec(l), xi,
-            activation=cfg.has_activation(l), training=training)
+            activation=False if additive else cfg.has_activation(l),
+            training=training)
         out = out[..., 0]
+        if additive:
+            ab = bounds["add"][str(l)]
+            out = quant.fake_quant_dynamic(pl["add_q"], ab[0], ab[1], out)
+            out = out.reshape(out.shape[0], spec.units, spec.add_terms)
+            out = out.sum(axis=-1)
+            if cfg.has_activation(l):
+                out = jax.nn.relu(out)
         h = quant.fake_quant_dynamic(pl["out_q"], bounds["layers"][l][0],
                                      bounds["layers"][l][1], out)
         nl = dict(pl)
@@ -253,7 +290,10 @@ def population_forward(params: dict, cfg: AssembleConfig, bounds: dict,
 @dataclasses.dataclass
 class PopulationResult:
     params: dict        # stacked pytree, leading [n_candidates] axis
-    losses: np.ndarray  # [n_candidates, steps]
+    losses: np.ndarray  # [n_candidates, steps] (or [n_candidates, 1] rolled)
+    # learned per-hidden-layer bit-widths [n_candidates, n_layers-1]
+    # (train_population_rolled with learn_beta=True; None otherwise)
+    beta: Optional[np.ndarray] = None
 
 
 @functools.lru_cache(maxsize=64)
@@ -294,7 +334,8 @@ def _population_eval(cfg: AssembleConfig):
 def train_population(cfg: AssembleConfig, bounds: dict, data: Dataset, *,
                      steps: int = 40, lr: float = 5e-3,
                      batch_size: int = 256, weight_decay: float = 1e-4,
-                     seed: int = 0, max_train: int = 2048
+                     seed: int = 0, max_train: int = 2048,
+                     init_keys: Optional[jax.Array] = None
                      ) -> PopulationResult:
     """Short-horizon training of a shape-signature group, all at once.
 
@@ -302,9 +343,16 @@ def train_population(cfg: AssembleConfig, bounds: dict, data: Dataset, *,
     candidate count.  One jitted vmapped train step covers the whole group
     (shared data batch, per-candidate params/optimizer/bounds); mappings
     are random per candidate (the scorer contract above).
+
+    ``init_keys`` ([n_candidates, 2] uint32) overrides the per-candidate
+    init keys.  The distributed search slices ONE full-group
+    ``jax.random.split`` across population slices this way — splitting a
+    sub-key per slice would change every candidate's init, because
+    ``jax.random.split`` is not prefix-stable across different counts.
     """
     n_cand = int(jax.tree.leaves(bounds)[0].shape[0])
-    keys = jax.random.split(jax.random.PRNGKey(seed), n_cand)
+    keys = (init_keys if init_keys is not None
+            else jax.random.split(jax.random.PRNGKey(seed), n_cand))
     params = jax.vmap(lambda k: assemble.init(k, cfg))(keys)
     opt = optim.adamw_init(params)  # zeros_like: stacked params -> stacked m/v
     ocfg = optim.AdamWConfig(lr=lr, weight_decay=weight_decay)
@@ -325,6 +373,161 @@ def train_population(cfg: AssembleConfig, bounds: dict, data: Dataset, *,
     return PopulationResult(params=params,
                             losses=np.stack(hist, axis=-1) if hist
                             else np.zeros((n_cand, 0)))
+
+
+def _beta_area_proxy(cfg: AssembleConfig, beta: jax.Array) -> jax.Array:
+    """Differentiable stand-in for ``hwcost.network_luts`` as a function of
+    the hidden-layer bit-widths ``beta`` ([n_layers-1] floats).
+
+    Layer l's output width is layer l+1's LUT *address* width, so the cost
+    of widening beta_l is the downstream layer's table growth:
+    ``rows * out_bits * 2^max(beta_l * fan_in - 6, 0)`` (the LUT6
+    decomposition of hwcost, smoothed).  Additive next layers are priced on
+    their branch LUTs (fan-in F, add_bits outputs) — the combiner does not
+    read beta_l."""
+    total = jnp.float32(0.0)
+    for l in range(len(cfg.layers) - 1):
+        nxt = cfg.layers[l + 1]
+        rows = cfg.mapping_rows(l + 1)
+        out_bits = nxt.add_bits if nxt.add_terms > 1 else nxt.bits
+        k = beta[l] * nxt.fan_in
+        total = total + rows * out_bits * 2.0 ** jnp.maximum(k - 6.0, 0.0)
+    return total
+
+
+def bounds_with_rounded_beta(cfg: AssembleConfig, bounds: dict,
+                             beta) -> dict:
+    """Stacked ``bounds`` with hidden-layer clip ranges rebuilt from the
+    ROUNDED learned beta ([n_cand, n_layers-1]).
+
+    Rung scoring evaluates learned-beta candidates this way: the deployed
+    design only ever has integer widths, so the promotable score must be
+    measured on the rounded grid, not the relaxation."""
+    b = quant.round_beta(beta)
+    lay = list(bounds["layers"])
+    for l in range(b.shape[1]):
+        lay[l] = quant.beta_bounds(jnp.asarray(b[:, l], jnp.float32),
+                                   signed=not cfg.has_activation(l))
+    return dict(bounds, layers=lay)
+
+
+@functools.lru_cache(maxsize=64)
+def _population_rolled(cfg: AssembleConfig, ocfg: optim.AdamWConfig,
+                       bs: int, learn_beta: bool,
+                       beta_penalty: float, beta_lr: float):
+    """Whole-rung population training as ONE jitted ``fori_loop`` program.
+
+    The step count is a *traced* operand, so one compile per (shape
+    signature, optimizer, batch size) serves every rung of the successive
+    halving — and every population slice of the distributed search, since
+    slice width only changes the vmapped leading axis.  No per-step host
+    sync: the loop returns only the final-step losses.
+
+    ``learn_beta=True`` adds the HGQ-LUT relaxation: hidden-layer clip
+    bounds come from a trainable ``beta`` vector (``quant.beta_bounds``)
+    instead of the static stacked bounds, the loss carries an area-proxy
+    penalty (relative to each candidate's init), and beta updates by plain
+    SGD clipped to [1, 8] — AdamW's weight decay would drag the widths
+    toward zero independent of the loss, so beta is deliberately excluded
+    from the optimizer state."""
+    binary = cfg.layers[-1].units == 1
+    n_hidden = len(cfg.layers) - 1
+    signed = tuple(not cfg.has_activation(l) for l in range(n_hidden))
+
+    def one_step(p, o, beta_c, proxy0, b, xb, yb):
+        def loss_fn(pp, bb):
+            bset = b
+            if learn_beta:
+                lay = list(b["layers"])
+                for l in range(n_hidden):
+                    lay[l] = quant.beta_bounds(bb[l], signed[l])
+                bset = dict(b, layers=lay)
+            logits, new_p = population_forward(pp, cfg, bset, xb,
+                                               training=True)
+            if binary:
+                l_ = losses.binary_cross_entropy(logits, yb)
+            else:
+                l_ = losses.softmax_cross_entropy(logits, yb)
+            if learn_beta:
+                l_ = l_ + beta_penalty * _beta_area_proxy(cfg, bb) / proxy0
+            return l_, new_p
+        if learn_beta:
+            (l, new_p), (gp, gb) = jax.value_and_grad(
+                loss_fn, argnums=(0, 1), has_aux=True,
+                allow_int=True)(p, beta_c)
+            beta2 = jnp.clip(beta_c - beta_lr * gb, 1.0, 8.0)
+        else:
+            (l, new_p), gp = jax.value_and_grad(
+                loss_fn, has_aux=True, allow_int=True)(p, beta_c)
+            beta2 = beta_c
+        new_p2, o2, _ = optim.adamw_update(ocfg, gp, o, new_p)
+        return new_p2, o2, beta2, l
+
+    vstep = jax.vmap(one_step, in_axes=(0, 0, 0, 0, 0, None, None))
+
+    @jax.jit
+    def run(params, opt, beta, proxy0, bounds, x, y, n_steps):
+        n = x.shape[0]
+
+        def body(i, carry):
+            p, o, bta, _ = carry
+            lo = (i * bs) % (n - bs + 1)
+            xb = jax.lax.dynamic_slice_in_dim(x, lo, bs)
+            yb = jax.lax.dynamic_slice_in_dim(y, lo, bs)
+            return vstep(p, o, bta, proxy0, bounds, xb, yb)
+
+        init = (params, opt, beta,
+                jnp.zeros((beta.shape[0],), jnp.float32))
+        return jax.lax.fori_loop(0, n_steps, body, init)
+
+    return run
+
+
+def train_population_rolled(cfg: AssembleConfig, bounds: dict,
+                            data: Dataset, *, steps: int = 40,
+                            lr: float = 5e-3, batch_size: int = 256,
+                            weight_decay: float = 1e-4, seed: int = 0,
+                            max_train: int = 2048,
+                            init_keys: Optional[jax.Array] = None,
+                            learn_beta: bool = False, beta0=None,
+                            beta_penalty: float = 0.05,
+                            beta_lr: float = 0.05) -> PopulationResult:
+    """:func:`train_population` on the rolled ``fori_loop`` engine.
+
+    Identical batch schedule and init semantics (same ``init_keys``
+    contract); the loss history collapses to the final step.  This is the
+    distributed search's rung engine — both the mesh path and its
+    single-device identity reference run THIS function, so survivor
+    bit-identity is a property of running the same sliced programs, not of
+    XLA reduction orders.  ``beta0`` ([n_cand, n_layers-1] init widths from
+    each candidate's config) is required when ``learn_beta``."""
+    n_cand = int(jax.tree.leaves(bounds)[0].shape[0])
+    keys = (init_keys if init_keys is not None
+            else jax.random.split(jax.random.PRNGKey(seed), n_cand))
+    params = jax.vmap(lambda k: assemble.init(k, cfg))(keys)
+    opt = optim.adamw_init(params)
+    ocfg = optim.AdamWConfig(lr=lr, weight_decay=weight_decay)
+    opt = optim.AdamWState(step=jnp.zeros((n_cand,), jnp.int32),
+                           m=opt.m, v=opt.v)
+    x = jnp.asarray(data.x_train[:max_train])
+    y = jnp.asarray(data.y_train[:max_train])
+    bs = min(batch_size, x.shape[0])
+    n_hidden = max(len(cfg.layers) - 1, 1)
+    if learn_beta:
+        assert beta0 is not None, "learn_beta needs per-candidate beta0"
+        beta = jnp.asarray(beta0, jnp.float32)
+        proxy0 = jnp.maximum(
+            jax.vmap(lambda b: _beta_area_proxy(cfg, b))(beta), 1.0)
+    else:
+        beta = jnp.zeros((n_cand, n_hidden), jnp.float32)
+        proxy0 = jnp.ones((n_cand,), jnp.float32)
+    run = _population_rolled(cfg, ocfg, bs, learn_beta,
+                             float(beta_penalty), float(beta_lr))
+    params, opt, beta, l = run(params, opt, beta, proxy0, bounds, x, y,
+                               jnp.int32(steps))
+    return PopulationResult(params=params,
+                            losses=np.asarray(l)[:, None],
+                            beta=np.asarray(beta) if learn_beta else None)
 
 
 def population_accuracy(cfg: AssembleConfig, params: dict, bounds: dict,

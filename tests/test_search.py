@@ -1,9 +1,16 @@
-"""Assembly-search subsystem: space validity, Pareto logic, the vmapped
-population scorer's equivalence with the canonical forward, and the
-end-to-end Toolflow.search contract (frontier size + artifact round-trip
-bit-identity across every registered backend)."""
+"""Assembly-search subsystem: space validity (including the wider-space
+knobs — additive units and the learned-beta relaxation — and their
+recorded rejection paths), Pareto logic, the vmapped population scorer's
+equivalence with the canonical forward, the end-to-end Toolflow.search
+contract (frontier size + artifact round-trip bit-identity across every
+registered backend), and the distributed engine: 4-device subprocess runs
+asserting sharded-vs-single bit-identity, straggler-tolerant rung
+promotion, and elastic remesh after a mid-rung device loss."""
 import dataclasses
 import os
+import subprocess
+import sys
+import textwrap
 
 import jax
 import numpy as np
@@ -11,12 +18,26 @@ import pytest
 
 from repro import backends
 from repro.configs import paper_tasks
-from repro.core import assemble
+from repro.core import assemble, folding, quant
 from repro.data import synthetic
 from repro.pipeline import CompiledLUTNetwork, Toolflow
 from repro.search import (SearchBudget, generate_candidates, pareto_frontier,
-                          pareto_order, shape_signature, validate)
+                          pareto_order, round_and_validate, shape_signature,
+                          validate)
 from repro.train import lut_trainer
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_subprocess(code: str, devices: int = 4) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=560)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
 
 
 # ---------------------------------------------------------------------------
@@ -29,8 +50,8 @@ def test_generator_base_first_valid_and_deduped():
     cands, rejected = generate_candidates(base, budget)
     assert cands[0].name == "base" and cands[0].cfg == base
     assert 3 <= len(cands) <= budget.n_candidates
-    cfgs = [c.cfg for c in cands]
-    assert len(set(cfgs)) == len(cfgs), "duplicate configs survived"
+    keys = [(c.cfg, c.learn_beta) for c in cands]
+    assert len(set(keys)) == len(keys), "duplicate candidates survived"
     for c in cands:
         assert validate(c.cfg, budget) is None, c.name
     # rejections are recorded with reasons, never silently dropped
@@ -171,3 +192,242 @@ def test_toolflow_search_end_to_end(tmp_path):
             got = np.asarray(loaded.predict_codes(x, backend=name))
             np.testing.assert_array_equal(got, ref,
                                           err_msg=f"{p.name}/{name}")
+
+
+# ---------------------------------------------------------------------------
+# wider space: additive wide-input units
+# ---------------------------------------------------------------------------
+
+def _additive_cfg(add_bits: int = 3) -> assemble.AssembleConfig:
+    base = paper_tasks.reduced("nid")
+    layers = list(base.layers)
+    layers[0] = dataclasses.replace(layers[0], add_terms=2,
+                                    add_bits=add_bits)
+    return dataclasses.replace(base, layers=tuple(layers))
+
+
+def test_additive_population_forward_matches_apply():
+    cfg = _additive_cfg()
+    params = assemble.init(jax.random.PRNGKey(5), cfg)
+    x = jax.random.uniform(jax.random.PRNGKey(6), (32, cfg.in_features),
+                           minval=-1.0, maxval=1.0)
+    ref, _ = assemble.apply(params, cfg, x, training=False)
+    bounds = lut_trainer.quant_bounds(cfg)
+    assert "add" in bounds  # additive layers carry their own clip ranges
+    got, _ = lut_trainer.population_forward(params, cfg, bounds, x,
+                                            training=False)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
+
+
+def test_additive_folding_matches_apply_codes():
+    """The lowered branch+combiner tables reproduce the training-time
+    additive forward exactly, and the folded cfg IS the lowered form."""
+    cfg = _additive_cfg()
+    params = assemble.init(jax.random.PRNGKey(7), cfg)
+    net = folding.fold_network(params, cfg)
+    assert net.cfg == assemble.lower_additive(cfg)
+    assert len(net.cfg.layers) == len(cfg.layers) + 1
+    x = jax.random.uniform(jax.random.PRNGKey(8), (64, cfg.in_features),
+                           minval=-1.0, maxval=1.0)
+    ref = assemble.apply_codes(params, cfg, x)
+    got = folding.folded_apply_codes(net, x)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
+
+
+def test_additive_validate_enforces_k_budget_on_lowered_form():
+    """The combiner LUT (add_bits * add_terms address bits) must fit the K
+    budget even though the un-lowered layer never shows that width."""
+    cfg = _additive_cfg(add_bits=7)   # combiner: 7*2 = 14 address bits
+    reason = validate(cfg, SearchBudget(max_addr_bits=12))
+    assert reason is not None and "address bits" in reason
+    # the same design under a wide-enough budget is valid
+    assert validate(cfg, SearchBudget(max_addr_bits=14)) is None
+
+
+def test_additive_validate_enforces_folding_cap_on_lowered_form():
+    cfg = _additive_cfg()
+    lowered = assemble.lower_additive(cfg)
+    entries = sum(l.units * (1 << lowered.lut_addr_bits(i))
+                  for i, l in enumerate(lowered.layers))
+    reason = validate(cfg, SearchBudget(max_table_entries=entries - 1))
+    assert reason is not None and "table entries" in reason
+    assert validate(cfg, SearchBudget(max_table_entries=entries)) is None
+
+
+def test_generator_records_additive_rejection():
+    """A K budget too tight for the branch layers rejects add2 with a
+    recorded reason — never a silent drop."""
+    base = paper_tasks.reduced("nid")
+    budget = SearchBudget(max_addr_bits=6)  # base fits; wider moves don't
+    cands, rejected = generate_candidates(base, budget)
+    names = {c.name for c in cands}
+    assert "add2" not in names
+    by_name = dict(rejected)
+    assert "add2" in by_name and "address bits" in by_name["add2"]
+
+
+def test_shape_signature_separates_additive_from_base():
+    base = paper_tasks.reduced("nid")
+    assert shape_signature(_additive_cfg()) != shape_signature(base)
+
+
+# ---------------------------------------------------------------------------
+# wider space: learned beta (rounding + recorded rejections)
+# ---------------------------------------------------------------------------
+
+def test_round_and_validate_accepts_in_budget_beta():
+    base = paper_tasks.reduced("nid")
+    beta = np.full(len(base.layers) - 1, 2.4)
+    cfg, reason = round_and_validate(base, beta, SearchBudget())
+    assert reason is None
+    assert [l.bits for l in cfg.layers] == [2, 2, 2, base.layers[-1].bits]
+
+
+def test_round_and_validate_rejects_post_rounding_k_violation():
+    """A relaxation that drifts high rounds to widths whose address bits
+    bust the K budget — rejected with the post-rounding reason."""
+    base = paper_tasks.reduced("nid")
+    beta = np.full(len(base.layers) - 1, 7.6)  # rounds to 8-bit activations
+    cfg, reason = round_and_validate(base, beta, SearchBudget())
+    assert cfg is None
+    assert reason.startswith("post-rounding:") and "address bits" in reason
+
+
+def test_round_and_validate_rejects_post_rounding_folding_cap():
+    base = paper_tasks.reduced("nid")
+    beta = np.full(len(base.layers) - 1, 2.0)
+    tight = SearchBudget(max_table_entries=100)
+    cfg, reason = round_and_validate(base, beta, tight)
+    assert cfg is None
+    assert reason.startswith("post-rounding:") and "table entries" in reason
+
+
+def test_beta_bounds_round_trip_quant():
+    lo, hi = quant.beta_bounds(np.float32(3.0), signed=False)
+    assert (float(lo), float(hi)) == (0.0, 7.0)
+    lo, hi = quant.beta_bounds(np.float32(3.0), signed=True)
+    assert (float(lo), float(hi)) == (-4.0, 3.0)
+    np.testing.assert_array_equal(quant.round_beta(np.array([0.2, 4.6, 9.3])),
+                                  [1, 5, 8])
+
+
+def test_train_population_rolled_learns_beta_on_rounded_grid():
+    base = paper_tasks.reduced("nid")
+    bounds = lut_trainer.stack_bounds([base, base])
+    data = synthetic.load("nid", n_train=512, n_test=256)
+    beta0 = np.full((2, len(base.layers) - 1), 2.0, np.float32)
+    res = lut_trainer.train_population_rolled(
+        base, bounds, data, steps=12, max_train=256, learn_beta=True,
+        beta0=beta0, beta_penalty=0.05, beta_lr=0.05)
+    assert res.beta is not None and res.beta.shape == beta0.shape
+    assert np.isfinite(res.beta).all()
+    assert (res.beta >= 1.0).all() and (res.beta <= 8.0).all()
+    assert not np.array_equal(res.beta, beta0)  # beta actually moved
+    eval_bounds = lut_trainer.bounds_with_rounded_beta(base, bounds, res.beta)
+    acc = lut_trainer.population_accuracy(base, res.params, eval_bounds,
+                                          data, max_eval=256)
+    assert ((acc >= 0) & (acc <= 1)).all()
+
+
+def test_reduced_task_names_are_the_fast_trio():
+    names = paper_tasks.reduced_task_names()
+    assert set(names) == {"mnist_reduced", "jsc_reduced", "nid_reduced"}
+
+
+# ---------------------------------------------------------------------------
+# distributed engine: 4-device subprocess contracts
+# ---------------------------------------------------------------------------
+
+def test_distributed_search_bit_identical_4way():
+    """Mesh execution (4 host devices, per-device worker threads) and
+    single-device execution of the same slice programs pick bit-identical
+    rung survivors, frontier, and promoted artifact codes."""
+    run_subprocess("""
+        import numpy as np, jax
+        from jax.sharding import Mesh
+        from repro.search import (DistributedSearchBudget, SearchBudget,
+                                  run_search)
+        from repro.data import synthetic
+
+        assert jax.device_count() == 4
+        budget = DistributedSearchBudget.from_budget(SearchBudget(
+            n_candidates=12, rungs=(8,), promote=2, min_frontier=2,
+            max_promote_extra=0, pretrain_steps=16, retrain_steps=24,
+            train_rows=1024, eval_rows=512), population_slices=4)
+        data = synthetic.load("nid", n_train=1024, n_test=1024)
+
+        single = run_search("nid_reduced", budget, data=data)
+        mesh = Mesh(np.array(jax.devices()), ("search",))
+        dist = run_search("nid_reduced", budget, data=data, mesh=mesh)
+
+        assert dist.dist["mode"] == "mesh" and dist.dist["devices"] == 4
+        assert dist.dist["partial"] == []
+        assert ([r["survivors"] for r in single.rungs]
+                == [r["survivors"] for r in dist.rungs]), "rung survivors"
+        assert ([p.name for p in single.frontier]
+                == [p.name for p in dist.frontier]), "frontier"
+        x = np.asarray(jax.random.uniform(
+            jax.random.PRNGKey(0), (33, 593), minval=-1.0, maxval=1.0))
+        for ps, pm in zip(single.promoted, dist.promoted):
+            assert ps.name == pm.name and ps.accuracy == pm.accuracy
+            np.testing.assert_array_equal(
+                np.asarray(ps.compiled.predict_codes(x, backend="take")),
+                np.asarray(pm.compiled.predict_codes(x, backend="take")),
+                err_msg=ps.name)
+        print("IDENTICAL", len(single.promoted))
+    """)
+
+
+def test_distributed_search_straggler_and_remesh_4way():
+    """Fault injection on the 4-way mesh: a delayed device's slices are
+    reported as partial instead of stalling the rung barrier, and a device
+    that dies mid-rung triggers a remesh whose replayed slices converge to
+    the same survivors as the clean run."""
+    run_subprocess("""
+        import numpy as np, jax
+        from jax.sharding import Mesh
+        from repro.search import (DistributedSearchBudget, SearchBudget,
+                                  run_search)
+        from repro.search import driver
+        from repro.data import synthetic
+
+        assert jax.device_count() == 4
+        budget = DistributedSearchBudget.from_budget(SearchBudget(
+            n_candidates=12, rungs=(8,), promote=0, min_frontier=0,
+            max_promote_extra=0, train_rows=512, eval_rows=256),
+            population_slices=4, straggler_grace_s=30.0)
+        data = synthetic.load("nid", n_train=1024, n_test=512)
+        mesh = Mesh(np.array(jax.devices()), ("search",))
+
+        clean = run_search("nid_reduced", budget, data=data)
+
+        # --- straggler: device 1 sleeps far past any sane deadline ------
+        tight = DistributedSearchBudget.from_budget(
+            budget, straggler_factor=1.0, straggler_grace_s=2.0)
+        driver._TEST_HOOKS.clear()
+        driver._TEST_HOOKS["delay"] = {1: 9999.0}
+        slow = run_search("nid_reduced", tight, data=data, mesh=mesh)
+        assert slow.dist["partial"], "delayed slices were not reported"
+        assert slow.dist["straggler_events"], "no straggler event recorded"
+        assert slow.rungs and slow.rungs[0]["partial"]
+        assert slow.rungs[0]["survivors"], "rung did not converge"
+        # every non-partial candidate scored identically to the clean run
+        part = set(slow.dist["partial"])
+        for e_clean, e_slow in zip(clean.evaluated, slow.evaluated):
+            if e_slow["name"] not in part:
+                assert e_slow["rungs"] == e_clean["rungs"]
+        print("PARTIAL", sorted(part))
+
+        # --- remesh: device 2 dies on its first job ---------------------
+        driver._TEST_HOOKS.clear()
+        driver._TEST_HOOKS["fail_once"] = {2}
+        lost = run_search("nid_reduced", budget, data=data, mesh=mesh)
+        driver._TEST_HOOKS.clear()
+        ev = lost.dist["remesh_events"]
+        assert ev and ev[0]["device"] == 2 and ev[0]["ok"]
+        assert ev[0]["new_devices"] == 3
+        assert lost.dist["partial"] == []
+        assert ([r["survivors"] for r in lost.rungs]
+                == [r["survivors"] for r in clean.rungs]), "remesh identity"
+        print("REMESH OK")
+    """)
