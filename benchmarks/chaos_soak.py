@@ -1,0 +1,566 @@
+"""Fault-injected chaos soak -> ``experiments/BENCH_chaos.json``.
+
+The PR-10 acceptance benchmark (DESIGN.md §11): the multi-tenant fleet
+replayed under the ragged/churn traffic of ``tests/traffic.py`` while the
+fault injector (``repro.serve.faults``) breaks it on purpose, one fault
+class per scenario plus a seeded combined soak:
+
+  * **scenario cells, one per fault class** — transient executor
+    exceptions (bounded retry + backoff), persistent exceptions (breaker
+    trip + graceful backend degrade), hangs and slow-starts (deadline
+    supervision abandons the stuck block and recomputes it), device loss
+    (re-plan onto survivors / unplaced fallback), and a corrupt deploy
+    candidate (rejected by the bit-identity smoke check mid-incident).
+    Every cell reports injected/detected counts, wrong answers vs the
+    ``predict_codes`` oracle (must be 0), lost accepted requests (must be
+    0), and the lane's recovery p99.
+  * **degraded-mode throughput floor** — the same trace replayed clean
+    vs through a trip-and-degrade incident; the degraded/clean rows-per-
+    second ratio must clear a hard floor.
+  * **stream failover, per backend** — a churned stream trace served
+    through ``stream/replica.py`` (sync ack replication + periodic
+    checkpoints); the primary is killed mid-trace and the standby must
+    recover every stream bit-identically from its last checkpoint plus
+    the replayed acked tail.  Zero acked steps lost, zero mismatches.
+  * **seeded combined soak** — a ``FaultPlan.seeded`` schedule sprinkled
+    over a longer trace: the whole supervision stack running at once,
+    still zero wrong / zero lost.
+
+Chaos is a *control-flow* benchmark: the nets are always the reduced
+configs (the fault seams and the supervision machinery are identical for
+the Table-II architectures) and CPU wall numbers are structural.  The
+gate in ``check_regression.py --suite chaos`` replays the contract and
+compares recovery/throughput cell-by-cell.
+
+    PYTHONPATH=src python -m benchmarks.chaos_soak [--fast] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+# tests/traffic.py is the shared trace generator (pure numpy, no package):
+# pytest sees it via rootdir, benchmarks via this explicit insert
+TESTS = os.path.join(os.path.dirname(__file__), "..", "tests")
+if TESTS not in sys.path:
+    sys.path.insert(0, TESTS)
+import traffic  # noqa: E402
+
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                           "BENCH_chaos.json")
+SCHEMA_VERSION = 1
+# the one definition of "smoke-sized" (CI perf-gate and run.py --fast)
+FAST_KW = dict(n_events=12, soak_events=30, stream_events=18, block=16,
+               stream_backends=("take",))
+# the nightly long soak: an order of magnitude more traffic under the
+# same seeded fault density, so slow-leak failure modes (retry storms,
+# checkpoint drift, quarantine livelock) have room to show up
+LONG_KW = dict(n_events=80, soak_events=400, stream_events=150, block=32)
+
+
+def write_results(results: dict, out: str = DEFAULT_OUT) -> str:
+    out = os.path.abspath(out)
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(results, f, indent=2)
+    return out
+
+
+def _make_nets(tasks, seed: int):
+    import jax
+
+    from repro import pipeline
+    from repro.configs import paper_tasks
+    from repro.core import assemble
+
+    nets = {}
+    for i, task in enumerate(tasks):
+        cfg = paper_tasks.reduced(task)
+        params = assemble.init(jax.random.PRNGKey(seed + i), cfg)
+        nets[task] = pipeline.compile_network(params, cfg)
+    # warm the lookup paths outside the timed/deadline-supervised replays
+    # so first-dispatch jit compiles never masquerade as incidents
+    for net in nets.values():
+        x = np.zeros((4, net.cfg.in_features), np.float32)
+        for be in ("take", "onehot"):
+            net.predict_codes(x, backend=be)
+    return nets
+
+
+# ---------------------------------------------------------------------------
+# faulted ragged replay (the scenario harness)
+
+def _faulted_replay(nets, inj, policy, *, n_events, block, seed,
+                    backends=None, placements=None, at_event=None):
+    """Replay one ragged trace through a fresh fleet with the given
+    injector; returns ``(fleet, per_tenant_summaries, counters)``.
+
+    ``at_event`` maps an event index to a callable run just before that
+    event's submit (deploys racing the incident).  Counters hold the two
+    hard contract numbers: ``wrong`` (served codes vs the
+    ``predict_codes`` oracle) and ``lost`` (accepted requests that never
+    completed)."""
+    from repro.serve import LUTFleet
+    from repro.serve.registry import make_reference
+
+    fleet = LUTFleet(block=block, faults=inj, policy=policy)
+    feats = {}
+    for t, net in nets.items():
+        fleet.register(t, net, reference=make_reference(net, n=16),
+                       backend=(backends or {}).get(t),
+                       placement=(placements or {}).get(t))
+        feats[t] = net.cfg.in_features
+    trace = traffic.ragged_trace(list(nets), n_events=n_events, seed=seed)
+    inputs = traffic.make_inputs(trace, feats, seed=seed + 1)
+    acked = []
+    t0 = time.perf_counter()
+    for i, (ev, xs) in enumerate(zip(trace, inputs)):
+        if at_event and i in at_event:
+            at_event[i](fleet)
+        reqs, _ = fleet.submit_many(ev.model_id, xs)
+        if reqs:
+            acked.append((ev.model_id, reqs))
+        fleet.tick()
+        for _ in range(ev.gap_ticks):
+            fleet.tick()
+    fleet.pump()
+    elapsed = time.perf_counter() - t0
+
+    wrong = lost = accepted = 0
+    for mid, reqs in acked:
+        accepted += len(reqs)
+        lost += sum(1 for r in reqs if not r.done)
+        done = [r for r in reqs if r.done]
+        if done:
+            ref = np.asarray(nets[mid].predict_codes(
+                np.stack([r.x for r in done])))
+            got = np.stack([np.asarray(r.codes) for r in done])
+            wrong += int((got != ref).any(axis=-1).sum())
+    summaries = {t: fleet.summary(t) for t in nets}
+    counters = {"accepted": accepted, "wrong": wrong, "lost": lost,
+                "elapsed_s": round(elapsed, 4)}
+    return fleet, summaries, counters
+
+
+def _cell(name, kind, inj, summaries, counters, scope, *,
+          detected, recovered, extra=None):
+    s = summaries[scope]
+    out = {
+        "name": name, "kind": kind, "scope": scope,
+        "injected": inj.fired(kind),
+        "detected": int(detected),
+        "recovered": bool(recovered),
+        "wrong": counters["wrong"], "lost": counters["lost"],
+        "accepted": counters["accepted"],
+        "completed": sum(x["completed"] for x in summaries.values()),
+        "shed": sum(x["shed"] for x in summaries.values()),
+        "deferred": sum(x["deferred"] for x in summaries.values()),
+        "failures": s["failures"], "deadline_hits": s["deadline_hits"],
+        "retries": s["retries"], "breaker_trips": s["breaker_trips"],
+        "degrades": s["degrades"],
+        "recovery_p99_ms": s["recovery_p99_ms"],
+        "elapsed_s": counters["elapsed_s"],
+    }
+    out.update(extra or {})
+    return out
+
+
+def _run_scenarios(nets, *, n_events, block, seed) -> dict:
+    from repro.launch.mesh import make_serving_mesh
+    from repro import backends as lut_backends
+    from repro.serve import FaultInjector, FaultPlan, FaultSpec
+    from repro.serve.registry import make_reference
+    from repro.serve.supervision import ResiliencePolicy
+
+    tenants = list(nets)
+    t0_scope = tenants[0]
+    cells = {}
+
+    # 1. transient executor exceptions: retry + backoff absorbs them, the
+    #    breaker never trips
+    inj = FaultInjector(FaultPlan(
+        [FaultSpec("exception", at=1, scope=t0_scope, count=2)]))
+    policy = ResiliencePolicy(backoff_base_s=0.0, breaker_threshold=3)
+    _, summ, ctr = _faulted_replay(nets, inj, policy, n_events=n_events,
+                                   block=block, seed=seed)
+    s = summ[t0_scope]
+    cells["exception_transient"] = _cell(
+        "exception_transient", "exception", inj, summ, ctr, t0_scope,
+        detected=s["failures"],
+        recovered=s["incidents_recovered"] >= 1 and s["breaker_trips"] == 0
+        and ctr["lost"] == 0)
+
+    # 2. persistent exceptions: breaker trips and the lane degrades from
+    #    the fused-class backend onto the fallback, bit-identically
+    inj = FaultInjector(FaultPlan(
+        [FaultSpec("exception", at=0, scope=t0_scope, count=3)]))
+    _, summ, ctr = _faulted_replay(nets, inj, policy, n_events=n_events,
+                                   block=block, seed=seed,
+                                   backends={t0_scope: "onehot"})
+    s = summ[t0_scope]
+    cells["breaker_degrade"] = _cell(
+        "breaker_degrade", "exception", inj, summ, ctr, t0_scope,
+        detected=s["failures"],
+        recovered=s["degrades"] >= 1 and ctr["lost"] == 0,
+        extra={"degrade_history": s["degrade_history"]})
+
+    # 3. executor hang: the deadline abandons the stuck block and the
+    #    rows recompute (fault-clock skew, no real sleeping)
+    deadline = ResiliencePolicy(deadline_s=0.5, backoff_base_s=0.0,
+                                breaker_threshold=3)
+    inj = FaultInjector(FaultPlan(
+        [FaultSpec("hang", at=1, scope=t0_scope, stall_s=2.0)]))
+    _, summ, ctr = _faulted_replay(nets, inj, deadline, n_events=n_events,
+                                   block=block, seed=seed)
+    s = summ[t0_scope]
+    cells["hang_deadline"] = _cell(
+        "hang_deadline", "hang", inj, summ, ctr, t0_scope,
+        detected=s["deadline_hits"],
+        recovered=s["deadline_hits"] >= 1 and ctr["lost"] == 0)
+
+    # 4. slow-start stall on the lane-dispatch seam: same deadline
+    #    mechanics, different seam
+    inj = FaultInjector(FaultPlan(
+        [FaultSpec("slow_start", at=0, scope=t0_scope, stall_s=2.0)]))
+    _, summ, ctr = _faulted_replay(nets, inj, deadline, n_events=n_events,
+                                   block=block, seed=seed)
+    s = summ[t0_scope]
+    cells["slow_start"] = _cell(
+        "slow_start", "slow_start", inj, summ, ctr, t0_scope,
+        detected=s["deadline_hits"],
+        recovered=s["deadline_hits"] >= 1 and ctr["lost"] == 0)
+
+    # 5. device loss on a placed lane: the executor's device dies for
+    #    good; the lane re-plans off the dead placement (sole-device mesh
+    #    -> unplaced fallback; the N-way remesh is covered in
+    #    tests/test_faults.py where subprocess device counts are cheap)
+    inj = FaultInjector(FaultPlan(
+        [FaultSpec("device_loss", at=1, scope=t0_scope)]))
+    pl = lut_backends.Placement(make_serving_mesh(1))
+    _, summ, ctr = _faulted_replay(nets, inj, policy, n_events=n_events,
+                                   block=block, seed=seed,
+                                   placements={t0_scope: pl})
+    s = summ[t0_scope]
+    cells["device_loss"] = _cell(
+        "device_loss", "device_loss", inj, summ, ctr, t0_scope,
+        detected=s["failures"],
+        recovered=s["degrades"] >= 1 and ctr["lost"] == 0,
+        extra={"degrade_history": s["degrade_history"]})
+
+    # 6. corrupt deploy candidate racing the recovery: the injector flips
+    #    table bits in the freshly loaded artifact; the smoke check must
+    #    reject it and the incumbent must keep serving
+    inj = FaultInjector(FaultPlan([
+        FaultSpec("exception", at=0, scope=t0_scope, count=3),
+        FaultSpec("corrupt_artifact", at=0, scope=t0_scope),
+    ]))
+    events = {}
+
+    def _deploy(fleet, _events=events):
+        net = nets[t0_scope]
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, "v2.npz")
+            net.save(path)
+            _events["swap"] = fleet.deploy(
+                t0_scope, path, reference=make_reference(net, n=16))
+
+    _, summ, ctr = _faulted_replay(
+        nets, inj, policy, n_events=n_events, block=block, seed=seed,
+        backends={t0_scope: "onehot"},
+        at_event={max(1, n_events // 2): _deploy})
+    s = summ[t0_scope]
+    swap = events.get("swap")
+    rejected = swap is not None and not swap.ok
+    cells["corrupt_artifact"] = _cell(
+        "corrupt_artifact", "corrupt_artifact", inj, summ, ctr, t0_scope,
+        detected=1 if rejected else 0,
+        recovered=rejected and s["version"] == 1 and ctr["lost"] == 0,
+        extra={"deploy_rejected": rejected,
+               "deploy_reason": swap.reason if swap else "deploy not run",
+               "serving_version": s["version"]})
+    return cells
+
+
+def _degraded_throughput(nets, *, n_events, block, seed) -> dict:
+    """Same trace clean vs through a trip-and-degrade incident; the
+    degraded/clean rows-per-second ratio is the throughput floor."""
+    from repro.serve import FaultInjector, FaultPlan, FaultSpec
+    from repro.serve.supervision import ResiliencePolicy
+
+    t0_scope = list(nets)[0]
+    policy = ResiliencePolicy(backoff_base_s=0.0, breaker_threshold=3)
+    _, summ, ctr = _faulted_replay(
+        nets, None, policy, n_events=n_events, block=block, seed=seed,
+        backends={t0_scope: "onehot"})
+    clean_rows = sum(s["completed"] for s in summ.values())
+    clean = clean_rows / max(ctr["elapsed_s"], 1e-9)
+
+    inj = FaultInjector(FaultPlan(
+        [FaultSpec("exception", at=0, scope=t0_scope, count=3)]))
+    _, summ, ctr = _faulted_replay(
+        nets, inj, policy, n_events=n_events, block=block, seed=seed,
+        backends={t0_scope: "onehot"})
+    deg_rows = sum(s["completed"] for s in summ.values())
+    degraded = deg_rows / max(ctr["elapsed_s"], 1e-9)
+    return {
+        "clean_rows_per_s": round(clean, 1),
+        "degraded_rows_per_s": round(degraded, 1),
+        "throughput_ratio": round(degraded / max(clean, 1e-9), 4),
+        "floor": 0.05,
+        "wrong": ctr["wrong"], "lost": ctr["lost"],
+        "degrades": summ[t0_scope]["degrades"],
+    }
+
+
+# ---------------------------------------------------------------------------
+# stream failover under churn
+
+def _stream_failover(comp, backend, *, n_events, block, seed,
+                     checkpoint_every=8) -> dict:
+    """Churned stream traffic through the replicated tenant; the primary
+    dies mid-trace with blocks in flight, the standby takes over, and the
+    remaining trace replays on the recovered fleet.  Every stream's
+    combined (primary-delivered + standby-recomputed) codes must match
+    the uninterrupted ``predict_sequence`` scan."""
+    from repro.serve import LUTFleet
+    from repro.stream.replica import ReplicatedStreamTenant, StandbyReplica
+
+    trace = traffic.stream_churn_trace(["cell"], n_events=n_events,
+                                       seed=seed)
+    inputs = traffic.make_stream_inputs(trace, {"cell": comp.cell.n_in},
+                                        seed=seed + 1)
+    seqs = traffic.stream_sequences(trace, inputs)
+    kill = max(2, (2 * len(trace)) // 3)
+
+    primary = LUTFleet(block=block)
+    primary.register("cell", comp, block=block, backend=backend)
+    standby = StandbyReplica("cell", comp, block=block, backend=backend)
+    tenant = ReplicatedStreamTenant(primary, "cell", standby,
+                                    checkpoint_every=checkpoint_every)
+    for ev, x in zip(trace[:kill], inputs[:kill]):
+        if ev.action == "open":
+            tenant.open_stream(ev.stream_id)
+        elif ev.action == "feed":
+            tenant.submit(ev.stream_id, x)
+        else:
+            tenant.close_stream(ev.stream_id)
+        for _ in range(1 + ev.gap_ticks):
+            primary.tick()
+        tenant.maybe_checkpoint()
+    primary.tick()      # partial progress past the checkpoint, then DEATH
+    lane1 = primary._stream_lane("cell")
+    pre = {sid: [np.asarray(r.codes) for r in s.steps]
+           for sid, s in lane1.sessions.items()}
+    ckpt = standby.checkpoint
+
+    t0 = time.perf_counter()
+    fleet2, replayed = standby.activate()
+    fleet2.pump()       # the acked tail recomputes here
+    recovery_ms = (time.perf_counter() - t0) * 1e3
+
+    for ev, x in zip(trace[kill:], inputs[kill:]):
+        if ev.action == "open":
+            fleet2.open_stream("cell", ev.stream_id)
+        elif ev.action == "feed":
+            fleet2.submit_stream("cell", ev.stream_id, x)
+        else:
+            fleet2.close_stream("cell", ev.stream_id)
+        for _ in range(1 + ev.gap_ticks):
+            fleet2.tick()
+    fleet2.pump()
+
+    lane2 = fleet2._stream_lane("cell")
+    mismatched = lost = steps = 0
+    for (_, sid), xs_full in seqs.items():
+        ref = np.asarray(comp.predict_sequence(xs_full[None],
+                                               backend=backend)[0])[0]
+        if sid in lane2.sessions:
+            applied = (ckpt.applied_for(sid)
+                       if ckpt is not None and sid in ckpt.stream_ids
+                       else 0)
+            combined = (pre.get(sid, [])[:applied]
+                        + [np.asarray(r.codes)
+                           for r in lane2.sessions[sid].steps])
+        else:
+            # never restored: the primary finalized it before dying
+            combined = pre.get(sid, [])
+        lost += max(0, len(ref) - len(combined))
+        ok = (len(combined) == len(ref)
+              and all(np.array_equal(c, ref[t])
+                      for t, c in enumerate(combined)))
+        mismatched += 0 if ok else 1
+        steps += len(ref)
+    return {
+        "backend": backend,
+        "events": len(trace), "killed_at_event": kill,
+        "streams": len(seqs), "steps": steps,
+        "checkpoints_shipped": standby.checkpoints_received,
+        "replayed_steps": int(sum(replayed.values())),
+        "restored_streams": len(replayed),
+        "recovery_ms": round(recovery_ms, 3),
+        "mismatched_streams": mismatched,
+        "lost_steps": lost,
+    }
+
+
+def _make_cell(seed: int):
+    from benchmarks import stream_serving
+    return stream_serving._make_cell(seed, False)[3]
+
+
+# ---------------------------------------------------------------------------
+# seeded combined soak
+
+def _soak(nets, *, n_events, block, seed) -> dict:
+    from repro.serve import FaultInjector, FaultPlan
+    from repro.serve.supervision import ResiliencePolicy
+
+    plan = FaultPlan.seeded(seed, scopes=tuple(nets),
+                            kinds=("exception", "hang", "slow_start"),
+                            n_faults=12, max_at=80, stall_s=1.0)
+    inj = FaultInjector(plan)
+    # soft breaker: targeted scenarios already exercise trip/degrade, the
+    # soak measures the whole stack absorbing a mixed schedule — onehot
+    # lanes keep one degrade level in reserve should a trip still happen
+    policy = ResiliencePolicy(deadline_s=0.5, max_retries=10,
+                              backoff_base_s=0.0, breaker_threshold=10)
+    _, summ, ctr = _faulted_replay(
+        nets, inj, policy, n_events=n_events, block=block, seed=seed,
+        backends={t: "onehot" for t in nets})
+    return {
+        "events": n_events,
+        "faults_planned": len(plan.specs),
+        "injected": {k: inj.fired(k)
+                     for k in ("exception", "hang", "slow_start")},
+        "accepted": ctr["accepted"],
+        "completed": sum(s["completed"] for s in summ.values()),
+        "wrong": ctr["wrong"], "lost": ctr["lost"],
+        "detected": {
+            "failures": sum(s["failures"] for s in summ.values()),
+            "deadline_hits": sum(s["deadline_hits"] for s in summ.values()),
+            "retries": sum(s["retries"] for s in summ.values()),
+            "breaker_trips": sum(s["breaker_trips"] for s in summ.values()),
+            "degrades": sum(s["degrades"] for s in summ.values()),
+        },
+        "recovery_p99_ms": max(s["recovery_p99_ms"] for s in summ.values()),
+        "elapsed_s": ctr["elapsed_s"],
+    }
+
+
+# ---------------------------------------------------------------------------
+
+def sweep(tasks=("nid", "jsc"), *, n_events: int = 36,
+          soak_events: int = 120, stream_events: int = 60,
+          block: int = 32, seed: int = 0,
+          stream_backends=("take", "fused")) -> dict:
+    nets = _make_nets(tasks, seed)
+    results = {
+        "schema_version": SCHEMA_VERSION,
+        "generated_unix": time.time(),
+        "params": {"tasks": list(tasks), "n_events": n_events,
+                   "soak_events": soak_events,
+                   "stream_events": stream_events, "block": block,
+                   "seed": seed,
+                   "stream_backends": list(stream_backends)},
+        "scenarios": _run_scenarios(nets, n_events=n_events, block=block,
+                                    seed=seed),
+        "degraded": _degraded_throughput(nets, n_events=n_events,
+                                         block=block, seed=seed),
+    }
+    comp = _make_cell(seed)
+    results["stream_failover"] = {
+        be: _stream_failover(comp, be, n_events=stream_events, block=block,
+                             seed=seed)
+        for be in stream_backends}
+    results["soak"] = _soak(nets, n_events=soak_events, block=block,
+                            seed=seed)
+    return results
+
+
+def contract_violations(results: dict) -> list:
+    """The chaos serving contract, shared with check_regression."""
+    bad = []
+    for name, sc in results["scenarios"].items():
+        if sc["wrong"]:
+            bad.append(f"{name}: {sc['wrong']} wrong answers")
+        if sc["lost"]:
+            bad.append(f"{name}: {sc['lost']} accepted requests lost")
+        if sc["injected"] == 0:
+            bad.append(f"{name}: fault never injected")
+        elif sc["detected"] == 0:
+            bad.append(f"{name}: fault injected but never detected")
+        if not sc["recovered"]:
+            bad.append(f"{name}: lane did not recover")
+    d = results["degraded"]
+    if d["wrong"] or d["lost"]:
+        bad.append(f"degraded: {d['wrong']} wrong / {d['lost']} lost")
+    if d["throughput_ratio"] < d["floor"]:
+        bad.append(f"degraded throughput ratio {d['throughput_ratio']} "
+                   f"below the {d['floor']} floor")
+    for be, r in results["stream_failover"].items():
+        if r["checkpoints_shipped"] < 1:
+            bad.append(f"stream_failover[{be}]: no checkpoint ever shipped")
+        if r["mismatched_streams"]:
+            bad.append(f"stream_failover[{be}]: {r['mismatched_streams']} "
+                       "streams not bit-identical after failover")
+        if r["lost_steps"]:
+            bad.append(f"stream_failover[{be}]: {r['lost_steps']} acked "
+                       "steps lost")
+    s = results["soak"]
+    if s["wrong"] or s["lost"]:
+        bad.append(f"soak: {s['wrong']} wrong / {s['lost']} lost")
+    if (sum(s["injected"].values())
+            and not (s["detected"]["failures"]
+                     + s["detected"]["deadline_hits"])):
+        bad.append("soak: faults injected but none detected")
+    return bad
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--long", action="store_true",
+                    help="nightly long-soak plan (10x the traffic)")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args()
+    if args.fast and args.long:
+        raise SystemExit("--fast and --long are mutually exclusive")
+
+    kw = FAST_KW if args.fast else LONG_KW if args.long else {}
+    results = sweep(**kw)
+    out = write_results(results, args.out)
+
+    print("scenario,kind,injected,detected,recovered,wrong,lost,"
+          "recovery_p99_ms")
+    for name, sc in results["scenarios"].items():
+        print(f"{name},{sc['kind']},{sc['injected']},{sc['detected']},"
+              f"{sc['recovered']},{sc['wrong']},{sc['lost']},"
+              f"{sc['recovery_p99_ms']}")
+    d = results["degraded"]
+    print(f"degraded throughput ratio {d['throughput_ratio']} "
+          f"({d['degraded_rows_per_s']} vs {d['clean_rows_per_s']} rows/s)")
+    for be, r in results["stream_failover"].items():
+        print(f"stream_failover[{be}]: {r['streams']} streams / "
+              f"{r['steps']} steps, {r['replayed_steps']} replayed, "
+              f"recovery {r['recovery_ms']}ms, "
+              f"{r['mismatched_streams']} mismatched, "
+              f"{r['lost_steps']} lost")
+    s = results["soak"]
+    print(f"soak: {sum(s['injected'].values())} faults over {s['events']} "
+          f"events, {s['wrong']} wrong, {s['lost']} lost")
+
+    bad = contract_violations(results)
+    if bad:
+        raise SystemExit("chaos serving contract violated:\n  "
+                         + "\n  ".join(bad))
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

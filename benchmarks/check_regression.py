@@ -31,6 +31,15 @@ its own metric extraction, baseline file, tolerance, and comparison mode:
     bit-identity on every backend, zero dropped steps, stateful hot swaps
     with zero wrong answers and the recorded migration mode).  Runs in
     the CI ``perf-gate`` job alongside ``throughput`` and ``fleet``.
+  * ``chaos`` — fault-injected serving cells from ``BENCH_chaos.json``
+    vs ``experiments/CHAOS_baseline.json``; RELATIVE tolerance (default
+    ±50%: recovery timings ride retry/abandon scheduling, the wobbliest
+    cells we gate), plus the chaos contract as hard violations (zero
+    wrong answers, zero lost accepted requests/acked steps, every
+    injected fault class detected and recovered, corrupt deploys
+    rejected, stream failover bit-identical, the degraded-mode
+    throughput floor).  Runs in the CI ``perf-gate`` job alongside
+    ``fleet`` and ``stream``.
   * ``search`` — the distributed-search section of
     ``BENCH_assembly_search.json`` (written by ``assembly_search
     --dist-compare``) vs ``experiments/SEARCH_baseline.json``: frontier
@@ -59,7 +68,7 @@ tracks the tip of the default branch (and the runner generation CI
 actually uses).
 
     PYTHONPATH=src python -m benchmarks.check_regression
-        [--suite throughput|accuracy|fleet|stream|all] [--refresh]
+        [--suite throughput|accuracy|fleet|stream|chaos|all] [--refresh]
         [--tolerance T] [--baseline PATH]
 """
 from __future__ import annotations
@@ -78,6 +87,7 @@ ACC_BASELINE = os.path.join(EXPERIMENTS, "ACC_baseline.json")
 FLEET_BASELINE = os.path.join(EXPERIMENTS, "FLEET_baseline.json")
 STREAM_BASELINE = os.path.join(EXPERIMENTS, "STREAM_baseline.json")
 SEARCH_BASELINE = os.path.join(EXPERIMENTS, "SEARCH_baseline.json")
+CHAOS_BASELINE = os.path.join(EXPERIMENTS, "CHAOS_baseline.json")
 SCHEMA_VERSION = 1
 
 Metrics = Dict[str, Tuple[float, bool]]  # name -> (value, higher_is_better)
@@ -270,6 +280,46 @@ def extract_stream(experiments: str = EXPERIMENTS
     return metrics, stream_serving.contract_violations(doc)
 
 
+def extract_chaos(experiments: str = EXPERIMENTS
+                  ) -> Tuple[Metrics, List[str]]:
+    """Flatten the chaos soak -> (metrics, violations).
+
+    Per fault-class scenario: the recovery p99 (lower is better — a
+    supervision change that doubles time-to-recover must fail CI even
+    when nothing is dropped).  One degraded-mode throughput ratio and
+    per-backend failover recovery times round out the metrics.  The
+    chaos CONTRACT (zero wrong / zero lost / detected + recovered /
+    failover bit-identity) is delegated to
+    ``chaos_soak.contract_violations`` so the benchmark's own exit gate
+    and this suite can never disagree.
+    """
+    from benchmarks import chaos_soak
+
+    # retry-only recoveries complete in single-digit milliseconds, where
+    # run-to-run scheduler noise dwarfs any real change; clamping to this
+    # floor gates only recoveries long enough to carry signal (degrades,
+    # failovers) while sub-floor cells all read as "instant"
+    floor_ms = 25.0
+
+    metrics: Metrics = {}
+    doc = _load(os.path.join(experiments, "BENCH_chaos.json"))
+    for name, sc in doc["scenarios"].items():
+        if sc["recovery_p99_ms"] > 0:
+            metrics[f"chaos/{name}/recovery_p99_ms"] = (
+                max(sc["recovery_p99_ms"], floor_ms), False)
+    metrics["chaos/degraded/throughput_ratio"] = (
+        doc["degraded"]["throughput_ratio"], True)
+    for be, r in doc["stream_failover"].items():
+        metrics[f"chaos/failover/{be}/recovery_ms"] = (
+            max(r["recovery_ms"], floor_ms), False)
+        metrics[f"chaos/failover/{be}/replayed_steps"] = (
+            float(r["replayed_steps"]), True)
+    if doc["soak"]["recovery_p99_ms"] > 0:
+        metrics["chaos/soak/recovery_p99_ms"] = (
+            max(doc["soak"]["recovery_p99_ms"], floor_ms), False)
+    return metrics, chaos_soak.contract_violations(doc)
+
+
 def extract_search(experiments: str = EXPERIMENTS
                    ) -> Tuple[Metrics, List[str]]:
     """Flatten the distributed-search comparison -> (metrics, violations).
@@ -346,6 +396,10 @@ SUITES: Dict[str, Suite] = {
     # wall-clock ratios on a shared CI runner wobble like the fleet cells
     "search": Suite("search", extract_search, SEARCH_BASELINE,
                     tolerance=0.35, mode="relative"),
+    # widest of all: recovery timings ride retry/abandon scheduling — the
+    # contract (zero wrong / zero lost) is hard regardless of tolerance
+    "chaos": Suite("chaos", extract_chaos, CHAOS_BASELINE,
+                   tolerance=0.50, mode="relative"),
 }
 
 

@@ -144,6 +144,19 @@ def bench_stream(rows: list, fast: bool) -> None:
                  f"p99 {peak['p99_step_us']}us"))
 
 
+def bench_chaos(rows: list, fast: bool) -> None:
+    """Fault-injected chaos soak (writes BENCH_chaos.json)."""
+    from benchmarks import chaos_soak
+    t0 = time.time()
+    res = chaos_soak.sweep(**(chaos_soak.FAST_KW if fast else {}))
+    chaos_soak.write_results(res)
+    worst = max(res["scenarios"].values(),
+                key=lambda sc: sc["recovery_p99_ms"])
+    rows.append(("chaos_soak", (time.time() - t0) * 1e6,
+                 f"{len(res['scenarios'])} fault classes, worst recovery "
+                 f"p99 {worst['recovery_p99_ms']}ms ({worst['name']})"))
+
+
 def bench_tables(rows: list, fast: bool) -> dict:
     from benchmarks import paper_tables
 
@@ -184,7 +197,8 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--only", default=None,
                     choices=["kernels", "backends", "throughput", "tables",
-                             "roofline", "search", "fleet", "stream"])
+                             "roofline", "search", "fleet", "stream",
+                             "chaos"])
     args = ap.parse_args()
 
     rows: list = []
@@ -201,6 +215,8 @@ def main() -> None:
         bench_fleet(rows, args.fast)
     if args.only in (None, "stream"):
         bench_stream(rows, args.fast)
+    if args.only in (None, "chaos"):
+        bench_chaos(rows, args.fast)
     if args.only in (None, "tables"):
         outputs.update(bench_tables(rows, args.fast))
     if args.only in (None, "roofline"):

@@ -55,6 +55,29 @@ def plan_search_remesh(old_devices: int, new_devices: int, *,
                       new_devices=new_devices)
 
 
+def plan_serving_remesh(old_devices: int, new_devices: int, *,
+                        tenants: int = 1) -> RemeshPlan:
+    """Go/no-go for re-planning a serving lane's placement after a device
+    of its mesh is lost (``serve/fleet.py`` graceful degradation).
+
+    Serving placements are batch-sharded ``shard_map`` calls over
+    replicated LUT tables — a block is split across the mesh's data axis
+    and every device holds the full artifact, so there is no cross-device
+    state to respace.  The structural requirement is one surviving
+    device; the verdict records the shrink so the fleet's DegradeEvent
+    can log it.  ``tenants`` is the number of lanes sharing the mesh
+    (event-log context, like ``population`` above)."""
+    if new_devices < 1:
+        return RemeshPlan(ok=False, old_devices=old_devices,
+                          new_devices=new_devices,
+                          reason=(f"no surviving devices to host "
+                                  f"{tenants} serving lane(s)"))
+    return RemeshPlan(
+        ok=True, old_devices=old_devices, new_devices=new_devices,
+        reason=(f"resharding batch axis over {new_devices} of "
+                f"{old_devices} devices"))
+
+
 def plan_remesh(cfg, old_shape: Tuple[int, ...], new_shape: Tuple[int, ...],
                 *, hbm_budget: int = HBM_STATE_BUDGET) -> RemeshPlan:
     """Validate resuming ``cfg`` from mesh ``old_shape`` on ``new_shape``.

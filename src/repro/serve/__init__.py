@@ -3,18 +3,29 @@
 ``engine``/``sampling`` serve the LM substrate; ``lut_engine`` micro-batches
 one folded LUT artifact; the fleet tier (``fleet``/``registry``/
 ``admission``, DESIGN.md §9) operates MANY artifacts in one process with
-smoke-checked hot swaps, an LRU executor cache, and per-tenant SLOs.
+smoke-checked hot swaps, an LRU executor cache, and per-tenant SLOs; the
+resilience layer (``faults``/``supervision``, DESIGN.md §11) adds
+deterministic fault injection, per-request deadlines, per-lane circuit
+breakers, and graceful backend×placement degradation.
 """
 from repro.serve.admission import (AdmissionController, AdmissionDecision,
                                    TenantSLO)
+from repro.serve.faults import (DeviceLost, DrainTimeout, ExecutorFault,
+                                FaultClock, FaultInjector, FaultPlan,
+                                FaultSpec, InjectedFault)
 from repro.serve.fleet import FleetStats, LUTFleet
 from repro.serve.registry import (ExecutorCache, Reference, SwapEvent,
                                   TenantRegistry, make_reference,
                                   smoke_check)
+from repro.serve.supervision import (CircuitBreaker, DegradeEvent,
+                                     FailureEvent, ResiliencePolicy)
 
 __all__ = [
     "AdmissionController", "AdmissionDecision", "TenantSLO",
     "FleetStats", "LUTFleet",
     "ExecutorCache", "Reference", "SwapEvent", "TenantRegistry",
     "make_reference", "smoke_check",
+    "DeviceLost", "DrainTimeout", "ExecutorFault", "FaultClock",
+    "FaultInjector", "FaultPlan", "FaultSpec", "InjectedFault",
+    "CircuitBreaker", "DegradeEvent", "FailureEvent", "ResiliencePolicy",
 ]

@@ -60,7 +60,7 @@ class AdmissionDecision:
     accept: int
     shed: int
     defer: int
-    reason: str                  # "ok" | "p99" | "queue"
+    reason: str                  # "ok" | "p99" | "queue" | "quarantined"
 
     @property
     def admitted_all(self) -> bool:
@@ -97,6 +97,23 @@ class AdmissionController:
         if slo.policy == "defer":
             return AdmissionDecision(accept, 0, over, reason)
         return AdmissionDecision(accept, over, 0, reason)
+
+    def quarantine(self, *, n: int, slo: Optional[TenantSLO]
+                   ) -> AdmissionDecision:
+        """The circuit-breaker door (DESIGN.md §11): while a tenant's lane
+        breaker is OPEN, *all* new arrivals are rejected through the same
+        shed/defer machinery the SLO budgets use — a ``"defer"`` tenant's
+        rows park in the deferred queue and drain once the lane recovers,
+        a ``"shed"`` (or SLO-less) tenant's rows are refused at the door.
+        Accepting zero rows is the point: queueing onto a lane that is
+        known-broken only manufactures timed-out requests."""
+        if n < 0:
+            raise ValueError(f"n must be >= 0, got {n}")
+        if n == 0:
+            return AdmissionDecision(0, 0, 0, "quarantined")
+        if slo is not None and slo.policy == "defer":
+            return AdmissionDecision(0, 0, n, "quarantined")
+        return AdmissionDecision(0, n, 0, "quarantined")
 
     def may_drain_deferred(self, *, queue_depth: int, p99_us: float,
                            slo: Optional[TenantSLO]) -> int:

@@ -37,6 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.pipeline import CompiledLUTNetwork
+from repro.serve.faults import DrainTimeout
 
 
 @dataclasses.dataclass
@@ -46,6 +47,9 @@ class LUTRequest:
     codes: Optional[np.ndarray] = None  # [n_out] int32 result
     logits: Optional[np.ndarray] = None
     done: bool = False
+    # dispatch attempts that failed or were abandoned; the fleet's
+    # supervision caps this at ResiliencePolicy.max_retries
+    attempts: int = 0
     # wall-clock submission time, stamped by callers that track end-to-end
     # request latency (the fleet tier); 0.0 = unstamped
     t_submit: float = 0.0
@@ -103,7 +107,8 @@ class LUTEngine:
 
     def __init__(self, net: CompiledLUTNetwork, *, block: int = 256,
                  backend: Optional[str] = None, mesh=None, depth: int = 1,
-                 executor=None, cell=None, placement=None):
+                 executor=None, cell=None, placement=None,
+                 faults=None, scope: Optional[str] = None):
         if depth < 1:
             raise ValueError(f"depth must be >= 1, got {depth}")
         self.net = net
@@ -112,7 +117,16 @@ class LUTEngine:
         self.queue: Deque[LUTRequest] = collections.deque()
         self.stats = LUTEngineStats()
         self._next_rid = 0
-        # (requests, codes, logits, next-state-or-None), oldest first
+        # fault seam (serve/faults.py): when an injector is configured the
+        # engine crosses its executor_call seam on every dispatch and reads
+        # ages off the injector's skewable clock; scope labels this engine
+        # (the tenant/model id under a fleet) for fault matching and
+        # DrainTimeout diagnostics
+        self._faults = faults
+        self._scope = scope
+        self._now = faults.clock.now if faults is not None else time.perf_counter
+        # (requests, codes, logits, next-state-or-None, t_dispatch),
+        # oldest first
         self._inflight: Deque[Tuple] = collections.deque()
         if mesh is not None and placement is not None:
             raise ValueError("pass either mesh= or placement=, not both")
@@ -137,6 +151,7 @@ class LUTEngine:
             self._zero_state = cell.cell.zero_state_code()
             self._executor = None
             self._fwd = None
+            self._fault_placement = placement
             return
         self._cell = None
         self._in_features = net.cfg.in_features
@@ -157,6 +172,7 @@ class LUTEngine:
                                                  placement=placement)
         self._backend = self._executor.backend
         self._fwd = self._executor.codes_and_logits
+        self._fault_placement = getattr(self._executor, "placement", None)
 
     @property
     def cell(self):
@@ -251,7 +267,15 @@ class LUTEngine:
     def dispatch_block(self) -> List[LUTRequest]:
         """Pad up to ``block`` queued requests and launch the cascade
         WITHOUT waiting for the result (JAX dispatch is async).  Returns
-        the dispatched requests ([] when the queue was empty)."""
+        the dispatched requests ([] when the queue was empty).
+
+        Exception-safe: if the executor (or an injected fault) raises, the
+        popped requests are requeued at the FRONT of the queue in their
+        original order before the exception propagates — no request is
+        lost, no in-flight slot is leaked, and a stream's
+        exactly-one-step-queued invariant (the router/fleet busy sets)
+        still holds, so the engine accepts new work after a poisoned
+        batch."""
         batch: List[LUTRequest] = []
         while self.queue and len(batch) < self._block:
             batch.append(self.queue.popleft())
@@ -261,19 +285,56 @@ class LUTEngine:
         # one C-level fill, not a per-row python loop: the dispatch path is
         # host-side work the async pipeline hides behind device compute
         xb[:len(batch)] = [req.x for req in batch]
+        # stamp BEFORE the fault seam: an injected hang skews the clock
+        # during dispatch, so the block's age already exceeds the stall
+        # when supervision first looks at it
+        t0 = self._now()
+        try:
+            if self._faults is not None:
+                self._faults.executor_call(scope=self._scope,
+                                           placement=self._fault_placement)
+            if self._cell is not None:
+                sb = np.full((self._block, self._n_state), self._zero_state,
+                             np.int32)
+                sb[:len(batch)] = [req.state for req in batch]
+                codes, logits, s_next = self._cell.step(
+                    xb, sb, backend=self._cell_backend,
+                    placement=self._cell_placement)
+            else:
+                codes, logits = self._fwd(jnp.asarray(xb))
+                s_next = None
+        except BaseException:
+            for req in batch:
+                req.attempts += 1
+            self.queue.extendleft(reversed(batch))
+            raise
+        self._inflight.append((batch, codes, logits, s_next, t0))
         self.stats.rows_padded += self._block - len(batch)
-        if self._cell is not None:
-            sb = np.full((self._block, self._n_state), self._zero_state,
-                         np.int32)
-            sb[:len(batch)] = [req.state for req in batch]
-            codes, logits, s_next = self._cell.step(
-                xb, sb, backend=self._cell_backend,
-                placement=self._cell_placement)
-            self._inflight.append((batch, codes, logits, s_next))
-        else:
-            codes, logits = self._fwd(jnp.asarray(xb))
-            self._inflight.append((batch, codes, logits, None))
         self.stats.ticks += 1
+        return batch
+
+    def oldest_age(self) -> float:
+        """Seconds since the oldest in-flight block was dispatched, on the
+        fault-injector clock when one is configured (0.0 when idle).  This
+        is what deadline supervision reads — an injected hang shows up
+        here without any real sleeping."""
+        if not self._inflight:
+            return 0.0
+        return self._now() - self._inflight[0][4]
+
+    def abandon_oldest(self) -> List[LUTRequest]:
+        """Give up on the oldest in-flight block WITHOUT waiting on the
+        device: requeue its requests at the front of the queue (original
+        order, attempts incremented) and return them.  The deadline path —
+        the device may still complete the abandoned computation, but its
+        results are dropped and the rows recomputed, which is safe because
+        every backend is bit-identical and requests are idempotent."""
+        if not self._inflight:
+            return []
+        batch = self._inflight.popleft()[0]
+        for req in batch:
+            req.attempts += 1
+        self.queue.extendleft(reversed(batch))
         return batch
 
     def retire_oldest(self) -> List[LUTRequest]:
@@ -281,7 +342,7 @@ class LUTEngine:
         the completed requests ([] when nothing is in flight)."""
         if not self._inflight:
             return []
-        batch, codes, logits, s_next = self._inflight.popleft()
+        batch, codes, logits, s_next, _t0 = self._inflight.popleft()
         codes_np, logits_np = np.asarray(codes), np.asarray(logits)
         # list(ndarray) materializes the row views in one C loop
         for req, c, lg in zip(batch, list(codes_np), list(logits_np)):
@@ -314,11 +375,32 @@ class LUTEngine:
                 (time.perf_counter() - t0) * 1e6)
         return completed
 
-    def drain(self) -> int:
+    def drain(self, timeout: Optional[float] = None) -> int:
         """Retire every in-flight block (the only place the engine blocks
-        on the device unconditionally)."""
+        on the device unconditionally).
+
+        ``timeout`` bounds the wait per block: before each blocking
+        retire, if the oldest in-flight block is already older than
+        ``timeout`` seconds (injector clock when faults are configured),
+        a diagnostic :class:`DrainTimeout` names the stuck scope and
+        block instead of blocking forever.  The check is age-based, so an
+        injected hang (clock skew) trips it immediately; a genuinely
+        wedged device call that has not yet exceeded the age can still
+        block once — Python offers no safe way to interrupt a foreign
+        blocking call, and the age check is the honest contract."""
         completed = 0
         while self._inflight:
+            if timeout is not None:
+                age = self.oldest_age()
+                if age > timeout:
+                    batch = self._inflight[0][0]
+                    scope = self._scope if self._scope is not None else "engine"
+                    raise DrainTimeout(
+                        f"drain timed out: oldest in-flight block on "
+                        f"{scope!r} ({len(batch)} requests, backend "
+                        f"{self._backend!r}) is {age:.3f}s old "
+                        f"(timeout {timeout:.3f}s)",
+                        scope=self._scope, requests=len(batch), age_s=age)
             completed += self._retire()
         return completed
 

@@ -244,11 +244,16 @@ def _load(source: ArtifactSource) -> CompiledLUTNetwork:
 class TenantRegistry:
     """model-id -> versioned artifact, with smoke-checked hot swaps."""
 
-    def __init__(self, cache: Optional[ExecutorCache] = None):
+    def __init__(self, cache: Optional[ExecutorCache] = None, *,
+                 faults=None):
         # explicit None test: an EMPTY ExecutorCache is falsy (__len__ == 0)
         # and `cache or ...` would silently discard the caller's budgets
         self.cache = cache if cache is not None else ExecutorCache()
         self._entries: Dict[str, TenantEntry] = {}
+        # fault seam (serve/faults.py): deploy candidates loaded from disk
+        # cross the injector's registry_load seam, which may corrupt the
+        # freshly parsed tables — the corruption the smoke check must catch
+        self._faults = faults
 
     # -- lookup --------------------------------------------------------------
     def __contains__(self, model_id: str) -> bool:
@@ -312,6 +317,12 @@ class TenantRegistry:
         t = time.time()
         try:
             net = _load(source)
+            if self._faults is not None and not isinstance(
+                    source, CompiledLUTNetwork):
+                # registry_load seam: only path-loaded candidates — the
+                # injector may corrupt the freshly parsed copy in place,
+                # never a caller-owned in-memory artifact
+                net = self._faults.registry_load(model_id, net)
             ok, reason, rows = smoke_check(net, reference)
         except Exception as exc:  # unreadable/incompatible artifact
             ok, reason, rows, net = False, f"load failed: {exc}", 0, None

@@ -7,6 +7,8 @@ recurrent cells (DESIGN.md §10).
   * :mod:`repro.stream.session` — per-stream persistent state (packed
     codes keyed by stream id) and the continuous-batching stream router
     over a cell-mode :class:`~repro.serve.lut_engine.LUTEngine`.
+  * :mod:`repro.stream.replica` — code-space checkpoint replication to a
+    standby engine and bit-identical stream failover (DESIGN.md §11).
 """
 from repro.stream.cell import (  # noqa: F401
     CompiledStreamCell,
@@ -17,5 +19,12 @@ from repro.stream.cell import (  # noqa: F401
     compile_cell,
     migrate_state_codes,
     state_migration_mode,
+)
+from repro.stream.replica import (  # noqa: F401
+    ReplicatedStreamTenant,
+    ReplicationLog,
+    StandbyReplica,
+    StreamCheckpoint,
+    checkpoint_streams,
 )
 from repro.stream.session import StreamSession, StreamStore  # noqa: F401

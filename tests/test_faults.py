@@ -1,0 +1,584 @@
+"""Resilience-tier acceptance contract (DESIGN.md §11).
+
+* deterministic fault injection: a seeded FaultPlan replays the same
+  failure schedule; scoped specs take precedence over scope-blind ones;
+  injected hangs are clock skew, never real sleeping;
+* exception safety: a poisoned dispatch requeues its batch in order
+  (engine queue intact, no leaked in-flight slot, stream busy sets
+  consistent) and the engine/router keeps serving afterwards;
+* bounded waits: engine.drain / fleet pump+tick accept ``timeout=`` and
+  raise a diagnostic DrainTimeout naming the stuck lane and block;
+* supervision: deadlines abandon+recompute blown blocks, transient
+  failures retry with backoff, persistent failures trip the per-lane
+  circuit breaker (arrivals quarantined through admission) and degrade
+  the lane onto a surviving backend x placement — device loss re-meshes
+  the survivors (4-way subprocess) or falls back to the layered backend;
+  every recovery is bit-identical to the artifact's reference codes;
+* stream failover: checkpoints + acked-tail replay recover every live
+  stream on a standby with exactly the codes an uninterrupted run
+  produces, and zero acknowledged steps are lost.
+"""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro import backends, pipeline
+from repro.configs import paper_tasks
+from repro.core import assemble
+from repro.core.assemble import AssembleConfig, LayerSpec
+from repro.launch.mesh import make_serving_mesh
+from repro.serve import (CircuitBreaker, DeviceLost, DrainTimeout,
+                         ExecutorFault, FaultClock, FaultInjector, FaultPlan,
+                         FaultSpec, LUTFleet, ResiliencePolicy, TenantSLO,
+                         make_reference)
+from repro.serve.lut_engine import LUTEngine
+from repro.stream import (StreamCellConfig, compile_cell)
+from repro.stream import cell as cm
+from repro.stream.replica import (ReplicatedStreamTenant, ReplicationLog,
+                                  StandbyReplica, StreamCheckpoint)
+from repro.stream.session import StreamRouter
+from test_sharded_backends import run_subprocess
+
+TASKS = ("nid", "jsc")
+
+
+@pytest.fixture(scope="module")
+def nets():
+    out = {}
+    for i, task in enumerate(TASKS):
+        cfg = paper_tasks.reduced(task)
+        params = assemble.init(jax.random.PRNGKey(i), cfg)
+        out[task] = pipeline.compile_network(params, cfg)
+    return out
+
+
+@pytest.fixture(scope="module")
+def cell():
+    cc = StreamCellConfig(
+        net=AssembleConfig(
+            in_features=6, input_bits=2, input_signed=False,
+            layers=(LayerSpec(12, 3, 2, False), LayerSpec(4, 3, 2, True)),
+            subnet_width=8, subnet_depth=2, skip_step=2),
+        n_in=4, n_state=2)
+    params = cm.init(jax.random.PRNGKey(0), cc)
+    return cc, params, compile_cell(params, cc)
+
+
+def _rows(net, n, seed):
+    rng = np.random.default_rng(seed)
+    return rng.uniform(-1.0, 1.0,
+                       (n, net.cfg.in_features)).astype(np.float32)
+
+
+def _seqs(n, t, n_in=4, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.uniform(0.0, 3.0, (n, t, n_in)).astype(np.float32)
+
+
+def _assert_codes(reqs, net, xs, msg=""):
+    assert all(r.done for r in reqs), msg
+    np.testing.assert_array_equal(
+        np.stack([r.codes for r in reqs]),
+        np.asarray(net.predict_codes(xs)), err_msg=msg)
+
+
+# ---------------------------------------------------------------------------
+# the harness itself: plans, clock, crossing counters
+# ---------------------------------------------------------------------------
+
+def test_fault_spec_validation_and_seam_mapping():
+    assert FaultSpec("exception").seam == "executor_call"
+    assert FaultSpec("hang").seam == "executor_call"
+    assert FaultSpec("device_loss").seam == "executor_call"
+    assert FaultSpec("slow_start").seam == "lane_dispatch"
+    assert FaultSpec("corrupt_artifact").seam == "registry_load"
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultSpec("segfault")
+    with pytest.raises(ValueError, match="at >= 0"):
+        FaultSpec("exception", at=-1)
+    with pytest.raises(ValueError, match="count >= 1"):
+        FaultSpec("exception", count=0)
+    with pytest.raises(ValueError, match="stall_s"):
+        FaultSpec("hang", stall_s=-0.1)
+
+
+def test_seeded_plan_is_deterministic():
+    a = FaultPlan.seeded(7, scopes=("m0", "m1"), n_faults=6)
+    b = FaultPlan.seeded(7, scopes=("m0", "m1"), n_faults=6)
+    assert a.specs == b.specs and len(a) == 6
+    assert a.specs != FaultPlan.seeded(8, scopes=("m0", "m1"),
+                                       n_faults=6).specs
+    assert all(s.seam in ("executor_call", "lane_dispatch")
+               for s in a.specs)
+    assert a.specs_for("registry_load") == ()
+    with pytest.raises(ValueError, match="at least one"):
+        FaultPlan.seeded(0, scopes=())
+
+
+def test_fault_clock_skews_without_sleeping():
+    import time
+    clock = FaultClock()
+    before = time.perf_counter()
+    clock.advance(5.0)
+    assert clock.skew == 5.0
+    assert clock.now() - before >= 5.0          # skew applied...
+    assert time.perf_counter() - before < 1.0   # ...without real sleeping
+    with pytest.raises(ValueError, match="only advances"):
+        clock.advance(-1.0)
+
+
+def test_injector_scoped_specs_take_precedence():
+    inj = FaultInjector(FaultPlan([
+        FaultSpec("exception", at=0, scope="a"),
+        FaultSpec("hang", at=1, scope=None, stall_s=2.0),
+    ]))
+    # crossing 0 by "a": both its scoped spec and the global counter's
+    # crossing 0 happen — the scoped exception wins
+    with pytest.raises(ExecutorFault, match="scope='a'"):
+        inj.executor_call(scope="a")
+    # crossing by "b" is global crossing 1: the hang fires as clock skew
+    inj.executor_call(scope="b")
+    assert inj.clock.skew == 2.0
+    assert [e.kind for e in inj.events] == ["exception", "hang"]
+    assert [e.scope for e in inj.events] == ["a", "b"]
+    assert inj.fired() == 2 and inj.fired("hang") == 1
+
+
+# ---------------------------------------------------------------------------
+# engine: exception-safe dispatch + bounded drain
+# ---------------------------------------------------------------------------
+
+def test_engine_dispatch_is_exception_safe(nets):
+    """A poisoned batch is requeued in order (attempts bumped), no
+    in-flight slot leaks, and the engine keeps serving afterwards."""
+    net = nets["jsc"]
+    inj = FaultInjector(FaultPlan([FaultSpec("exception", at=0)]))
+    eng = LUTEngine(net, block=8, faults=inj, scope="jsc")
+    reqs = eng.submit_many(_rows(net, 5, seed=1))
+    with pytest.raises(ExecutorFault):
+        eng.dispatch_block()
+    assert [r.rid for r in eng.queue] == [r.rid for r in reqs]  # in order
+    assert all(r.attempts == 1 for r in reqs)
+    assert eng.inflight == 0 and eng.stats.ticks == 0
+    # the engine accepts new work after the poisoned batch
+    more = eng.submit_many(_rows(net, 3, seed=2))
+    while eng.queue:
+        eng.tick()
+    eng.drain()
+    _assert_codes(reqs + more, net,
+                  np.stack([r.x for r in reqs + more]))
+
+
+def test_stream_router_not_wedged_by_poisoned_batch(cell):
+    """The busy-set invariant survives a dispatch exception: every stream
+    still completes every step, in order, bit-identically."""
+    _, _, comp = cell
+    inj = FaultInjector(FaultPlan([FaultSpec("exception", at=0)]))
+    eng = LUTEngine(comp.net, cell=comp, block=4, faults=inj, scope="cell")
+    router = StreamRouter(comp, engine=eng)
+    xs = _seqs(3, 5, seed=9)
+    sessions = [router.open(i) for i in range(3)]
+    for i in range(3):
+        router.feed(i, xs[i])
+    with pytest.raises(ExecutorFault):
+        router.tick()
+    router.pump()
+    ref, _, _ = comp.predict_sequence(xs)
+    for i, s in enumerate(sessions):
+        assert len(s.steps) == 5
+        np.testing.assert_array_equal(
+            np.stack([r.codes for r in s.steps]), np.asarray(ref[i]),
+            err_msg=f"stream {i}")
+
+
+def test_engine_drain_timeout_is_diagnostic(nets):
+    net = nets["jsc"]
+    inj = FaultInjector(FaultPlan([FaultSpec("hang", at=0, stall_s=5.0)]))
+    eng = LUTEngine(net, block=8, depth=2, faults=inj, scope="jsc")
+    reqs = eng.submit_many(_rows(net, 3, seed=3))
+    eng.dispatch_block()          # the injected hang skews the clock +5s
+    assert eng.oldest_age() >= 5.0
+    with pytest.raises(DrainTimeout, match=r"'jsc'.*3 requests") as ei:
+        eng.drain(timeout=1.0)
+    assert ei.value.scope == "jsc"
+    assert ei.value.requests == 3 and ei.value.age_s >= 5.0
+    eng.drain()                   # without a timeout the block retires fine
+    _assert_codes(reqs, net, np.stack([r.x for r in reqs]))
+
+
+def test_fleet_wait_timeout_names_the_stuck_lane(nets):
+    net = nets["jsc"]
+    inj = FaultInjector(FaultPlan([
+        FaultSpec("hang", at=0, scope="jsc", stall_s=5.0)]))
+    fleet = LUTFleet(block=8, faults=inj)
+    fleet.register("jsc", net, reference=make_reference(net, n=8))
+    reqs, _ = fleet.submit_many("jsc", _rows(net, 4, seed=4))
+    fleet.tick()                  # dispatched; hang skews the clock
+    with pytest.raises(DrainTimeout, match="lane 'jsc'"):
+        fleet.drain(timeout=1.0)
+    with pytest.raises(DrainTimeout, match="lane 'jsc'"):
+        fleet.pump(timeout=1.0)
+    fleet.pump()                  # unbounded wait: nothing was lost
+    _assert_codes(reqs, net, np.stack([r.x for r in reqs]))
+
+
+# ---------------------------------------------------------------------------
+# supervision: deadlines, retries, breaker, degradation
+# ---------------------------------------------------------------------------
+
+def test_deadline_abandons_and_recomputes_bit_identically(nets):
+    """An injected hang blows the per-request deadline: the block is
+    abandoned, its rows recomputed, zero lost, answers exact."""
+    net = nets["jsc"]
+    inj = FaultInjector(FaultPlan([
+        FaultSpec("hang", at=0, scope="jsc", stall_s=2.0)]))
+    fleet = LUTFleet(block=8, faults=inj,
+                     policy=ResiliencePolicy(deadline_s=0.5,
+                                             backoff_base_s=0.0))
+    fleet.register("jsc", net, reference=make_reference(net, n=8))
+    x = _rows(net, 20, seed=5)
+    reqs, _ = fleet.submit_many("jsc", x)
+    fleet.pump()
+    _assert_codes(reqs, net, x)
+    s = fleet.stats("jsc")
+    assert s.completed == 20                    # zero lost
+    assert s.deadline_hits >= 1 and s.failures >= 1 and s.retries >= 1
+    assert len(s.recovery_s) >= 1               # incident recovery stamped
+    assert s.summary()["incidents_recovered"] >= 1
+    assert max(r.attempts for r in reqs) >= 1
+    assert fleet.summary("jsc")["breaker"] == "closed"
+
+
+def test_slow_start_stall_is_absorbed_by_deadline_supervision(nets):
+    """The lane_dispatch seam: a slow-start stall on a fresh lane ages the
+    just-dispatched block past the deadline; supervision recomputes."""
+    net = nets["nid"]
+    inj = FaultInjector(FaultPlan([
+        FaultSpec("slow_start", at=0, scope="nid", stall_s=2.0)]))
+    fleet = LUTFleet(block=8, faults=inj,
+                     policy=ResiliencePolicy(deadline_s=0.5,
+                                             backoff_base_s=0.0))
+    fleet.register("nid", net, reference=make_reference(net, n=8))
+    x = _rows(net, 12, seed=6)
+    reqs, _ = fleet.submit_many("nid", x)
+    fleet.pump()
+    _assert_codes(reqs, net, x)
+    assert fleet.stats("nid").deadline_hits >= 1
+    assert inj.fired("slow_start") == 1
+
+
+def test_transient_exception_retries_with_backoff(nets):
+    net = nets["jsc"]
+    inj = FaultInjector(FaultPlan([
+        FaultSpec("exception", at=0, scope="jsc", count=2)]))
+    fleet = LUTFleet(block=8, faults=inj)     # default threshold 3: no trip
+    fleet.register("jsc", net, reference=make_reference(net, n=8))
+    x = _rows(net, 10, seed=7)
+    reqs, _ = fleet.submit_many("jsc", x)
+    fleet.pump()
+    _assert_codes(reqs, net, x)
+    s = fleet.stats("jsc")
+    assert s.failures == 2 and s.retries == 2
+    assert s.breaker_trips == 0 and s.degrades == 0
+    assert max(r.attempts for r in reqs) == 2
+    lane = fleet._lanes["jsc"]
+    assert [e.kind for e in lane.failure_log] == ["exception", "exception"]
+
+
+def test_breaker_trips_and_degrades_backend_bit_identically(nets):
+    """threshold consecutive failures trip the breaker; the lane re-plans
+    onto the fallback backend and the answers stay exact."""
+    net = nets["jsc"]
+    inj = FaultInjector(FaultPlan([
+        FaultSpec("exception", at=0, scope="jsc", count=3)]))
+    fleet = LUTFleet(block=8, faults=inj,
+                     policy=ResiliencePolicy(backoff_base_s=0.0))
+    fleet.register("jsc", net, reference=make_reference(net, n=8),
+                   backend="onehot")
+    x = _rows(net, 16, seed=8)
+    reqs, _ = fleet.submit_many("jsc", x)
+    fleet.pump()
+    _assert_codes(reqs, net, x)
+    s = fleet.stats("jsc")
+    assert s.breaker_trips == 1 and s.degrades == 1
+    lane = fleet._lanes["jsc"]
+    assert lane.degrade_log[0].summary()["backend"] == "onehot->take"
+    assert lane.engine.backend == "take"
+    summary = fleet.summary("jsc")
+    assert summary["breaker"] == "closed"
+    assert summary["degrade_history"] == [lane.degrade_log[0].summary()]
+    assert summary["incidents_recovered"] >= 1
+
+
+def test_open_breaker_quarantines_arrivals_shed_and_defer(nets):
+    """Mid-incident arrivals are rejected at the door with reason
+    "quarantined": shed for SLO-less tenants, parked for defer tenants
+    (and served once the lane recovers)."""
+    inj = FaultInjector(FaultPlan([
+        FaultSpec("exception", at=0, scope="jsc"),
+        FaultSpec("exception", at=0, scope="nid"),
+    ]))
+    fleet = LUTFleet(block=8, faults=inj,
+                     policy=ResiliencePolicy(breaker_threshold=1,
+                                             backoff_base_s=0.0,
+                                             breaker_cooldown_s=60.0))
+    fleet.register("jsc", nets["jsc"], backend="onehot",
+                   reference=make_reference(nets["jsc"], n=8))
+    fleet.register("nid", nets["nid"], backend="onehot",
+                   reference=make_reference(nets["nid"], n=8),
+                   slo=TenantSLO(policy="defer"))
+    xj, xn = _rows(nets["jsc"], 8, seed=9), _rows(nets["nid"], 6, seed=10)
+    rj, _ = fleet.submit_many("jsc", xj)
+    rn, _ = fleet.submit_many("nid", xn)
+    fleet.tick()      # both lanes fail once -> trip -> degrade -> half-open
+    for mid in ("jsc", "nid"):
+        assert fleet.stats(mid).breaker_trips == 1
+    # arrivals during the incident go through the quarantine door
+    shed_reqs, dec = fleet.submit_many("jsc", _rows(nets["jsc"], 4, seed=11))
+    assert dec.reason == "quarantined" and dec.shed == 4 and not shed_reqs
+    defer_reqs, dec = fleet.submit_many("nid", _rows(nets["nid"], 4, seed=12))
+    assert dec.reason == "quarantined" and dec.defer == 4 and not defer_reqs
+    fleet.pump()
+    _assert_codes(rj, nets["jsc"], xj)
+    _assert_codes(rn, nets["nid"], xn)
+    assert fleet.stats("jsc").shed == 4
+    assert fleet.stats("jsc").completed == 8         # shed rows stay shed
+    assert fleet.stats("nid").completed == 10        # deferred rows served
+    # recovered lane admits normally again
+    more, dec = fleet.submit_many("jsc", _rows(nets["jsc"], 2, seed=13))
+    assert dec.reason == "ok" and len(more) == 2
+    fleet.pump()
+    assert all(r.done for r in more)
+
+
+def test_device_loss_on_sole_device_falls_back_unplaced(nets):
+    """Device loss with no survivors: the lane degrades to the layered
+    fallback backend, unplaced; the dead device stays dead."""
+    net = nets["jsc"]
+    pl = backends.Placement(make_serving_mesh(1))
+    inj = FaultInjector(FaultPlan([
+        FaultSpec("device_loss", at=0, scope="jsc")]))
+    fleet = LUTFleet(block=8, faults=inj,
+                     policy=ResiliencePolicy(backoff_base_s=0.0))
+    fleet.register("jsc", net, reference=make_reference(net, n=8),
+                   backend="take", placement=pl)
+    x = _rows(net, 12, seed=14)
+    reqs, _ = fleet.submit_many("jsc", x)
+    fleet.pump()
+    _assert_codes(reqs, net, x)
+    lane = fleet._lanes["jsc"]
+    ev = lane.degrade_log[0]
+    assert ev.reason == "device_loss"
+    assert ev.from_shards == 1 and ev.to_shards == 0
+    assert lane.placement is None
+    assert len(inj.dead_devices) == 1
+    assert lane.failure_log[0].kind == "device_loss"
+    # the loss is persistent: the old placement can never dispatch again
+    with pytest.raises(DeviceLost):
+        inj.check_placement(pl)
+
+
+def test_device_loss_remeshes_survivors_4way_subprocess():
+    """4-way placed lane loses one device: the fleet re-meshes the same
+    backend over the 3 survivors (validated by elastic.plan_serving_remesh)
+    and keeps serving bit-identically."""
+    out = run_subprocess("""
+        import numpy as np, jax
+        from repro import pipeline
+        from repro.configs import paper_tasks
+        from repro.core import assemble
+        from repro.launch.mesh import make_serving_mesh
+        from repro.serve import (FaultInjector, FaultPlan, FaultSpec,
+                                 LUTFleet, ResiliencePolicy, make_reference)
+
+        cfg = paper_tasks.reduced("jsc")
+        params = assemble.init(jax.random.PRNGKey(1), cfg)
+        net = pipeline.compile_network(params, cfg)
+        inj = FaultInjector(FaultPlan(
+            [FaultSpec("device_loss", at=1, scope="m", device=2)]))
+        fleet = LUTFleet(block=16, faults=inj,
+                         policy=ResiliencePolicy(backoff_base_s=0.0))
+        fleet.register("m", net, reference=make_reference(net, n=8),
+                       backend="take", mesh=make_serving_mesh())
+        rng = np.random.default_rng(0)
+        x = rng.uniform(-1, 1, (50, net.cfg.in_features)).astype(np.float32)
+        reqs, _ = fleet.submit_many("m", x)
+        fleet.pump()
+        assert all(r.done for r in reqs)
+        np.testing.assert_array_equal(
+            np.stack([r.codes for r in reqs]),
+            np.asarray(net.predict_codes(x)))
+        lane = fleet._lanes["m"]
+        ev = lane.degrade_log[0]
+        assert ev.from_shards == 4 and ev.to_shards == 3, ev.summary()
+        assert ev.to_backend == "take"
+        assert "surviv" in ev.plan_reason or "resharding" in ev.plan_reason
+        assert lane.placement is not None
+        assert len(inj.dead_devices) == 1
+        print("REMESH-OK", ev.summary())
+    """)
+    assert "REMESH-OK" in out
+
+
+def test_exhausted_fallback_raises_loudly(nets):
+    """A lane already on the last-resort plan that keeps failing raises
+    the original error instead of degrading in circles."""
+    net = nets["jsc"]
+    inj = FaultInjector(FaultPlan([
+        FaultSpec("exception", at=0, scope="jsc", count=10)]))
+    fleet = LUTFleet(block=8, faults=inj,
+                     policy=ResiliencePolicy(breaker_threshold=1,
+                                             backoff_base_s=0.0))
+    fleet.register("jsc", net, backend="take")   # fallback == current plan
+    fleet.submit_many("jsc", _rows(net, 4, seed=15))
+    with pytest.raises(ExecutorFault):
+        fleet.pump()
+
+
+def test_circuit_breaker_state_machine():
+    br = CircuitBreaker(threshold=2, cooldown_s=1.0)
+    assert br.state(0.0) == br.CLOSED and br.allow_dispatch(0.0)
+    assert not br.record_failure(0.1)            # 1 of 2: still closed
+    assert br.record_failure(0.2)                # threshold -> trips
+    assert br.state(0.3) == br.OPEN and not br.allow_dispatch(0.3)
+    assert br.state(1.3) == br.HALF_OPEN         # cooldown decay
+    assert br.allow_dispatch(1.3)                # the probe
+    assert br.record_failure(1.4)                # failed probe re-trips
+    assert br.state(1.5) == br.OPEN
+    br.force_half_open(1.6)
+    assert br.state(1.7) == br.HALF_OPEN
+    br.record_success()
+    assert br.state(1.8) == br.CLOSED
+    assert br.consecutive_failures == 0 and br.trips == 2
+
+
+def test_resilience_policy_validation_and_backoff():
+    p = ResiliencePolicy(backoff_base_s=0.01, backoff_factor=3.0)
+    assert p.backoff_s(1) == pytest.approx(0.01)
+    assert p.backoff_s(3) == pytest.approx(0.09)
+    with pytest.raises(ValueError, match="deadline_s"):
+        ResiliencePolicy(deadline_s=0.0)
+    with pytest.raises(ValueError, match="breaker_threshold"):
+        ResiliencePolicy(breaker_threshold=0)
+    with pytest.raises(ValueError, match="backoff"):
+        ResiliencePolicy(backoff_factor=0.5)
+    with pytest.raises(ValueError, match="cooldown"):
+        ResiliencePolicy(breaker_cooldown_s=-1.0)
+
+
+# ---------------------------------------------------------------------------
+# stream-state replication + failover
+# ---------------------------------------------------------------------------
+
+def test_stream_checkpoint_roundtrips_through_bytes():
+    states = np.arange(6, dtype=np.int8).reshape(3, 2)
+    ckpt = StreamCheckpoint("m", 4, ["a", "b", "c"], states, [2, 5, 0])
+    blob = ckpt.to_bytes()
+    assert isinstance(blob, bytes)
+    back = StreamCheckpoint.from_bytes(blob)
+    assert back.model_id == "m" and back.seq == 4
+    assert back.stream_ids == ["a", "b", "c"] and back.applied == [2, 5, 0]
+    np.testing.assert_array_equal(back.states, states)
+    np.testing.assert_array_equal(back.state_for("b"), states[1])
+    assert back.state_for("nope") is None
+    assert back.applied_for("b") == 5 and back.applied_for("nope") == 0
+    with pytest.raises(ValueError, match="length mismatch"):
+        StreamCheckpoint("m", 1, ["a"], states, [1])
+
+
+def test_replication_log_tail_and_prune():
+    log = ReplicationLog()
+    log.open("s")
+    with pytest.raises(ValueError, match="already replicated"):
+        log.open("s")
+    rows = np.arange(20, dtype=np.float32).reshape(5, 4)
+    assert log.ack("s", rows[:3]) == 3
+    assert log.ack("s", rows[3]) == 4           # single [n_in] row form
+    np.testing.assert_array_equal(log.tail("s", 0), rows[:4])
+    np.testing.assert_array_equal(log.tail("s", 3), rows[3:4])
+    assert log.tail("s", 4).shape == (0, 4)
+    ckpt = StreamCheckpoint("m", 1, ["s"], np.zeros((1, 2), np.int32), [3])
+    assert log.prune(ckpt) == 3                 # bounded by the checkpoint
+    assert log.acked("s") == 4
+    np.testing.assert_array_equal(log.tail("s", 3), rows[3:4])
+    with pytest.raises(ValueError, match="stale checkpoint"):
+        log.tail("s", 2)                        # pruned past that cursor
+    log.close("s")
+    assert "s" in log.closed
+
+
+def test_stream_failover_recovers_bit_identically(cell):
+    """The tentpole failover contract: kill the primary mid-trace; the
+    standby restores every live stream from the last checkpoint + acked
+    tail and the combined per-stream codes exactly match an uninterrupted
+    run.  Zero acknowledged steps lost."""
+    _, _, comp = cell
+    xs = _seqs(3, 10, seed=20)
+    ref, _, s_fin = comp.predict_sequence(xs)
+    ref = np.asarray(ref)
+
+    primary = LUTFleet(block=8)
+    primary.register("cell", comp, block=8)
+    standby = StandbyReplica("cell", comp, block=8)
+    tenant = ReplicatedStreamTenant(primary, "cell", standby,
+                                    checkpoint_every=6)
+    for i in range(3):
+        tenant.open_stream(i)
+        tenant.submit(i, xs[i, :6])
+    primary.pump()
+    assert tenant.maybe_checkpoint() is not None
+    assert standby.checkpoints_received == 1
+    applied = {i: standby.checkpoint.applied_for(i) for i in range(3)}
+    assert applied == {0: 6, 1: 6, 2: 6}
+    for i in range(3):
+        tenant.submit(i, xs[i, 6:])             # acked + replicated tail
+    primary.tick()
+    primary.drain()     # one step past the checkpoint completes, then DEATH
+    lane = primary._stream_lane("cell")
+    primary_steps = {i: [np.asarray(r.codes) for r in
+                         lane.sessions[i].steps] for i in range(3)}
+
+    fleet2, replayed = standby.activate()
+    assert replayed == {0: 4, 1: 4, 2: 4}       # tail after the checkpoint
+    fleet2.pump()
+    for i in range(3):
+        recovered = fleet2._stream_lane("cell").sessions[i].steps
+        assert len(recovered) == 4
+        combined = np.stack(primary_steps[i][:applied[i]]
+                            + [np.asarray(r.codes) for r in recovered])
+        assert len(combined) == 10              # every acked step answered
+        np.testing.assert_array_equal(combined, ref[i],
+                                      err_msg=f"stream {i}")
+        # answers the primary delivered past the checkpoint agree with the
+        # standby's recomputation of the same steps (both match ref)
+        for t, c in enumerate(primary_steps[i][applied[i]:]):
+            np.testing.assert_array_equal(c, ref[i, applied[i] + t])
+        session = fleet2.close_stream("cell", i)
+        np.testing.assert_array_equal(
+            np.asarray(session.final_state, np.int32),
+            np.asarray(s_fin[i], np.int32), err_msg=f"stream {i}")
+
+
+def test_replication_never_logs_rejected_steps(cell):
+    """Replicate-before-accept must not leak: a step the fleet rejects
+    (closing/unknown stream) is absent from the standby's log, so failover
+    never replays an unacknowledged step."""
+    _, _, comp = cell
+    primary = LUTFleet(block=8)
+    primary.register("cell", comp, block=8)
+    standby = StandbyReplica("cell", comp, block=8)
+    tenant = ReplicatedStreamTenant(primary, "cell", standby)
+    tenant.open_stream("s")
+    tenant.submit("s", _seqs(1, 3, seed=21)[0])
+    assert standby.log.acked("s") == 3
+    tenant.close_stream("s")
+    with pytest.raises(ValueError, match="closing"):
+        tenant.submit("s", _seqs(1, 1, seed=22)[0])
+    with pytest.raises(KeyError):
+        tenant.submit("ghost", _seqs(1, 1, seed=23)[0])
+    assert standby.log.acked("s") == 3          # rejected steps not logged
+    assert standby.live_stream_ids() == []      # close replicated too
+    with pytest.raises(ValueError, match="checkpoint_every"):
+        ReplicatedStreamTenant(primary, "cell", standby, checkpoint_every=0)

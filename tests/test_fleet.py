@@ -23,7 +23,8 @@ import traffic
 from repro import pipeline
 from repro.configs import paper_tasks
 from repro.core import assemble
-from repro.serve import (AdmissionController, ExecutorCache, LUTFleet,
+from repro.serve import (AdmissionController, ExecutorCache, FaultInjector,
+                         FaultPlan, FaultSpec, LUTFleet, ResiliencePolicy,
                          TenantRegistry, TenantSLO, make_reference,
                          smoke_check)
 from repro.serve.lut_engine import LUTEngine, LUTEngineStats
@@ -228,6 +229,85 @@ def test_hot_swap_rejects_corrupted_artifact(nets, tmp_path):
     # strict mode raises instead of returning the rejection
     with pytest.raises(ValueError, match="rejected"):
         fleet.deploy("nid", bad, reference=ref, strict=True)
+
+
+def test_hot_swap_racing_quarantine_probes_new_version(nets, tmp_path):
+    """Hot swap racing an open incident: a deploy landing while the lane
+    is quarantined/mid-failover is adopted, the fresh version probes
+    immediately (no cooldown wait), and zero requests are dropped."""
+    net = nets["jsc"]
+    inj = FaultInjector(FaultPlan(
+        [FaultSpec("exception", at=0, scope="jsc")]))
+    fleet = LUTFleet(block=16, faults=inj,
+                     policy=ResiliencePolicy(breaker_threshold=1,
+                                             backoff_base_s=0.0,
+                                             breaker_cooldown_s=60.0))
+    ref = make_reference(net, n=16)
+    fleet.register("jsc", net, reference=ref, backend="onehot")
+    x = _rows(net, 24, seed=31)
+    reqs, _ = fleet.submit_many("jsc", x)
+    fleet.tick()        # injected failure -> trip -> degrade -> half-open
+    lane = fleet._lanes["jsc"]
+    assert lane.stats.breaker_trips == 1
+    assert lane.breaker.state(fleet._now()) != "closed"   # mid-incident
+
+    path = os.path.join(str(tmp_path), "v2.npz")
+    net.save(path)
+    event = fleet.deploy("jsc", path, reference=ref)
+    assert event.ok and event.to_version == 2
+    # mid-incident the half-open lane quarantines arrivals (the queued
+    # pre-incident rows are the probe) — new traffic offered now is shed
+    shed, dec = fleet.submit_many("jsc", _rows(net, 8, seed=40))
+    assert dec.accept == 0 and dec.reason == "quarantined" and not shed
+    fleet.pump()        # probe succeeds on the new version; breaker closes
+    more, dec = fleet.submit_many("jsc", _rows(net, 8, seed=32))
+    assert dec.reason == "ok" and len(more) == 8
+    fleet.pump()
+    # zero drops across the race: every pre-incident row AND every
+    # post-deploy row completes, bit-identically
+    done = reqs + more
+    assert all(r.done for r in done)
+    np.testing.assert_array_equal(
+        np.stack([r.codes for r in done]),
+        np.asarray(net.predict_codes(np.stack([r.x for r in done]))))
+    s = fleet.summary("jsc")
+    assert s["version"] == 2 and s["breaker"] == "closed"
+    assert s["completed"] == 32
+
+
+def test_corrupt_candidate_during_recovery_rolls_back(nets, tmp_path):
+    """A corrupt candidate deployed while the lane is recovering is
+    rejected by the smoke check (here corrupted in-flight by the injector's
+    registry_load seam), the rollback lands on the SwapEvent, and the
+    recovery completes on the incumbent version with zero drops."""
+    net = nets["jsc"]
+    inj = FaultInjector(FaultPlan([
+        FaultSpec("exception", at=0, scope="jsc"),
+        FaultSpec("corrupt_artifact", at=0, scope="jsc"),
+    ]))
+    fleet = LUTFleet(block=16, faults=inj,
+                     policy=ResiliencePolicy(breaker_threshold=1,
+                                             backoff_base_s=0.0))
+    ref = make_reference(net, n=16)
+    fleet.register("jsc", net, reference=ref, backend="onehot")
+    x = _rows(net, 20, seed=33)
+    reqs, _ = fleet.submit_many("jsc", x)
+    fleet.tick()        # incident opens: trip + degrade to the fallback
+
+    path = os.path.join(str(tmp_path), "v2.npz")
+    net.save(path)      # good bytes; the injector corrupts them at load
+    event = fleet.deploy("jsc", path, reference=ref)
+    assert inj.fired("corrupt_artifact") == 1
+    assert not event.ok and "mismatch" in event.reason
+    assert event.from_version == event.to_version == 1    # rollback
+    fleet.pump()
+    assert all(r.done for r in reqs)                      # zero drops
+    np.testing.assert_array_equal(
+        np.stack([r.codes for r in reqs]),
+        np.asarray(net.predict_codes(x)))
+    s = fleet.summary("jsc")
+    assert s["version"] == 1 and s["breaker"] == "closed"
+    assert s["swap_history"][-1]["ok"] is False
 
 
 def test_smoke_check_self_mode_catches_backend_divergence(nets):
